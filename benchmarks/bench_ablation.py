@@ -1,0 +1,68 @@
+"""Beyond-paper ablations: sample rate theta x partition count n_ranges, and
+single- vs composite-attribute sketches (multisketch extension)."""
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+from benchmarks.common import bench_databases, emit
+from repro.aqp.sampling import SampleCache
+from repro.core import capture_sketch, equi_depth_ranges, select_attribute
+from repro.core.multisketch import capture_composite, select_composite_gb
+from repro.core.workload import CRIMES_SPEC, generate_workload
+
+
+def run(scale: str = "quick", n_queries: int = 6):
+    db = bench_databases(scale)["crimes"]
+    queries = generate_workload(CRIMES_SPEC, db, n_queries, seed=5)
+    key = jax.random.PRNGKey(5)
+    rows = []
+
+    # --- theta sweep: estimation quality vs sampling cost ------------------
+    for theta in (0.01, 0.02, 0.05, 0.1, 0.2):
+        errs, times = [], []
+        import time
+
+        for i, q in enumerate(queries):
+            kq = jax.random.fold_in(key, i)
+            t0 = time.perf_counter()
+            sel = select_attribute("CB-OPT-GB", kq, q, db, 100, SampleCache(), theta=theta)
+            times.append(time.perf_counter() - t0)
+            if sel.attr is None:
+                continue
+            est = sel.estimates[sel.attr]
+            actual = capture_sketch(q, db, equi_depth_ranges(db["crimes"], sel.attr, 100)).size_rows
+            if actual:
+                errs.append(abs(est.est_rows - actual) / actual)
+        rows.append(("ablate-theta", theta, f"{np.mean(errs):.4f}", f"{np.mean(times)*1e3:.1f}"))
+
+    # --- n_ranges sweep: sketch granularity vs selectivity ------------------
+    for nr in (25, 100, 400, 1000):
+        sels = []
+        for q in queries:
+            sel = select_attribute("OPT", key, q, db, nr)
+            if sel.attr is None:
+                continue
+            sels.append(capture_sketch(q, db, equi_depth_ranges(db["crimes"], sel.attr, nr)).selectivity)
+        rows.append(("ablate-nranges", nr, f"{np.mean(sels):.4f}", "-"))
+
+    # --- composite vs single sketches (beyond-paper) -------------------------
+    single, comp = [], []
+    for i, q in enumerate(queries):
+        if len(q.groupby) < 2:
+            continue
+        kq = jax.random.fold_in(key, 100 + i)
+        s1 = select_attribute("CB-OPT-GB", kq, q, db, 100, SampleCache(), theta=0.1)
+        if s1.attr is None:
+            continue
+        single.append(capture_sketch(q, db, equi_depth_ranges(db["crimes"], s1.attr, 100)).selectivity)
+        best, cr, _ = select_composite_gb(kq, q, db, 100, theta=0.1)
+        comp.append(capture_composite(q, db, cr).selectivity)
+    if single:
+        rows.append(("ablate-composite", "single-CB-OPT-GB", f"{np.mean(single):.4f}", len(single)))
+        rows.append(("ablate-composite", "composite-CB-OPT-GB2", f"{np.mean(comp):.4f}", len(comp)))
+    return emit(rows, ("bench", "param", "value", "extra"))
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,39 @@
+"""Fig. 4: relative sketch-size error vs number of bootstrap resamples over
+TPC-H.  The paper's knee is at ~50 resamples; we sweep the same axis."""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import numpy as np
+
+from benchmarks.common import bench_databases, emit
+from repro.aqp.sampling import stratified_reservoir_sample
+from repro.aqp.size_estimation import EstimationConfig, estimate_size
+from repro.core import capture_sketch, equi_depth_ranges
+from repro.core.workload import TPCH_SPEC, generate_workload
+
+
+def run(scale: str = "quick", n_queries: int = 12, n_ranges: int = 100):
+    db = bench_databases(scale)["tpch"]
+    queries = generate_workload(TPCH_SPEC, db, n_queries, seed=4)
+    rows = []
+    key = jax.random.PRNGKey(4)
+    for B in (1, 5, 10, 25, 50, 100):
+        errs = []
+        for i, q in enumerate(queries):
+            kq = jax.random.fold_in(key, i)
+            samples = stratified_reservoir_sample(kq, db[q.table], q.groupby, 0.05)
+            attr = q.groupby[0]
+            ranges = equi_depth_ranges(db[q.table], attr, n_ranges)
+            cfg = EstimationConfig(n_resamples=B, use_bootstrap=B > 1)
+            est = estimate_size(kq, q, db, ranges, samples, cfg)
+            actual = capture_sketch(q, db, ranges).size_rows
+            if actual > 0:
+                errs.append(abs(est.est_rows - actual) / actual)
+        rows.append(("fig4", B, f"{np.mean(errs):.4f}", f"{np.median(errs):.4f}", len(errs)))
+    return emit(rows, ("bench", "n_resamples", "mean_rse", "median_rse", "n"))
+
+
+if __name__ == "__main__":
+    run()

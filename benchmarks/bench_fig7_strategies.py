@@ -1,0 +1,83 @@
+"""Fig. 7: per-strategy comparison over the Q-AGH workload on all datasets:
+(a) average query runtime with the chosen sketch, (b) average relative sketch
+size, (c) expected size of random strategies (uniform over their pool).
+Paper's claims to reproduce: CB-OPT ~ OPT; RAND-GB best among randoms;
+CB-OPT-GB ~ CB-OPT-REL ~ OPT at lower selection overhead."""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from benchmarks.common import bench_databases, emit, timeit
+from repro.aqp.sampling import SampleCache
+from repro.core import (
+    capture_sketch, equi_depth_ranges, execute, execute_with_sketch,
+    select_attribute,
+)
+from repro.core.sketch import actual_size
+from repro.core.strategies import candidate_pool
+from repro.core.workload import CRIMES_SPEC, PARKING_SPEC, STARS_SPEC, TPCH_SPEC, generate_workload
+
+STRATEGIES = ("RAND-ALL", "RAND-REL-ALL", "RAND-GB", "RAND-PK", "RAND-AGG",
+              "CB-OPT", "CB-OPT-REL", "CB-OPT-GB", "OPT")
+SPECS = {"crimes": CRIMES_SPEC, "tpch": TPCH_SPEC, "parking": PARKING_SPEC,
+         "stars": STARS_SPEC}
+
+
+def run(scale: str = "quick", n_queries: int = 6, n_ranges: int = 100):
+    dbs = bench_databases(scale)
+    rows = []
+    key = jax.random.PRNGKey(7)
+    for ds, spec in SPECS.items():
+        db = dbs[ds]
+        queries = generate_workload(spec, db, n_queries, seed=7)
+        ranges_cache = {}
+
+        def ranges_for(table, a):
+            if (table, a) not in ranges_cache:
+                ranges_cache[(table, a)] = equi_depth_ranges(db[table], a, n_ranges)
+            return ranges_cache[(table, a)]
+
+        for strat in STRATEGIES:
+            cache = SampleCache()
+            rel_sizes, runtimes, t_select, expected = [], [], [], []
+            for i, q in enumerate(queries):
+                kq = jax.random.fold_in(key, i)
+                t0 = time.perf_counter()
+                sel = select_attribute(
+                    strat, kq, q, db, n_ranges, cache, theta=0.05,
+                    ranges_for=lambda a, q=q: ranges_for(q.table, a),
+                )
+                t_select.append(time.perf_counter() - t0)
+                if sel.attr is None:
+                    continue
+                sk = capture_sketch(q, db, ranges_for(q.table, sel.attr))
+                rel_sizes.append(sk.selectivity)
+                t, _ = timeit(lambda sk=sk: execute_with_sketch(q, db, sk), repeats=1)
+                runtimes.append(t)
+                # expected size of the strategy's pool (Sec. 11.3.2);
+                # cap the exact-capture work for very wide pools.
+                pool = sel.candidates[:4]
+                if pool:
+                    expected.append(
+                        np.mean([
+                            actual_size(q, db, ranges_for(q.table, a)) / db[q.table].num_rows
+                            for a in pool
+                        ])
+                    )
+            if rel_sizes:
+                rows.append((
+                    "fig7", ds, strat,
+                    f"{np.mean(rel_sizes):.4f}",
+                    f"{np.mean(expected):.4f}" if expected else "-",
+                    f"{np.mean(runtimes)*1e3:.1f}",
+                    f"{np.mean(t_select)*1e3:.1f}",
+                ))
+    return emit(rows, ("bench", "dataset", "strategy", "rel_sketch_size",
+                       "expected_size", "query_ms", "select_ms"))
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,42 @@
+"""Fig. 9: cumulative end-to-end workload runtime per strategy, starting from
+an empty sketch index (sampling + estimation + capture overhead up front,
+reuse pays it back).  Workloads mix repeated templates so the sketch index
+gets hits, as in the paper's setup."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import bench_databases, emit
+from repro.core.engine import PBDSEngine
+from repro.core.workload import STARS_SPEC, TPCH_SPEC, generate_workload
+
+STRATEGIES = ("NO-PS", "RAND-PK", "RAND-GB", "CB-OPT-GB")
+
+
+def run(scale: str = "quick", n_unique: int = 8, n_repeat: int = 5):
+    rows = []
+    for ds, spec in (("tpch", TPCH_SPEC), ("stars", STARS_SPEC)):
+        db = bench_databases(scale)[ds]
+        base = generate_workload(spec, db, n_unique, seed=9)
+        rng = np.random.default_rng(9)
+        workload = [base[i] for i in rng.integers(0, len(base), n_unique * n_repeat)]
+        for strat in STRATEGIES:
+            eng = PBDSEngine(db, strategy=strat, n_ranges=100, theta=0.05, seed=9)
+            cum = 0.0
+            marks = []
+            for i, q in enumerate(workload):
+                t0 = time.perf_counter()
+                eng.run(q)
+                cum += time.perf_counter() - t0
+                if (i + 1) % 10 == 0:
+                    marks.append(round(cum, 3))
+            rows.append(("fig9", ds, strat, f"{cum:.3f}",
+                         eng.index.hits, eng.index.misses, " ".join(map(str, marks))))
+    return emit(rows, ("bench", "dataset", "strategy", "cum_s", "idx_hits",
+                       "idx_misses", "cum_marks_every10"))
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,41 @@
+"""Shared benchmark scaffolding: datasets at bench scale, timing, CSV out."""
+from __future__ import annotations
+
+import time
+from typing import Callable, Dict, Tuple
+
+import jax
+import numpy as np
+
+from repro.core.datasets import make_crimes, make_parking, make_stars, make_tpch
+from repro.core.table import Database
+
+ROWS = {"quick": 120_000, "full": 1_000_000}
+
+
+def bench_databases(scale: str = "quick") -> Dict[str, Database]:
+    n = ROWS[scale]
+    return {
+        "crimes": Database({"crimes": make_crimes(n)}),
+        "tpch": make_tpch(n),
+        "parking": Database({"parking": make_parking(n)}),
+        "stars": Database({"stars": make_stars(n)}),
+    }
+
+
+def timeit(fn: Callable, repeats: int = 3) -> Tuple[float, object]:
+    best = float("inf")
+    out = None
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        out = fn()
+        jax.block_until_ready(out) if hasattr(out, "block_until_ready") else None
+        best = min(best, time.perf_counter() - t0)
+    return best, out
+
+
+def emit(rows, header):
+    print(",".join(header))
+    for r in rows:
+        print(",".join(str(x) for x in r))
+    return rows

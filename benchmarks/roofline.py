@@ -1,0 +1,137 @@
+"""§Roofline: derive the three roofline terms per (arch x shape x mesh) cell
+from the dry-run artifacts in dryrun_results.json.
+
+  compute term    = HLO_FLOPs / (chips x 197e12 FLOP/s bf16)
+  memory term     = HLO_bytes / (chips x 819e9 B/s HBM)
+  collective term = collective_bytes / (chips x 50e9 B/s ICI link)
+
+The dry-run records *per-device* numbers (post-SPMD HLO with while-loop trip
+multipliers), so terms divide by per-chip peaks directly.  The memory term
+uses the per-device HBM traffic proxy: argument bytes (weights/opt state read
++ written once) + 2x activation temp bytes per step.
+
+MODEL_FLOPS = 6*N*D for training (N = params, D = tokens/step),
+              2*N_active*D for inference (+ attention KV terms for decode).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+from typing import Dict, Optional
+
+PEAK_FLOPS = 197e12  # bf16 / chip
+HBM_BW = 819e9  # B/s / chip
+ICI_BW = 50e9  # B/s / link
+
+HERE = os.path.dirname(__file__)
+RESULTS = os.path.join(HERE, "dryrun_results.json")
+
+
+def model_flops(res: Dict, arch: str, shape: str) -> float:
+    from repro.configs import get_config
+    from repro.models.config import SHAPES
+
+    cfg = get_config(arch)
+    sh = SHAPES[shape]
+    n_active = res.get("n_params_active") or cfg.param_count(active_only=True)
+    n_total = res.get("n_params") or cfg.param_count()
+    # enc-dec splits the sequence budget: each half of the params only sees
+    # half the positions, so the effective token count is seq/2.
+    seq = sh.seq_len // 2 if cfg.is_encdec else sh.seq_len
+    if sh.kind == "train":
+        tokens = seq * sh.global_batch
+        return 6.0 * n_active * tokens
+    if sh.kind == "prefill":
+        tokens = seq * sh.global_batch
+        return 2.0 * n_active * tokens
+    # decode: one token per sequence + attention against the KV cache
+    tokens = sh.global_batch
+    attn_kinds = [m for m, _ in cfg.all_blocks if m in ("attn", "swa")]
+    kv_flops = 0.0
+    for m in attn_kinds:
+        ctx = min(sh.seq_len, cfg.sliding_window) if m == "swa" and cfg.sliding_window else sh.seq_len
+        kv_flops += 4.0 * cfg.n_heads * cfg.hd * ctx * tokens
+    return 2.0 * n_active * tokens + kv_flops
+
+
+def roofline_row(key: str, res: Dict) -> Optional[Dict]:
+    if res.get("status") != "ok":
+        return None
+    arch, shape, mesh = res["arch"], res["shape"], res["mesh"]
+    f_dev = res["flops_per_device"]
+    c_dev = res["collective_bytes_per_device"]
+    mem = res["memory"]
+    # HBM traffic proxy: weights+opt read & written + activations twice.
+    hbm_dev = mem["argument_bytes"] * 2 + mem["temp_bytes"] * 2
+
+    t_compute = f_dev / PEAK_FLOPS
+    t_memory = hbm_dev / HBM_BW
+    t_collective = c_dev / ICI_BW
+    dominant = max(
+        ("compute", t_compute), ("memory", t_memory), ("collective", t_collective),
+        key=lambda kv: kv[1],
+    )[0]
+    mf = model_flops(res, arch, shape)
+    f_total = f_dev * res["n_devices"]
+    useful = mf / f_total if f_total else 0.0
+    # Roofline fraction: useful model flops per second achievable given the
+    # *bound* (the dominant term), vs the all-chips peak.
+    step_time = max(t_compute, t_memory, t_collective)
+    mfu = mf / (step_time * res["n_devices"] * PEAK_FLOPS) if step_time > 0 else 0.0
+    return {
+        "arch": arch, "shape": shape, "mesh": mesh, "tag": res.get("tag", "baseline"),
+        "t_compute_s": t_compute, "t_memory_s": t_memory, "t_collective_s": t_collective,
+        "dominant": dominant,
+        "model_flops": mf, "hlo_flops_total": f_total,
+        "useful_ratio": useful,
+        "roofline_fraction": mfu,
+        "bytes_per_device_gib": res.get("bytes_per_device", 0) / 2**30,
+        "fits_16g": res.get("bytes_per_device", 0) < 16 * 2**30,
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--results", default=RESULTS)
+    ap.add_argument("--mesh", default=None)
+    ap.add_argument("--markdown", action="store_true")
+    args = ap.parse_args()
+    with open(args.results) as f:
+        allres = json.load(f)
+    rows = []
+    for key, res in sorted(allres.items()):
+        if args.mesh and res.get("mesh") != args.mesh:
+            continue
+        if res.get("status") == "skipped":
+            rows.append({"arch": res["arch"], "shape": res["shape"], "mesh": res["mesh"],
+                         "tag": res.get("tag", ""), "skipped": res["reason"]})
+            continue
+        r = roofline_row(key, res)
+        if r:
+            rows.append(r)
+    if args.markdown:
+        print("| arch | shape | mesh | tag | compute s | memory s | collective s | dominant | useful | roofline frac | GiB/dev | fits |")
+        print("|---|---|---|---|---|---|---|---|---|---|---|---|")
+        for r in rows:
+            if "skipped" in r:
+                print(f"| {r['arch']} | {r['shape']} | {r['mesh']} | {r['tag']} | — | — | — | skipped: {r['skipped'][:40]} | | | | |")
+            else:
+                print(f"| {r['arch']} | {r['shape']} | {r['mesh']} | {r['tag']} | "
+                      f"{r['t_compute_s']:.4f} | {r['t_memory_s']:.4f} | {r['t_collective_s']:.4f} | "
+                      f"**{r['dominant']}** | {r['useful_ratio']:.2f} | {r['roofline_fraction']:.3f} | "
+                      f"{r['bytes_per_device_gib']:.2f} | {'Y' if r['fits_16g'] else 'N'} |")
+    else:
+        hdr = ("arch", "shape", "mesh", "tag", "t_compute_s", "t_memory_s",
+               "t_collective_s", "dominant", "useful_ratio", "roofline_fraction",
+               "bytes_per_device_gib")
+        print(",".join(hdr))
+        for r in rows:
+            if "skipped" in r:
+                print(f"{r['arch']},{r['shape']},{r['mesh']},{r['tag']},skipped:{r['skipped']}")
+            else:
+                print(",".join(str(round(r[h], 6)) if isinstance(r[h], float) else str(r[h]) for h in hdr))
+
+
+if __name__ == "__main__":
+    main()

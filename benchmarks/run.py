@@ -1,0 +1,59 @@
+"""Benchmark harness: one entry per paper table/figure.
+
+  PYTHONPATH=src python -m benchmarks.run [--scale quick|full] [--only NAME]
+
+Emits CSV per benchmark.  The dry-run/roofline artifacts are produced by
+``repro.launch.dryrun`` + ``benchmarks.roofline`` (they need the 512-device
+XLA flag and hence their own process).
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--scale", choices=["quick", "full"], default="quick")
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+
+    from benchmarks import (
+        bench_ablation,
+        bench_fig4_bootstrap,
+        bench_fig7_strategies,
+        bench_fig8_accuracy,
+        bench_fig9_endtoend,
+        bench_table1,
+    )
+
+    benches = {
+        "table1": bench_table1.run,
+        "fig4": bench_fig4_bootstrap.run,
+        "fig7": bench_fig7_strategies.run,
+        "fig8": bench_fig8_accuracy.run,
+        "fig9": bench_fig9_endtoend.run,
+        "ablation": bench_ablation.run,
+    }
+    failed = []
+    for name, fn in benches.items():
+        if args.only and name != args.only:
+            continue
+        print(f"# === {name} (scale={args.scale}) ===", flush=True)
+        t0 = time.time()
+        try:
+            fn(scale=args.scale)
+            print(f"# {name}: {time.time()-t0:.1f}s", flush=True)
+        except Exception:  # noqa: BLE001
+            failed.append(name)
+            traceback.print_exc()
+    if failed:
+        print(f"# FAILED: {failed}")
+        sys.exit(1)
+    print("# all benchmarks complete")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,12 @@
+"""Example: batched serving with sketch-filtered admission + KV-cache decode.
+
+  PYTHONPATH=src python examples/serve_batch.py
+"""
+import subprocess
+import sys
+
+subprocess.run(
+    [sys.executable, "-m", "repro.launch.serve", "--arch", "gemma3-27b",
+     "--requests", "8", "--prompt-len", "48", "--gen", "12"],
+    check=True,
+)

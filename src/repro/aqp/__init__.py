@@ -1,0 +1,1 @@
+"""Approximate query processing for sketch-size estimation (Secs. 7 & 8)."""

@@ -1,0 +1,120 @@
+"""Haas'97 estimators + CLT confidence intervals (Sec. 8.2, Eqs. 1–7).
+
+Per-group unbiased estimators for SUM/COUNT/AVG with the paper's scaling
+rules (Def. 7): for a group g with #g rows in R and #s_g sampled rows,
+
+  SUM:   #g * T_n(u·v)          COUNT: #g * T_n(u)         AVG: T_n(uv)/T_n(u)
+
+where u(t) is the WHERE-predicate indicator and v(t) the aggregated value.
+Variances follow Eqs. (5)–(7); half-widths are eps = z_alpha * sigma / sqrt(n).
+Everything is computed for *all groups at once* with device segment ops.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Array = jax.Array
+
+Z_95 = 1.959964  # (alpha+1)/2 quantile for alpha = 0.95
+Z_90 = 1.644854
+
+
+@dataclasses.dataclass(frozen=True)
+class GroupEstimates:
+    """Per-group estimate + CI, plus the ingredients for Def. 9."""
+
+    fn: str
+    estimate: np.ndarray  # shape (n_groups,)
+    sigma: np.ndarray  # std of the *estimate* (already scaled), (n_groups,)
+    half_width: np.ndarray  # CI half width eps_n, (n_groups,)
+    n_samples: np.ndarray  # #s_g, (n_groups,)
+
+
+def _seg(vals: Array, gid: Array, n: int) -> Array:
+    return jax.ops.segment_sum(vals, gid, num_segments=n)
+
+
+def group_estimates(
+    fn: str,
+    values: Optional[Array],  # v(t) per sampled row (None for COUNT)
+    pred: Array,  # u(t) per sampled row (bool)
+    gid: Array,  # dense group id per sampled row
+    n_groups: int,
+    group_sizes: np.ndarray,  # #g over the full table
+    z: float = Z_95,
+) -> GroupEstimates:
+    gid = jnp.asarray(gid)
+    u = jnp.asarray(pred).astype(jnp.float32)
+    ns = _seg(jnp.ones_like(u), gid, n_groups)  # #s_g
+    ns_safe = jnp.maximum(ns, 1.0)
+    sizes = jnp.asarray(group_sizes).astype(jnp.float32)
+
+    if fn == "count":
+        uv = u
+    else:
+        uv = u * jnp.asarray(values).astype(jnp.float32)
+
+    mean_uv = _seg(uv, gid, n_groups) / ns_safe  # T_n(uv)
+    # T_{n,2}(uv): sample variance of uv within the group.
+    var_uv = _seg((uv - mean_uv[gid]) ** 2, gid, n_groups) / jnp.maximum(ns - 1.0, 1.0)
+
+    if fn in ("sum", "count"):
+        est = sizes * mean_uv
+        sigma_mean = jnp.sqrt(var_uv / ns_safe)  # std of T_n(uv)
+        sigma = sizes * sigma_mean
+    elif fn == "avg":
+        mean_u = _seg(u, gid, n_groups) / ns_safe
+        var_u = _seg((u - mean_u[gid]) ** 2, gid, n_groups) / jnp.maximum(ns - 1.0, 1.0)
+        cov = _seg((uv - mean_uv[gid]) * (u - mean_u[gid]), gid, n_groups) / jnp.maximum(
+            ns - 1.0, 1.0
+        )  # T_{n,1,1}(uv, u)
+        mean_u_safe = jnp.maximum(mean_u, 1e-12)
+        r = mean_uv / mean_u_safe  # R_{n,2}
+        est = r
+        var_ratio = (var_uv - 2.0 * r * cov + r * r * var_u) / (mean_u_safe**2)
+        sigma = jnp.sqrt(jnp.maximum(var_ratio, 0.0) / ns_safe)
+    else:
+        raise ValueError(f"unknown aggregate {fn!r}")
+
+    eps = z * sigma
+    return GroupEstimates(
+        fn=fn,
+        estimate=np.asarray(est),
+        sigma=np.asarray(sigma),
+        half_width=np.asarray(eps),
+        n_samples=np.asarray(ns).astype(np.int64),
+    )
+
+
+def norm_cdf(x: np.ndarray) -> np.ndarray:
+    """Standard normal CDF via erf (no scipy dependency)."""
+    x = jnp.asarray(x, dtype=jnp.float32)
+    return np.asarray(0.5 * (1.0 + jax.scipy.special.erf(x / np.sqrt(2.0)))).astype(np.float64)
+
+
+def pass_probability(
+    est: GroupEstimates, op: str, threshold: float, floor: float = 1e-6
+) -> np.ndarray:
+    """P(group passes HAVING) under the CLT normal approximation (Sec. 8.2).
+
+    lambda = Phi((est - tau)/sigma) for '>' style predicates; groups with
+    sigma == 0 (fully sampled strata) degenerate to the indicator.
+    """
+    sigma = np.maximum(est.sigma, 1e-30)
+    zscores = (est.estimate - threshold) / sigma
+    p_gt = norm_cdf(zscores)
+    exact = est.sigma <= 1e-30
+    if op in (">", ">="):
+        p = np.where(exact, (est.estimate > threshold) if op == ">" else (est.estimate >= threshold), p_gt)
+    elif op in ("<", "<="):
+        p = np.where(exact, (est.estimate < threshold) if op == "<" else (est.estimate <= threshold), 1.0 - p_gt)
+    elif op == "=":
+        p = np.where(np.abs(est.estimate - threshold) <= est.half_width, 1.0, floor)
+    else:
+        raise ValueError(op)
+    return np.clip(p.astype(np.float64), floor, 1.0 - 1e-12)

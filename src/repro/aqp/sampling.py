@@ -1,0 +1,145 @@
+"""Stratified reservoir sampling (Sec. 7.1), TPU-adapted.
+
+Classic reservoir sampling is inherently sequential (row-at-a-time SPI loop in
+the paper's Postgres implementation).  We use the Efraimidis–Spirakis
+equivalence — keeping the k rows with the largest random keys draws a uniform
+k-reservoir — which vectorizes to a sort + segmented rank, and stratify by
+giving every group its own reservoir of size ``max(min_per_group,
+floor(theta * #g))``.  When the number of groups exceeds the sample budget the
+paper falls back to a plain uniform reservoir; so do we.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class SampleSet:
+    """A stratified sample with the catalog info estimators need."""
+
+    table: str
+    groupby: Tuple[str, ...]
+    theta: float
+    indices: np.ndarray  # row ids into the base table, shape (m,)
+    sample_gid: np.ndarray  # dense group id per sampled row, shape (m,)
+    n_groups: int
+    group_sizes: np.ndarray  # #g for every group, shape (n_groups,)
+    sample_sizes: np.ndarray  # #s_g for every group, shape (n_groups,)
+    group_values: Dict[str, np.ndarray]  # group key values, per group
+    stratified: bool
+
+    @property
+    def num_samples(self) -> int:
+        return int(self.indices.shape[0])
+
+    def reusable_for(self, table: str, groupby: Tuple[str, ...]) -> bool:
+        """Sec. 7.1: samples stratified on the same group-by are reusable."""
+        return self.table == table and tuple(self.groupby) == tuple(groupby)
+
+
+def stratified_reservoir_sample(
+    key: jax.Array,
+    table: "ColumnTable",
+    groupby: Tuple[str, ...],
+    theta: float,
+    min_per_group: int = 1,
+) -> SampleSet:
+    """Per-group reservoirs of size max(min_per_group, floor(theta * #g))."""
+    from repro.core.table import encode_groups
+
+    n = table.num_rows
+    gid, n_groups, group_values = encode_groups(table, groupby)
+    stratified = bool(groupby) and n_groups <= max(1, int(theta * n))
+    if not stratified:
+        return uniform_reservoir_sample(key, table, groupby, theta, gid, n_groups, group_values)
+
+    u = np.asarray(jax.random.uniform(key, (n,), dtype=jnp.float32))
+    # Sort by (group, descending key): the first k_g rows of each segment are
+    # a uniform k_g-reservoir of that group.
+    order = np.lexsort((-u, gid))
+    gid_sorted = gid[order]
+    group_sizes = np.bincount(gid, minlength=n_groups)
+    starts = np.concatenate([[0], np.cumsum(group_sizes)[:-1]])
+    rank = np.arange(n) - starts[gid_sorted]
+    k_g = np.maximum(min_per_group, (theta * group_sizes).astype(np.int64))
+    k_g = np.minimum(k_g, group_sizes)
+    keep = rank < k_g[gid_sorted]
+    idx = order[keep]
+    return SampleSet(
+        table=table.name,
+        groupby=tuple(groupby),
+        theta=theta,
+        indices=idx,
+        sample_gid=gid[idx],
+        n_groups=n_groups,
+        group_sizes=group_sizes,
+        sample_sizes=np.bincount(gid[idx], minlength=n_groups),
+        group_values=group_values,
+        stratified=True,
+    )
+
+
+def uniform_reservoir_sample(
+    key: jax.Array,
+    table: "ColumnTable",
+    groupby: Tuple[str, ...],
+    theta: float,
+    gid: Optional[np.ndarray] = None,
+    n_groups: Optional[int] = None,
+    group_values: Optional[Dict[str, np.ndarray]] = None,
+) -> SampleSet:
+    """Plain k-reservoir over the whole table (no-group-by / too-many-groups)."""
+    from repro.core.table import encode_groups
+
+    n = table.num_rows
+    if gid is None:
+        gid, n_groups, group_values = encode_groups(table, groupby)
+    k = max(1, int(theta * n))
+    u = np.asarray(jax.random.uniform(key, (n,), dtype=jnp.float32))
+    idx = np.argpartition(-u, k - 1)[:k] if k < n else np.arange(n)
+    idx = np.sort(idx)
+    return SampleSet(
+        table=table.name,
+        groupby=tuple(groupby),
+        theta=theta,
+        indices=idx,
+        sample_gid=gid[idx],
+        n_groups=n_groups,
+        group_sizes=np.bincount(gid, minlength=n_groups),
+        sample_sizes=np.bincount(gid[idx], minlength=n_groups),
+        group_values=group_values,
+        stratified=False,
+    )
+
+
+class SampleCache:
+    """Sec. 7.1 reuse: cache stratified samples keyed by (table, group-by)."""
+
+    def __init__(self):
+        self._cache: Dict[Tuple[str, Tuple[str, ...], float], SampleSet] = {}
+        self.hits = 0
+        self.misses = 0
+
+    def get_or_create(
+        self,
+        key: jax.Array,
+        table: "ColumnTable",
+        groupby: Tuple[str, ...],
+        theta: float,
+    ) -> SampleSet:
+        ck = (table.name, tuple(groupby), theta)
+        if ck in self._cache:
+            self.hits += 1
+            return self._cache[ck]
+        self.misses += 1
+        s = stratified_reservoir_sample(key, table, groupby, theta)
+        self._cache[ck] = s
+        return s

@@ -1,0 +1,225 @@
+"""Sketch-size estimation — Algorithms 1 & 2 and Def. 9 of the paper.
+
+Pipeline (Fig. 3):
+  stratified sample (cached)  ->  AQR: per-group aggregate estimates
+  (wander join when the template joins)  ->  HAVING on estimates -> G'
+  ->  fragment incidence of G' under the candidate's range partition
+  ->  size  = sum of #R_r over satisfied ranges        (Alg. 2)
+      E[size], Frechet lo/hi via pass probabilities    (Def. 9)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.aqp.bootstrap import BootstrapStats, bootstrap_group_means
+from repro.aqp.estimators import GroupEstimates, group_estimates, pass_probability
+from repro.aqp.sampling import SampleSet
+from repro.aqp.wander_join import JoinIndex, join_sample_values
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class SizeEstimate:
+    attr: str
+    est_rows: float  # point estimate of |R_P| (Alg. 2)
+    est_selectivity: float
+    expected_rows: float  # E[size] under Def. 9 (independent groups)
+    lo_rows: float  # Frechet lower bound
+    hi_rows: float  # Frechet upper bound
+    est_bits: np.ndarray  # which ranges the estimate marks satisfied
+    n_satisfied_groups: int
+
+
+@dataclasses.dataclass(frozen=True)
+class EstimationConfig:
+    n_resamples: int = 50
+    z: float = 1.959964  # 95% CI
+    incidence: str = "sample"  # 'sample' | 'full' (Def. 8's f(G', D))
+    use_bootstrap: bool = True
+
+
+def approximate_query_result(
+    key: jax.Array,
+    q: "Query",
+    db: "Database",
+    samples: SampleSet,
+    cfg: EstimationConfig = EstimationConfig(),
+    join_index: Optional[JoinIndex] = None,
+) -> Tuple[GroupEstimates, np.ndarray]:
+    """Algorithm 1 (AQR): per-group estimates + satisfied-group mask G'."""
+    fact = db[q.table]
+    sample_rows = fact.gather(jnp.asarray(samples.indices))
+    kb, kw = jax.random.split(key)
+
+    if q.join is not None:
+        if join_index is None:
+            join_index = JoinIndex.build(db[q.join.right], q.join.right_key)
+        v, u = join_sample_values(
+            kw, join_index, db[q.join.right], sample_rows, q.join, q.agg.attr, q.where
+        )
+        # Wander-join contributions already fold the fan-out; the group scaler
+        # #g/#s_g is applied by the Haas estimator below with fn='sum'.
+        fn = "sum" if q.agg.fn != "avg" else "avg"
+        values = jnp.asarray(v.astype(np.float32))
+        pred = jnp.asarray(u)
+    else:
+        fn = q.agg.fn
+        if fn == "count":
+            values = None
+        else:
+            values = sample_rows[q.agg.attr]
+        pred = (
+            q.where.mask(sample_rows)
+            if q.where is not None
+            else jnp.ones(samples.num_samples, dtype=bool)
+        )
+
+    est = group_estimates(
+        fn,
+        values,
+        pred,
+        samples.sample_gid,
+        samples.n_groups,
+        samples.group_sizes,
+        z=cfg.z,
+    )
+
+    if cfg.use_bootstrap and samples.stratified:
+        # Bootstrap the per-group mean statistic; fold its spread into sigma
+        # (max of CLT and bootstrap spreads -> conservative CI, Sec. 7.2).
+        uv = np.asarray(pred, dtype=np.float32)
+        if values is not None:
+            uv = uv * np.asarray(values, dtype=np.float32)
+        bs = bootstrap_group_means(kb, uv, samples.sample_gid, samples.n_groups, cfg.n_resamples)
+        if fn in ("sum", "count"):
+            scale = samples.group_sizes.astype(np.float64)
+            boot_est = scale * bs.mean
+            boot_sigma = scale * bs.std
+        else:
+            boot_est, boot_sigma = est.estimate, est.sigma  # AVG: keep CLT form
+        est = GroupEstimates(
+            fn=est.fn,
+            estimate=np.where(samples.sample_sizes > 1, boot_est, est.estimate),
+            sigma=np.maximum(est.sigma, boot_sigma),
+            half_width=cfg.z * np.maximum(est.sigma, boot_sigma),
+            n_samples=est.n_samples,
+        )
+
+    if q.having is not None:
+        from repro.core.queries import _OPS
+
+        satisfied = np.asarray(_OPS[q.having.op](est.estimate, q.having.value))
+    else:
+        satisfied = np.ones(samples.n_groups, dtype=bool)
+    # Groups never sampled under the predicate contribute nothing.
+    satisfied &= samples.sample_sizes > 0
+    return est, satisfied
+
+
+def _sample_incidence(
+    q: "Query",
+    db: "Database",
+    samples: SampleSet,
+    ranges: "RangeSet",
+    satisfied: np.ndarray,
+) -> Tuple[np.ndarray, np.ndarray]:
+    """(frag_id, gid) incidence pairs from the *sample* rows of G'."""
+    fact = db[q.table]
+    if ranges.attr in samples.groupby:
+        # CB-OPT-GB fast path: the group key pins the fragment — exact.
+        gvals = samples.group_values[ranges.attr]
+        frag_of_group = np.asarray(ranges.bucketize(jnp.asarray(gvals)))
+        gids = np.nonzero(satisfied)[0]
+        return frag_of_group[gids], gids
+    row_sat = satisfied[samples.sample_gid]
+    rows = samples.indices[row_sat]
+    gids = samples.sample_gid[row_sat]
+    frag = np.asarray(ranges.bucketize(fact[ranges.attr][jnp.asarray(rows)]))
+    pairs = np.unique(np.stack([frag, gids], axis=1), axis=0)
+    return pairs[:, 0], pairs[:, 1]
+
+
+def _full_incidence(
+    q: "Query",
+    db: "Database",
+    samples: SampleSet,
+    ranges: "RangeSet",
+    satisfied: np.ndarray,
+) -> Tuple[np.ndarray, np.ndarray]:
+    """Def. 8's f(G', D): scan the full table for rows of satisfied groups."""
+    from repro.core.table import encode_groups
+
+    fact = db[q.table]
+    gid, _, _ = encode_groups(fact, samples.groupby)
+    row_sat = satisfied[gid]
+    frag = np.asarray(ranges.bucketize(fact[ranges.attr]))[row_sat]
+    gids = gid[row_sat]
+    pairs = np.unique(np.stack([frag, gids], axis=1), axis=0)
+    return pairs[:, 0], pairs[:, 1]
+
+
+def estimate_size(
+    key: jax.Array,
+    q: "Query",
+    db: "Database",
+    ranges: "RangeSet",
+    samples: SampleSet,
+    cfg: EstimationConfig = EstimationConfig(),
+    aqr: Optional[Tuple[GroupEstimates, np.ndarray]] = None,
+) -> SizeEstimate:
+    """Algorithm 2 + Def. 9 for candidate attribute ``ranges.attr``.
+
+    ``aqr`` lets callers share one AQR pass across all candidate attributes
+    (the estimates do not depend on the candidate — only incidence does).
+    """
+    from repro.core.ranges import fragment_sizes
+
+    est, satisfied = aqr if aqr is not None else approximate_query_result(key, q, db, samples, cfg)
+
+    if cfg.incidence == "full":
+        frag, gids = _full_incidence(q, db, samples, ranges, satisfied)
+    else:
+        frag, gids = _sample_incidence(q, db, samples, ranges, satisfied)
+
+    n_r = ranges.n_ranges
+    sizes = np.asarray(fragment_sizes(db[q.table], ranges)).astype(np.float64)
+
+    bits = np.zeros(n_r, dtype=bool)
+    bits[frag] = True
+    est_rows = float(sizes[bits].sum())
+
+    # Def. 9: P(r in P) = 1 - prod_{g in frag} (1 - p_g)   (independent case)
+    # with Frechet bounds max_g p_g <= P <= min(1, sum_g p_g).
+    p_g = pass_probability(est, q.having.op if q.having else ">", q.having.value if q.having else -np.inf)
+    if q.having is None:
+        p_g = np.ones_like(p_g)
+    log1m = np.log1p(-np.minimum(p_g[gids], 1 - 1e-12))
+    sum_log = np.zeros(n_r)
+    np.add.at(sum_log, frag, log1m)
+    p_frag = np.where(bits, 1.0 - np.exp(sum_log), 0.0)
+    max_p = np.zeros(n_r)
+    np.maximum.at(max_p, frag, p_g[gids])
+    sum_p = np.zeros(n_r)
+    np.add.at(sum_p, frag, p_g[gids])
+
+    expected = float((sizes * p_frag).sum())
+    lo = float((sizes * max_p).sum())
+    hi = float((sizes * np.minimum(sum_p, 1.0)).sum())
+
+    total = max(db[q.table].num_rows, 1)
+    return SizeEstimate(
+        attr=ranges.attr,
+        est_rows=est_rows,
+        est_selectivity=est_rows / total,
+        expected_rows=expected,
+        lo_rows=lo,
+        hi_rows=hi,
+        est_bits=bits,
+        n_satisfied_groups=int(satisfied.sum()),
+    )

@@ -1,0 +1,96 @@
+"""Wander join (Li et al., SIGMOD'16) adapted to TPU idiom (Sec. 8, Alg. 1).
+
+The original walks B+-tree index entries row-at-a-time.  The TPU-native
+version keeps the join "index" as a *sorted key column*; one walk step for a
+whole batch of sampled fact rows is a vectorized ``searchsorted`` pair giving
+each row its partner range [lo, hi), followed by a PRNG-uniform pick inside
+the range.  Each sampled row's unbiased contribution to a join-SUM is
+``v * (hi - lo)`` (value of the picked partner x its fan-out), exactly the
+wander-join estimator with the walk order (fact -> dim).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class JoinIndex:
+    """Sorted-key 'index' over the dimension table (built once, cached)."""
+
+    right: str
+    right_key: str
+    sorted_keys: np.ndarray
+    order: np.ndarray  # position -> original right row id
+
+    @classmethod
+    def build(cls, right: "ColumnTable", right_key: str) -> "JoinIndex":
+        rk = np.asarray(right[right_key])
+        order = np.argsort(rk, kind="stable")
+        return cls(right.name, right_key, rk[order], order)
+
+
+def walk(
+    key: jax.Array,
+    index: JoinIndex,
+    fact_keys: np.ndarray,
+) -> Tuple[np.ndarray, np.ndarray]:
+    """One wander-join step for every sampled fact row.
+
+    Returns ``(right_row_id, fanout)``; rows with no partner get fanout 0 and
+    right_row_id -1.
+    """
+    lo = np.searchsorted(index.sorted_keys, fact_keys, side="left")
+    hi = np.searchsorted(index.sorted_keys, fact_keys, side="right")
+    fanout = hi - lo
+    m = fact_keys.shape[0]
+    u = np.asarray(jax.random.uniform(key, (m,), dtype=jnp.float32))
+    pick = lo + np.minimum((u * np.maximum(fanout, 1)).astype(np.int64), np.maximum(fanout - 1, 0))
+    right_rows = np.where(fanout > 0, index.order[np.minimum(pick, len(index.order) - 1)], -1)
+    return right_rows, fanout
+
+
+def join_sample_values(
+    key: jax.Array,
+    index: JoinIndex,
+    right: "ColumnTable",
+    fact_sample: "ColumnTable",  # the sampled fact rows (gathered)
+    join: "JoinSpec",
+    agg_attr: Optional[str],
+    where: Optional["Predicate"],
+) -> Tuple[np.ndarray, np.ndarray]:
+    """Per-sampled-row (value, predicate) pairs for the join estimators.
+
+    value v(t) is the wander-join contribution (0 when dangling); pred u(t)
+    folds the WHERE predicate evaluated on the joined row.
+    """
+    fact_keys = np.asarray(fact_sample[join.left_key])
+    right_rows, fanout = walk(key, index, fact_keys)
+    has_partner = fanout > 0
+
+    if agg_attr is None:  # COUNT(*) over the join: contribution = fan-out
+        v = fanout.astype(np.float64)
+    elif fact_sample.has(agg_attr):
+        v = np.asarray(fact_sample[agg_attr]).astype(np.float64) * fanout
+    else:  # aggregate over a dimension attribute: value of the picked partner
+        rv = np.asarray(right[agg_attr])
+        v = np.where(has_partner, rv[np.maximum(right_rows, 0)], 0.0) * fanout
+
+    u = has_partner.copy()
+    if where is not None:
+        if fact_sample.has(where.attr):
+            u &= np.asarray(where.mask(fact_sample))
+        else:
+            rcol = np.asarray(right[where.attr])
+            joined_vals = np.where(has_partner, rcol[np.maximum(right_rows, 0)], 0.0)
+            from repro.core.queries import _OPS
+
+            u &= np.asarray(_OPS[where.op](joined_vals, where.value)) & has_partner
+    return v, u

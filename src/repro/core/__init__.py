@@ -1,0 +1,46 @@
+# The paper's primary contribution: provenance sketches + the cost-based
+# selection machinery, implemented as a TPU-native columnar engine.
+from repro.core.engine import PBDSEngine, RunInfo
+from repro.core.index import SketchIndex, subsumes
+from repro.core.queries import (
+    Aggregate,
+    Having,
+    JoinSpec,
+    Predicate,
+    Query,
+    QueryResult,
+    execute,
+    provenance_mask,
+)
+from repro.core.ranges import RangeSet, equi_depth_ranges, equi_width_ranges, fragment_sizes
+from repro.core.safety import prefilter_candidates, safe_attributes
+from repro.core.sketch import (
+    ProvenanceSketch,
+    apply_sketch,
+    capture_sketch,
+    execute_with_sketch,
+    is_safe_sketch,
+    sketch_keep_mask,
+)
+from repro.core.strategies import (
+    ALL_STRATEGIES,
+    COST_STRATEGIES,
+    RANDOM_STRATEGIES,
+    SelectionResult,
+    candidate_pool,
+    select_attribute,
+)
+from repro.core.table import ColumnTable, Database, encode_groups, from_numpy
+
+__all__ = [
+    "PBDSEngine", "RunInfo", "SketchIndex", "subsumes",
+    "Aggregate", "Having", "JoinSpec", "Predicate", "Query", "QueryResult",
+    "execute", "provenance_mask",
+    "RangeSet", "equi_depth_ranges", "equi_width_ranges", "fragment_sizes",
+    "prefilter_candidates", "safe_attributes",
+    "ProvenanceSketch", "apply_sketch", "capture_sketch", "execute_with_sketch",
+    "is_safe_sketch", "sketch_keep_mask",
+    "ALL_STRATEGIES", "COST_STRATEGIES", "RANDOM_STRATEGIES",
+    "SelectionResult", "candidate_pool", "select_attribute",
+    "ColumnTable", "Database", "encode_groups", "from_numpy",
+]

@@ -1,0 +1,121 @@
+"""PBDSEngine — the Fig. 3 workflow as a single online component.
+
+For each incoming query:
+  1. probe the sketch index; on a hit, instrument the query with the sketch;
+  2. otherwise run the configured candidate-selection strategy (sampling is
+     cached/reused per Sec. 7.1), capture an accurate sketch on the chosen
+     attribute, store it, and instrument the query;
+  3. when no viable candidate exists, fall back to NO-PS execution.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, Optional, Tuple
+
+import jax
+import numpy as np
+
+from repro.aqp.sampling import SampleCache
+from repro.aqp.size_estimation import EstimationConfig
+from repro.core.index import SketchIndex
+from repro.core.queries import Query, QueryResult, execute
+from repro.core.ranges import RangeSet, equi_depth_ranges
+from repro.core.sketch import ProvenanceSketch, capture_sketch, execute_with_sketch
+from repro.core.strategies import SelectionResult, select_attribute
+from repro.core.table import Database
+
+
+@dataclasses.dataclass
+class RunInfo:
+    reused: bool
+    created: bool
+    attr: Optional[str]
+    strategy: str
+    selectivity: Optional[float]
+    t_select: float = 0.0
+    t_capture: float = 0.0
+    t_execute: float = 0.0
+
+    @property
+    def t_total(self) -> float:
+        return self.t_select + self.t_capture + self.t_execute
+
+
+class PBDSEngine:
+    def __init__(
+        self,
+        db: Database,
+        strategy: str = "CB-OPT-GB",
+        n_ranges: int = 100,
+        theta: float = 0.05,
+        cfg: EstimationConfig = EstimationConfig(),
+        seed: int = 0,
+        min_selectivity_gain: float = 0.9,
+    ):
+        self.db = db
+        self.strategy = strategy
+        self.n_ranges = n_ranges
+        self.theta = theta
+        self.cfg = cfg
+        self.index = SketchIndex()
+        self.samples = SampleCache()
+        self._key = jax.random.PRNGKey(seed)
+        self._ranges_cache: Dict[Tuple[str, str], RangeSet] = {}
+        # Sketches estimated to cover >= this fraction of the table are not
+        # worth creating (problem definition (i) in Sec. 4.5).
+        self.min_selectivity_gain = min_selectivity_gain
+
+    def _next_key(self) -> jax.Array:
+        self._key, k = jax.random.split(self._key)
+        return k
+
+    def ranges_for(self, table: str, attr: str) -> RangeSet:
+        ck = (table, attr)
+        if ck not in self._ranges_cache:
+            self._ranges_cache[ck] = equi_depth_ranges(self.db[table], attr, self.n_ranges)
+        return self._ranges_cache[ck]
+
+    def run(self, q: Query) -> Tuple[QueryResult, RunInfo]:
+        t0 = time.perf_counter()
+        sketch = self.index.lookup(q) if self.strategy != "NO-PS" else None
+        if sketch is not None:
+            res = execute_with_sketch(q, self.db, sketch)
+            t1 = time.perf_counter()
+            return res, RunInfo(
+                reused=True, created=False, attr=sketch.attr, strategy=self.strategy,
+                selectivity=sketch.selectivity, t_execute=t1 - t0,
+            )
+
+        if self.strategy == "NO-PS":
+            res = execute(q, self.db)
+            return res, RunInfo(False, False, None, "NO-PS", None,
+                                t_execute=time.perf_counter() - t0)
+
+        sel = select_attribute(
+            self.strategy, self._next_key(), q, self.db, self.n_ranges,
+            sample_cache=self.samples, theta=self.theta, cfg=self.cfg,
+            ranges_for=lambda a: self.ranges_for(q.table, a),
+        )
+        t1 = time.perf_counter()
+
+        est = sel.estimates.get(sel.attr) if sel.estimates else None
+        worth_it = sel.attr is not None and (
+            est is None or est.est_selectivity < self.min_selectivity_gain
+        )
+        if not worth_it:
+            res = execute(q, self.db)
+            t2 = time.perf_counter()
+            return res, RunInfo(False, False, None, self.strategy, None,
+                                t_select=t1 - t0, t_execute=t2 - t1)
+
+        sketch = capture_sketch(q, self.db, self.ranges_for(q.table, sel.attr))
+        self.index.insert(q, sketch)
+        t2 = time.perf_counter()
+        res = execute_with_sketch(q, self.db, sketch)
+        t3 = time.perf_counter()
+        return res, RunInfo(
+            reused=False, created=True, attr=sel.attr, strategy=self.strategy,
+            selectivity=sketch.selectivity,
+            t_select=t1 - t0, t_capture=t2 - t1, t_execute=t3 - t2,
+        )

@@ -1,0 +1,85 @@
+"""Sketch index: storage + reuse test (Fig. 3's first stage).
+
+Reuse rule (the [32] compatibility test, specialized to our templates): a
+sketch captured for Q1 answers Q2 when both share the FROM/GROUP BY/aggregate
+structure and Q2's provenance is a subset of Q1's — which for upward-monotone
+HAVING chains means Q2's thresholds dominate Q1's (tau_2 >= tau_1) and the
+WHERE predicates match.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Tuple
+
+from repro.core.queries import Query
+from repro.core.sketch import ProvenanceSketch
+
+
+def _pred_key(q: Query) -> Tuple:
+    return (
+        q.table,
+        q.groupby,
+        (q.agg.fn, q.agg.attr),
+        dataclasses.astuple(q.where) if q.where else None,
+        dataclasses.astuple(q.join) if q.join else None,
+        q.outer_groupby,
+        (q.outer_agg.fn, q.outer_agg.attr) if q.outer_agg else None,
+    )
+
+
+def _thresholds(q: Query) -> Tuple[Optional[float], Optional[float]]:
+    t1 = q.having.value if q.having else None
+    t2 = q.outer_having.value if q.outer_having else None
+    return t1, t2
+
+
+def subsumes(q1: Query, q2: Query) -> bool:
+    """True iff a sketch captured for q1 is guaranteed safe for q2."""
+    if _pred_key(q1) != _pred_key(q2):
+        return False
+    ops_ok = {">", ">="}
+    for h1, h2 in zip((q1.having, q1.outer_having), (q2.having, q2.outer_having)):
+        if (h1 is None) != (h2 is None):
+            return False
+        if h1 is None:
+            continue
+        if h1.op not in ops_ok or h2.op not in ops_ok:
+            return dataclasses.astuple(h1) == dataclasses.astuple(h2)
+        if h2.value < h1.value:  # q2 asks for *more* provenance than q1 saw
+            return False
+    return True
+
+
+@dataclasses.dataclass
+class IndexEntry:
+    query: Query
+    sketch: ProvenanceSketch
+    uses: int = 0
+
+
+class SketchIndex:
+    """In-memory sketch store with subsumption-based retrieval."""
+
+    def __init__(self):
+        self._entries: Dict[Tuple, List[IndexEntry]] = {}
+        self.hits = 0
+        self.misses = 0
+
+    def lookup(self, q: Query) -> Optional[ProvenanceSketch]:
+        best: Optional[IndexEntry] = None
+        for e in self._entries.get(_pred_key(q), []):
+            if subsumes(e.query, q):
+                if best is None or e.sketch.size_rows < best.sketch.size_rows:
+                    best = e
+        if best is None:
+            self.misses += 1
+            return None
+        best.uses += 1
+        self.hits += 1
+        return best.sketch
+
+    def insert(self, q: Query, sketch: ProvenanceSketch) -> None:
+        self._entries.setdefault(_pred_key(q), []).append(IndexEntry(q, sketch))
+
+    def __len__(self) -> int:
+        return sum(len(v) for v in self._entries.values())

@@ -1,0 +1,327 @@
+"""Query IR + executor for the paper's supported templates (Sec. 6.1).
+
+Templates:
+  Q-AGH    aggregation-groupby-having          (optional WHERE / HAVING)
+  Q-AJGH   aggregation-join-groupby-having
+  Q-AAGH   nested aggregation-aggregation-groupby-having
+  Q-AAJGH  nested variant with a join in the inner block
+
+The executor is a vectorized bag-semantics evaluator over ``ColumnTable``:
+group-by keys are dictionary-encoded on the host (catalog work), per-row
+aggregation runs on device via segment ops — on the optimized path through the
+``segment_aggregate`` Pallas kernel (one-hot MXU matmuls).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.table import ColumnTable, Database, encode_groups
+
+Array = jax.Array
+
+_OPS = {
+    ">": lambda x, v: x > v,
+    ">=": lambda x, v: x >= v,
+    "<": lambda x, v: x < v,
+    "<=": lambda x, v: x <= v,
+    "=": lambda x, v: x == v,
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class Predicate:
+    """Row-level WHERE predicate ``attr op value``."""
+
+    attr: str
+    op: str
+    value: float
+
+    def mask(self, table: ColumnTable) -> Array:
+        return _OPS[self.op](table[self.attr], self.value)
+
+
+@dataclasses.dataclass(frozen=True)
+class Having:
+    op: str
+    value: float
+
+    def mask(self, agg_values: Array) -> Array:
+        return _OPS[self.op](agg_values, self.value)
+
+
+@dataclasses.dataclass(frozen=True)
+class Aggregate:
+    fn: str  # 'sum' | 'avg' | 'count'
+    attr: Optional[str] = None  # None for count(*)
+
+
+@dataclasses.dataclass(frozen=True)
+class JoinSpec:
+    """Equi-join ``fact.left_key = right.right_key`` (right key unique)."""
+
+    right: str
+    left_key: str
+    right_key: str
+
+
+@dataclasses.dataclass(frozen=True)
+class Query:
+    table: str
+    groupby: Tuple[str, ...]
+    agg: Aggregate
+    where: Optional[Predicate] = None
+    having: Optional[Having] = None
+    join: Optional[JoinSpec] = None
+    # Nested templates (Q-AAGH / Q-AAJGH): outer block over the inner result.
+    outer_groupby: Optional[Tuple[str, ...]] = None
+    outer_agg: Optional[Aggregate] = None
+    outer_having: Optional[Having] = None
+
+    @property
+    def template(self) -> str:
+        nested = self.outer_groupby is not None
+        joined = self.join is not None
+        if nested and joined:
+            return "Q-AAJGH"
+        if nested:
+            return "Q-AAGH"
+        if joined:
+            return "Q-AJGH"
+        return "Q-AGH"
+
+    @property
+    def relevant_attrs(self) -> Tuple[str, ...]:
+        """Attributes the query 'touches' (for RAND-REL-ALL / CB-OPT-REL)."""
+        attrs = list(self.groupby)
+        if self.agg.attr:
+            attrs.append(self.agg.attr)
+        if self.where is not None:
+            attrs.append(self.where.attr)
+        if self.join is not None:
+            attrs.append(self.join.left_key)
+        if self.outer_groupby:
+            attrs.extend(self.outer_groupby)
+        seen, out = set(), []
+        for a in attrs:
+            if a not in seen:
+                seen.add(a)
+                out.append(a)
+        return tuple(out)
+
+    def groupby_on_fact(self, db: "Database") -> Tuple[str, ...]:
+        """Group-by attributes that live on the sketched (fact) relation."""
+        fact = db[self.table]
+        return tuple(a for a in self.groupby if fact.has(a))
+
+    def signature(self) -> Tuple:
+        """Hashable identity used by the sketch index."""
+        return (
+            self.table,
+            self.groupby,
+            (self.agg.fn, self.agg.attr),
+            dataclasses.astuple(self.where) if self.where else None,
+            dataclasses.astuple(self.having) if self.having else None,
+            dataclasses.astuple(self.join) if self.join else None,
+            self.outer_groupby,
+            (self.outer_agg.fn, self.outer_agg.attr) if self.outer_agg else None,
+            dataclasses.astuple(self.outer_having) if self.outer_having else None,
+        )
+
+
+@dataclasses.dataclass(frozen=True)
+class QueryResult:
+    group_values: Dict[str, np.ndarray]  # per surviving group
+    values: np.ndarray  # aggregate per surviving group
+
+    def canonical(self) -> Tuple[Tuple, ...]:
+        """Order-independent representation for result-equality tests."""
+        attrs = sorted(self.group_values)
+        rows = []
+        for i in range(len(self.values)):
+            rows.append(
+                tuple(float(self.group_values[a][i]) for a in attrs)
+                + (round(float(self.values[i]), 6),)
+            )
+        return tuple(sorted(rows))
+
+
+# ---------------------------------------------------------------------------
+# Aggregation primitives
+# ---------------------------------------------------------------------------
+
+
+def segment_aggregate(
+    values: Array, gid: Array, n_groups: int, fn: str, weights: Optional[Array] = None
+) -> Array:
+    """Per-group aggregate; ``weights`` is the row inclusion mask (WHERE)."""
+    w = jnp.ones_like(values, dtype=jnp.float32) if weights is None else weights.astype(jnp.float32)
+    v = values.astype(jnp.float32)
+    if fn == "count":
+        return jax.ops.segment_sum(w, gid, num_segments=n_groups)
+    sums = jax.ops.segment_sum(v * w, gid, num_segments=n_groups)
+    if fn == "sum":
+        return sums
+    if fn == "avg":
+        cnt = jax.ops.segment_sum(w, gid, num_segments=n_groups)
+        return sums / jnp.maximum(cnt, 1.0)
+    raise ValueError(f"unknown aggregate {fn!r}")
+
+
+# ---------------------------------------------------------------------------
+# Join materialization (right key unique, e.g. orders.orderkey, part.partkey)
+# ---------------------------------------------------------------------------
+
+
+def materialize_join(db: Database, q: Query) -> Tuple[ColumnTable, np.ndarray]:
+    """Return the joined flat table and, per joined row, the fact-row index.
+
+    Fact rows with no partner are dropped (inner join).  Right-side columns
+    are prefixed with ``<right>.`` unless the name is free in the fact table.
+    """
+    fact = db[q.table]
+    right = db[q.join.right]
+    lk = np.asarray(fact[q.join.left_key])
+    rk = np.asarray(right[q.join.right_key])
+    order = np.argsort(rk, kind="stable")
+    rk_sorted = rk[order]
+    pos = np.searchsorted(rk_sorted, lk)
+    pos_clip = np.minimum(pos, len(rk_sorted) - 1)
+    matched = rk_sorted[pos_clip] == lk
+    fact_idx = np.nonzero(matched)[0]
+    right_idx = order[pos_clip[fact_idx]]
+
+    cols: Dict[str, Array] = {}
+    for a in fact.schema:
+        cols[a] = jnp.asarray(np.asarray(fact[a])[fact_idx])
+    for a in right.schema:
+        name = a if a not in cols else f"{right.name}.{a}"
+        cols[name] = jnp.asarray(np.asarray(right[a])[right_idx])
+    joined = ColumnTable(f"{fact.name}_join_{right.name}", cols, fact.primary_key)
+    return joined, fact_idx
+
+
+# ---------------------------------------------------------------------------
+# Executor
+# ---------------------------------------------------------------------------
+
+
+def _inner_block(db: Database, q: Query):
+    """Evaluate FROM/WHERE/GROUP BY/agg of the inner block.
+
+    Returns (flat_table, fact_idx, gid, n_groups, group_values, agg_values,
+    where_mask).  ``fact_idx`` maps flat rows back to fact-table rows.
+    """
+    if q.join is not None:
+        flat, fact_idx = materialize_join(db, q)
+    else:
+        flat = db[q.table]
+        fact_idx = np.arange(flat.num_rows)
+    where_mask = (
+        q.where.mask(flat) if q.where is not None else jnp.ones(flat.num_rows, dtype=bool)
+    )
+    gid, n_groups, group_values = encode_groups(flat, q.groupby)
+    gid_dev = jnp.asarray(gid)
+    if q.agg.fn == "count":
+        vals = jnp.ones(flat.num_rows, dtype=jnp.float32)
+    else:
+        vals = flat[q.agg.attr]
+    agg_values = segment_aggregate(vals, gid_dev, n_groups, q.agg.fn, weights=where_mask)
+    return flat, fact_idx, gid, n_groups, group_values, agg_values, where_mask
+
+
+def execute(q: Query, db: Database) -> QueryResult:
+    flat, fact_idx, gid, n_groups, group_values, agg_values, where_mask = _inner_block(db, q)
+    agg_np = np.asarray(agg_values)
+    # Groups that actually exist post-WHERE (a group whose every row fails the
+    # WHERE does not appear in the result).
+    present = np.asarray(
+        jax.ops.segment_sum(where_mask.astype(jnp.int32), jnp.asarray(gid), num_segments=n_groups)
+    ) > 0
+
+    if q.outer_groupby is None:
+        keep = present
+        if q.having is not None:
+            keep &= np.asarray(q.having.mask(jnp.asarray(agg_np)))
+        idx = np.nonzero(keep)[0]
+        return QueryResult(
+            group_values={a: v[idx] for a, v in group_values.items()},
+            values=agg_np[idx],
+        )
+
+    # Nested templates: inner HAVING filters inner groups, then the outer
+    # block aggregates result1 over outer_groupby (subset of inner groupby).
+    inner_keep = present
+    if q.having is not None:
+        inner_keep &= np.asarray(q.having.mask(jnp.asarray(agg_np)))
+    inner_idx = np.nonzero(inner_keep)[0]
+    inner_vals = agg_np[inner_idx]
+    inner_gv = {a: v[inner_idx] for a, v in group_values.items()}
+
+    stacked = np.stack([inner_gv[a] for a in q.outer_groupby], axis=1)
+    if stacked.shape[0] == 0:
+        return QueryResult(group_values={a: np.empty(0) for a in q.outer_groupby}, values=np.empty(0))
+    uniq, ogid = np.unique(stacked, axis=0, return_inverse=True)
+    n_outer = uniq.shape[0]
+    outer_vals = segment_aggregate(
+        jnp.asarray(inner_vals),
+        jnp.asarray(ogid.astype(np.int32)),
+        n_outer,
+        q.outer_agg.fn if q.outer_agg else "sum",
+    )
+    outer_np = np.asarray(outer_vals)
+    keep = np.ones(n_outer, dtype=bool)
+    if q.outer_having is not None:
+        keep &= np.asarray(q.outer_having.mask(jnp.asarray(outer_np)))
+    idx = np.nonzero(keep)[0]
+    return QueryResult(
+        group_values={a: uniq[:, i][idx] for i, a in enumerate(q.outer_groupby)},
+        values=outer_np[idx],
+    )
+
+
+def provenance_mask(q: Query, db: Database) -> np.ndarray:
+    """Lineage P(Q, D) as a boolean mask over the *fact table* rows.
+
+    A fact row is in the provenance iff it contributes to some result tuple:
+    it satisfies WHERE, joins (for join templates), and its group survives the
+    HAVING chain.  This is the sufficiency-preserving lineage of Sec. 2.2.
+    """
+    flat, fact_idx, gid, n_groups, group_values, agg_values, where_mask = _inner_block(db, q)
+    agg_np = np.asarray(agg_values)
+    inner_keep = np.ones(n_groups, dtype=bool)
+    if q.having is not None:
+        inner_keep &= np.asarray(q.having.mask(jnp.asarray(agg_np)))
+
+    if q.outer_groupby is not None:
+        inner_idx = np.nonzero(inner_keep)[0]
+        if inner_idx.shape[0]:
+            stacked = np.stack(
+                [group_values[a][inner_idx] for a in q.outer_groupby], axis=1
+            )
+            uniq, ogid = np.unique(stacked, axis=0, return_inverse=True)
+            outer_vals = np.asarray(
+                segment_aggregate(
+                    jnp.asarray(agg_np[inner_idx]),
+                    jnp.asarray(ogid.astype(np.int32)),
+                    uniq.shape[0],
+                    q.outer_agg.fn if q.outer_agg else "sum",
+                )
+            )
+            outer_keep = np.ones(uniq.shape[0], dtype=bool)
+            if q.outer_having is not None:
+                outer_keep &= np.asarray(q.outer_having.mask(jnp.asarray(outer_vals)))
+            surviving_inner = np.zeros(n_groups, dtype=bool)
+            surviving_inner[inner_idx] = outer_keep[ogid]
+            inner_keep = surviving_inner
+        else:
+            inner_keep = np.zeros(n_groups, dtype=bool)
+
+    row_keep = inner_keep[gid] & np.asarray(where_mask)
+    mask = np.zeros(db[q.table].num_rows, dtype=bool)
+    np.add.at(mask, fact_idx[row_keep], True)
+    return mask

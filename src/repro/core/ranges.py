@@ -1,0 +1,80 @@
+"""Range partitions (Def. 2 of the paper).
+
+A ``RangeSet`` over attribute ``a`` is a list of half-open intervals covering
+the attribute domain.  In the paper the interval bounds come from equi-depth
+histograms that the DBMS already maintains; here we compute them with device-
+side quantiles.  ``bucketize`` assigns each row its fragment id — the basic
+primitive both sketch capture and sketch application are built on.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.table import ColumnTable
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class RangeSet:
+    """Equi-depth range partitioning of an attribute domain.
+
+    ``bounds`` are the n-1 interior split points of n ranges:
+    fragment i covers [bounds[i-1], bounds[i]) with -inf / +inf at the ends.
+    """
+
+    attr: str
+    bounds: np.ndarray  # shape (n_ranges - 1,), sorted ascending
+
+    @property
+    def n_ranges(self) -> int:
+        return int(self.bounds.shape[0]) + 1
+
+    def bucketize(self, values: Array) -> Array:
+        """Fragment id per value: searchsorted against the interior bounds."""
+        return jnp.searchsorted(jnp.asarray(self.bounds), values, side="right").astype(
+            jnp.int32
+        )
+
+    def key(self) -> Tuple:
+        return (self.attr, self.n_ranges, float(self.bounds[0]) if len(self.bounds) else 0.0,
+                float(self.bounds[-1]) if len(self.bounds) else 0.0)
+
+
+def equi_depth_ranges(
+    table: ColumnTable, attr: str, n_ranges: int
+) -> RangeSet:
+    """Equi-depth histogram bounds (what Postgres keeps in pg_stats)."""
+    col = np.asarray(table[attr]).astype(np.float64)
+    qs = np.linspace(0.0, 1.0, n_ranges + 1)[1:-1]
+    bounds = np.quantile(col, qs, method="lower")
+    # Strictly increasing bounds (duplicates collapse fragments, harmless but
+    # we dedupe so fragment sizes stay meaningful).
+    bounds = np.unique(bounds)
+    return RangeSet(attr=attr, bounds=bounds)
+
+
+def equi_width_ranges(table: ColumnTable, attr: str, n_ranges: int) -> RangeSet:
+    col = np.asarray(table[attr]).astype(np.float64)
+    lo, hi = float(col.min()), float(col.max())
+    if hi <= lo:
+        hi = lo + 1.0
+    bounds = np.linspace(lo, hi, n_ranges + 1)[1:-1]
+    return RangeSet(attr=attr, bounds=np.unique(bounds))
+
+
+def fragment_sizes(table: ColumnTable, ranges: RangeSet) -> Array:
+    """#R_r for every fragment r (Def. 8 needs these)."""
+    bucket = ranges.bucketize(table[ranges.attr])
+    return jax.ops.segment_sum(
+        jnp.ones_like(bucket, dtype=jnp.int32), bucket, num_segments=ranges.n_ranges
+    )
+
+
+def distinct_count(table: ColumnTable, attr: str) -> int:
+    return int(np.unique(np.asarray(table[attr])).shape[0])

@@ -1,0 +1,77 @@
+"""Attribute safety (Def. 5) — the static pre-filter for sketch candidates.
+
+Following [32] we use a sufficient condition.  For the supported templates a
+range partition on attribute ``a`` is safe when either:
+
+  1. ``a`` is a group-by attribute of the (inner) block: every group lies
+     entirely inside one fragment, so groups present in the sketch instance
+     are *complete* and aggregate exactly as over D; or
+  2. the HAVING chain is *upward monotone* (>, >= thresholds) and the
+     aggregate is monotone under row removal (COUNT, or SUM over non-negative
+     values): partially-present non-provenance groups can only shrink, so
+     they cannot spuriously pass the HAVING filter.
+
+Additionally (Sec. 9) candidates whose distinct-value count is below the
+number of ranges are pre-filtered: such partitions degenerate (several ranges
+map to one value) and [32]'s safety argument needs value-aligned bounds.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import numpy as np
+
+from repro.core.queries import Query
+from repro.core.ranges import distinct_count
+from repro.core.table import Database
+
+
+def _having_upward_monotone(q: Query) -> bool:
+    ops_ok = {">", ">="}
+    if q.having is not None and q.having.op not in ops_ok:
+        return False
+    if q.outer_having is not None and q.outer_having.op not in ops_ok:
+        return False
+    return True
+
+
+def _agg_monotone(q: Query, db: Database) -> bool:
+    aggs = [q.agg] + ([q.outer_agg] if q.outer_agg else [])
+    for agg in aggs:
+        if agg.fn == "count":
+            continue
+        if agg.fn == "avg":
+            return False  # partial AVG can move either way
+        if agg.fn == "sum":
+            col = np.asarray(db[q.table][agg.attr]) if db[q.table].has(agg.attr) else None
+            if col is None or (col < 0).any():
+                return False
+    return True
+
+
+def safe_attributes(q: Query, db: Database) -> Tuple[str, ...]:
+    """SAFE(Q) restricted to the sketched (fact) relation's schema."""
+    fact = db[q.table]
+    gb_on_fact = tuple(a for a in q.groupby if fact.has(a))
+    if _having_upward_monotone(q) and _agg_monotone(q, db):
+        return tuple(sorted(fact.schema))
+    return gb_on_fact
+
+
+def prefilter_candidates(
+    q: Query, db: Database, candidates: Tuple[str, ...], n_ranges: int
+) -> Tuple[str, ...]:
+    """Drop candidates with fewer distinct values than ranges (Sec. 9).
+
+    Group-by attributes are exempt: they are safe by the whole-group argument
+    no matter how coarse the (deduplicated) partition ends up, and the paper's
+    own experiments sketch low-cardinality GB attributes (e.g. ``district``).
+    """
+    fact = db[q.table]
+    out = []
+    for a in candidates:
+        if not fact.has(a):
+            continue
+        if a in q.groupby or distinct_count(fact, a) >= n_ranges:
+            out.append(a)
+    return tuple(out)

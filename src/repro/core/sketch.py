@@ -1,0 +1,123 @@
+"""Provenance sketches (Sec. 4): capture, instances, application, selectivity.
+
+A sketch for query Q on range partition ``F_{R,a}`` is the bitvector over
+ranges whose fragments contain >= 1 provenance row.  Capture reduces to a
+segmented OR of the provenance mask by fragment id — the ``fragment_bitmap``
+Pallas kernel; application reduces to a bitmap gather — the ``sketch_filter``
+kernel.  Both have pure-jnp oracles in ``repro.kernels.ref``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.queries import Query, QueryResult, execute, provenance_mask
+from repro.core.ranges import RangeSet, fragment_sizes
+from repro.core.table import ColumnTable, Database
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class ProvenanceSketch:
+    """An accurate sketch: table + attribute + ranges + membership bits."""
+
+    table: str
+    ranges: RangeSet
+    bits: np.ndarray  # bool, shape (n_ranges,)
+    size_rows: int  # |R_P| — rows covered by the sketch instance
+    total_rows: int  # |R|
+
+    @property
+    def attr(self) -> str:
+        return self.ranges.attr
+
+    @property
+    def selectivity(self) -> float:
+        return self.size_rows / max(self.total_rows, 1)
+
+    @property
+    def n_fragments(self) -> int:
+        return int(self.bits.sum())
+
+    def range_conditions(self) -> Tuple[Tuple[float, float], ...]:
+        """The disjunction of [lo, hi) conditions a DBMS would be handed."""
+        bounds = np.concatenate([[-np.inf], self.ranges.bounds, [np.inf]])
+        out = []
+        for i in np.nonzero(self.bits)[0]:
+            out.append((float(bounds[i]), float(bounds[i + 1])))
+        return tuple(out)
+
+
+def capture_sketch(
+    q: Query,
+    db: Database,
+    ranges: RangeSet,
+    prov: Optional[np.ndarray] = None,
+    use_kernel: bool = True,
+) -> ProvenanceSketch:
+    """Build the accurate sketch R(Q, D, F) for ``q`` on partition ``ranges``."""
+    table = db[q.table]
+    if prov is None:
+        prov = provenance_mask(q, db)
+    bucket = ranges.bucketize(table[ranges.attr])
+    if use_kernel:
+        from repro.kernels import ops as kops
+
+        bits = np.asarray(kops.fragment_bitmap(jnp.asarray(prov), bucket, ranges.n_ranges))
+    else:
+        bits = np.asarray(
+            jax.ops.segment_max(
+                jnp.asarray(prov).astype(jnp.int32), bucket, num_segments=ranges.n_ranges
+            )
+            > 0
+        )
+    sizes = np.asarray(fragment_sizes(table, ranges))
+    size_rows = int(sizes[bits].sum())
+    return ProvenanceSketch(
+        table=q.table,
+        ranges=ranges,
+        bits=bits.astype(bool),
+        size_rows=size_rows,
+        total_rows=table.num_rows,
+    )
+
+
+def sketch_keep_mask(sketch: ProvenanceSketch, table: ColumnTable, use_kernel: bool = True) -> Array:
+    """Row keep-mask: True iff the row's fragment belongs to the sketch."""
+    bucket = sketch.ranges.bucketize(table[sketch.attr])
+    if use_kernel:
+        from repro.kernels import ops as kops
+
+        return kops.sketch_filter(bucket, jnp.asarray(sketch.bits))
+    return jnp.asarray(sketch.bits)[bucket]
+
+
+def apply_sketch(sketch: ProvenanceSketch, db: Database) -> Database:
+    """D_P: replace the sketched relation with its sketch instance."""
+    table = db[sketch.table]
+    mask = sketch_keep_mask(sketch, table)
+    return db.with_table(table.select(mask))
+
+
+def execute_with_sketch(
+    q: Query, db: Database, sketch: Optional[ProvenanceSketch]
+) -> QueryResult:
+    """Run ``q`` over ``D_P`` (or D when no sketch) — the instrumented query."""
+    if sketch is None:
+        return execute(q, db)
+    return execute(q, apply_sketch(sketch, db))
+
+
+def is_safe_sketch(q: Query, db: Database, sketch: ProvenanceSketch) -> bool:
+    """Def. 4 checked extensionally: Q(D_P) == Q(D).  (Test utility.)"""
+    return execute(q, db).canonical() == execute_with_sketch(q, db, sketch).canonical()
+
+
+def actual_size(q: Query, db: Database, ranges: RangeSet) -> int:
+    """size(Q, D, R, a, R) — ground truth for RSE measurements."""
+    return capture_sketch(q, db, ranges).size_rows

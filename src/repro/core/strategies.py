@@ -1,0 +1,98 @@
+"""Candidate-attribute selection strategies (Sec. 9 / Sec. 11.1.3).
+
+Random baselines: RAND-ALL, RAND-REL-ALL, RAND-GB, RAND-PK, RAND-AGG.
+Cost-based:       CB-OPT (all safe attrs), CB-OPT-REL (query-relevant),
+                  CB-OPT-GB (group-by attrs only — the paper's winner).
+Oracles:          OPT (exact capture of every candidate), NO-PS.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+from repro.aqp.sampling import SampleCache, SampleSet
+from repro.aqp.size_estimation import (
+    EstimationConfig,
+    SizeEstimate,
+    approximate_query_result,
+    estimate_size,
+)
+from repro.core.queries import Query
+from repro.core.ranges import RangeSet, equi_depth_ranges
+from repro.core.safety import prefilter_candidates, safe_attributes
+from repro.core.sketch import actual_size
+from repro.core.table import Database
+
+RANDOM_STRATEGIES = ("RAND-ALL", "RAND-REL-ALL", "RAND-GB", "RAND-PK", "RAND-AGG")
+COST_STRATEGIES = ("CB-OPT", "CB-OPT-REL", "CB-OPT-GB")
+ALL_STRATEGIES = RANDOM_STRATEGIES + COST_STRATEGIES + ("OPT",)
+
+
+@dataclasses.dataclass
+class SelectionResult:
+    strategy: str
+    attr: Optional[str]  # chosen attribute (None => no viable candidate)
+    candidates: Tuple[str, ...]
+    estimates: Dict[str, SizeEstimate]  # filled for cost-based strategies
+    topk: Tuple[str, ...] = ()  # ranking, best first (cost-based only)
+
+
+def candidate_pool(strategy: str, q: Query, db: Database, n_ranges: int) -> Tuple[str, ...]:
+    """The strategy-specific candidate set, safety-checked and pre-filtered."""
+    fact = db[q.table]
+    safe = set(safe_attributes(q, db))
+    if strategy in ("RAND-ALL", "CB-OPT", "OPT"):
+        pool = tuple(sorted(safe))
+    elif strategy in ("RAND-REL-ALL", "CB-OPT-REL"):
+        pool = tuple(a for a in q.relevant_attrs if a in safe and fact.has(a))
+    elif strategy in ("RAND-GB", "CB-OPT-GB"):
+        pool = tuple(a for a in q.groupby if a in safe and fact.has(a))
+    elif strategy == "RAND-PK":
+        pool = tuple(a for a in fact.primary_key if a in safe)
+    elif strategy == "RAND-AGG":
+        pool = tuple([q.agg.attr] if q.agg.attr and q.agg.attr in safe else [])
+    else:
+        raise ValueError(f"unknown strategy {strategy!r}")
+    return prefilter_candidates(q, db, pool, n_ranges)
+
+
+def select_attribute(
+    strategy: str,
+    key: jax.Array,
+    q: Query,
+    db: Database,
+    n_ranges: int,
+    sample_cache: Optional[SampleCache] = None,
+    theta: float = 0.05,
+    cfg: EstimationConfig = EstimationConfig(),
+    ranges_for: Optional[Callable[[str], RangeSet]] = None,
+    topk: int = 1,
+) -> SelectionResult:
+    cands = candidate_pool(strategy, q, db, n_ranges)
+    if not cands:
+        return SelectionResult(strategy, None, cands, {})
+    ranges_for = ranges_for or (lambda a: equi_depth_ranges(db[q.table], a, n_ranges))
+
+    if strategy in RANDOM_STRATEGIES:
+        i = int(jax.random.randint(key, (), 0, len(cands)))
+        return SelectionResult(strategy, cands[i], cands, {})
+
+    if strategy == "OPT":
+        sizes = {a: actual_size(q, db, ranges_for(a)) for a in cands}
+        best = min(sizes, key=sizes.get)
+        ranking = tuple(sorted(sizes, key=sizes.get))
+        return SelectionResult(strategy, best, cands, {}, topk=ranking[:topk])
+
+    # Cost-based: one shared AQR pass, per-candidate incidence (Sec. 8).
+    sample_cache = sample_cache or SampleCache()
+    k_s, k_e = jax.random.split(key)
+    samples = sample_cache.get_or_create(k_s, db[q.table], q.groupby_on_fact(db), theta)
+    aqr = approximate_query_result(k_e, q, db, samples, cfg)
+    estimates: Dict[str, SizeEstimate] = {}
+    for a in cands:
+        estimates[a] = estimate_size(k_e, q, db, ranges_for(a), samples, cfg, aqr=aqr)
+    ranking = tuple(sorted(estimates, key=lambda a: estimates[a].est_rows))
+    return SelectionResult(strategy, ranking[0], cands, estimates, topk=ranking[:topk])

@@ -1,0 +1,87 @@
+"""Synthetic query workloads (Sec. 11.1): random instantiations of the
+Q-AGH / Q-AJGH / Q-AAJGH templates over the four datasets, with HAVING
+thresholds drawn from the actual group-aggregate quantiles so workloads mix
+selective and broad queries (like the paper's 1000-query batches)."""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from typing import List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.queries import Aggregate, Having, JoinSpec, Query, execute
+from repro.core.table import Database
+
+
+@dataclasses.dataclass(frozen=True)
+class WorkloadSpec:
+    table: str
+    gb_pool: Tuple[str, ...]  # attributes eligible for GROUP BY
+    agg_pool: Tuple[str, ...]  # attributes eligible for aggregation
+    join: Optional[JoinSpec] = None
+    n_gb: Tuple[int, ...] = (1, 2, 3)
+    agg_fns: Tuple[str, ...] = ("sum", "avg", "count")
+    # HAVING threshold quantile range over the group aggregates
+    q_range: Tuple[float, float] = (0.5, 0.95)
+
+
+CRIMES_SPEC = WorkloadSpec(
+    table="crimes",
+    gb_pool=("district", "month", "year", "pid", "ward", "community"),
+    agg_pool=("records",),
+)
+
+TPCH_SPEC = WorkloadSpec(
+    table="lineitem",
+    gb_pool=("l_suppkey", "l_shipdate", "l_partkey"),
+    agg_pool=("l_extendedprice", "l_quantity"),
+)
+
+TPCH_JOIN_SPEC = WorkloadSpec(
+    table="lineitem",
+    gb_pool=("l_suppkey", "l_shipdate"),
+    agg_pool=("l_extendedprice", "l_quantity"),
+    join=JoinSpec("orders", "l_orderkey", "o_orderkey"),
+)
+
+PARKING_SPEC = WorkloadSpec(
+    table="parking",
+    gb_pool=("borough", "precinct", "agency", "year", "month", "hour"),
+    agg_pool=("fine", "violation"),
+)
+
+STARS_SPEC = WorkloadSpec(
+    table="stars",
+    gb_pool=("field", "run"),
+    agg_pool=("mag_g", "mag_r", "redshift"),
+)
+
+
+def generate_workload(
+    spec: WorkloadSpec, db: Database, n_queries: int, seed: int = 0
+) -> List[Query]:
+    """Random template instantiations with data-calibrated thresholds."""
+    rng = np.random.default_rng(seed)
+    out: List[Query] = []
+    attempts = 0
+    while len(out) < n_queries and attempts < n_queries * 10:
+        attempts += 1
+        k = int(rng.choice(spec.n_gb))
+        gb = tuple(sorted(rng.choice(spec.gb_pool, size=min(k, len(spec.gb_pool)), replace=False)))
+        fn = str(rng.choice(spec.agg_fns))
+        agg_attr = None if fn == "count" else str(rng.choice(spec.agg_pool))
+        q0 = Query(
+            table=spec.table,
+            groupby=gb,
+            agg=Aggregate(fn, agg_attr),
+            join=spec.join,
+        )
+        # Calibrate the threshold on the actual group aggregates.
+        res = execute(q0, db)
+        if len(res.values) < 4:
+            continue
+        qlo, qhi = spec.q_range
+        tau = float(np.quantile(res.values, rng.uniform(qlo, qhi)))
+        out.append(dataclasses.replace(q0, having=Having(">", tau)))
+    return out

@@ -1,0 +1,5 @@
+from repro.data.pipeline import (
+    CurationSpec,
+    SketchedDataPipeline,
+    make_corpus_metadata,
+)

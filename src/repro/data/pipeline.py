@@ -1,0 +1,178 @@
+"""PBDS-sketched training-data pipeline — the paper's technique as the
+framework's data-curation / data-skipping stage.
+
+A training corpus carries a *metadata table* (one row per document: domain,
+shard, quality, length, timestamp...).  A **curation query** — a Q-AGH over
+that table, e.g. ``GROUP BY (domain, shard) HAVING avg(quality) > tau`` —
+defines which data is relevant for the run.  The PBDS engine (cost-based
+CB-OPT-GB by default) picks the partition attribute via sample-based size
+estimation, captures a provenance sketch, and the loader then **skips whole
+fragments**: documents in skipped fragments are never touched, tokenized, or
+shipped to devices.  This is exactly the paper's mechanism with "query" =
+curation predicate and "physical design" = the corpus' fragment-major shard
+layout.
+
+Operational properties needed at scale:
+  - deterministic: all sampling/shuffling from a single seed;
+  - sharded: each DP rank draws a disjoint document stream (rank, world);
+  - resumable: ``state()``/``restore()`` round-trips the cursor, and the
+    trainer stores it inside checkpoints;
+  - straggler-tolerant: ranks draw by strided index, so reassigning a rank's
+    stream after elastic re-mesh needs no data movement.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Iterator, Optional, Tuple
+
+import jax
+import numpy as np
+
+from repro.core.engine import PBDSEngine
+from repro.core.queries import Aggregate, Having, Query
+from repro.core.table import ColumnTable, Database, from_numpy
+
+Array = jax.Array
+
+
+def make_corpus_metadata(
+    n_docs: int = 50_000, n_domains: int = 32, n_shards: int = 256, seed: int = 0
+) -> ColumnTable:
+    """Synthetic corpus metadata with domain-correlated quality (so curation
+    queries actually separate data, mirroring the paper's datasets)."""
+    rng = np.random.default_rng(seed)
+    domain = rng.integers(0, n_domains, n_docs)
+    shard = (domain * (n_shards // n_domains) + rng.integers(0, n_shards // n_domains, n_docs))
+    base_q = rng.uniform(0.2, 0.9, n_domains)
+    quality = np.clip(base_q[domain] + rng.normal(0, 0.15, n_docs), 0, 1)
+    length = rng.integers(128, 4096, n_docs)
+    timestamp = rng.integers(1_600_000_000, 1_750_000_000, n_docs)
+    doc_id = np.arange(n_docs)
+    return from_numpy(
+        "corpus",
+        dict(
+            doc_id=doc_id.astype(np.int64),
+            domain=domain.astype(np.int32),
+            shard=shard.astype(np.int32),
+            quality=quality.astype(np.float32),
+            length=length.astype(np.int32),
+            timestamp=timestamp.astype(np.int64),
+        ),
+        primary_key=("doc_id",),
+    )
+
+
+@dataclasses.dataclass(frozen=True)
+class CurationSpec:
+    groupby: Tuple[str, ...] = ("domain", "shard")
+    agg: str = "avg"
+    agg_attr: str = "quality"
+    having_op: str = ">"
+    having_value: float = 0.55
+    strategy: str = "CB-OPT-GB"
+    n_ranges: int = 64
+    theta: float = 0.1
+
+    def query(self) -> Query:
+        return Query(
+            table="corpus",
+            groupby=self.groupby,
+            agg=Aggregate(self.agg, self.agg_attr),
+            having=Having(self.having_op, self.having_value),
+        )
+
+
+class SketchedDataPipeline:
+    """Fragment-skipping batch iterator over a sketched corpus."""
+
+    def __init__(
+        self,
+        metadata: ColumnTable,
+        spec: CurationSpec,
+        batch_size: int,
+        seq_len: int,
+        vocab_size: int,
+        dp_rank: int = 0,
+        dp_size: int = 1,
+        seed: int = 0,
+    ):
+        self.metadata = metadata
+        self.spec = spec
+        self.batch_size = batch_size
+        self.seq_len = seq_len
+        self.vocab_size = vocab_size
+        self.dp_rank = dp_rank
+        self.dp_size = dp_size
+        self.seed = seed
+
+        self.engine = PBDSEngine(
+            Database({"corpus": metadata}),
+            strategy=spec.strategy,
+            n_ranges=spec.n_ranges,
+            theta=spec.theta,
+            seed=seed,
+        )
+        q = spec.query()
+        _, self.run_info = self.engine.run(q)
+        sketch = self.engine.index.lookup(q)
+        self.sketch = sketch
+        if sketch is not None:
+            from repro.core.sketch import sketch_keep_mask
+
+            keep = np.asarray(sketch_keep_mask(sketch, metadata))
+        else:  # no viable sketch: fall back to exact predicate
+            from repro.core.queries import provenance_mask
+
+            keep = provenance_mask(q, self.engine.db)
+        self.selected_docs = np.asarray(metadata["doc_id"])[keep]
+        self.skipped_fraction = 1.0 - keep.mean()
+        # Deterministic shuffle; strided rank sharding.
+        rng = np.random.default_rng(seed + 17)
+        self._order = rng.permutation(self.selected_docs)
+        self._cursor = 0
+        self._epoch = 0
+
+    # -- iterator state (checkpointable) -----------------------------------
+    def state(self) -> Dict[str, Any]:
+        return {"cursor": int(self._cursor), "epoch": int(self._epoch), "seed": self.seed}
+
+    def restore(self, state: Dict[str, Any]) -> None:
+        self._cursor = int(state["cursor"])
+        self._epoch = int(state["epoch"])
+
+    # -- batches ------------------------------------------------------------
+    def _doc_tokens(self, doc_ids: np.ndarray) -> np.ndarray:
+        """Deterministic per-doc token synthesis (stand-in tokenizer).
+
+        Tokens follow a noisy per-document arithmetic progression so the
+        stream is *learnable* (next-token structure exists), which lets the
+        example trainer demonstrate real loss descent.
+        """
+        out = np.empty((len(doc_ids), self.seq_len), np.int32)
+        v = self.vocab_size
+        for i, d in enumerate(doc_ids):
+            rng = np.random.default_rng(int(d) * 1_000_003 + 7)
+            start = rng.integers(0, v)
+            step = 1 + int(d) % 7
+            seq = (start + step * np.arange(self.seq_len)) % v
+            noise = rng.random(self.seq_len) < 0.1
+            seq = np.where(noise, rng.integers(0, v, self.seq_len), seq)
+            out[i] = seq.astype(np.int32)
+        return out
+
+    def __iter__(self) -> Iterator[Dict[str, np.ndarray]]:
+        return self
+
+    def __next__(self) -> Dict[str, np.ndarray]:
+        n = len(self._order)
+        per_rank = self.batch_size // self.dp_size
+        need = per_rank * self.dp_size
+        if self._cursor + need > n:
+            self._epoch += 1
+            rng = np.random.default_rng(self.seed + 17 + self._epoch)
+            self._order = rng.permutation(self.selected_docs)
+            self._cursor = 0
+        take = self._order[self._cursor : self._cursor + need]
+        self._cursor += need
+        mine = take[self.dp_rank :: self.dp_size]  # strided => elastic-friendly
+        return {"tokens": self._doc_tokens(mine)}

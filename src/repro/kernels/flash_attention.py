@@ -1,0 +1,137 @@
+"""Pallas TPU kernel: blocked (flash) attention with causal/sliding window.
+
+The model-side compute hot spot.  Online-softmax attention tiled for VMEM:
+grid (batch*heads, q blocks, k blocks), with the running max / normalizer /
+accumulator held in VMEM scratch across the k-block loop.  Causal and
+sliding-window masks are applied per tile, and k-blocks that are entirely
+masked for a q-block are skipped via ``pl.when`` — on TPU this prunes ~half
+the MXU work for causal training and all-but-`window` for local layers
+(gemma3's 5:1 local:global pattern leans on this).
+
+Layouts: q (B, H, S, D), k/v (B, H, T, D), block shapes (1, bq, D)/(1, bk, D)
+with D padded to lanes; bq/bk default 128/128 (MXU tile) — set smaller for
+interpret-mode tests.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _attn_kernel(
+    q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+    bq: int, bk: int, t_total: int, s_total: int, causal: bool, window: int, scale: float,
+):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    # Absolute positions; q positions are end-aligned with k (decode-friendly).
+    offset = t_total - s_total
+    q_pos = qi * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0) + offset
+    k_pos = ki * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+
+    # Tile-level skip: causal => skip k-tiles strictly in the future;
+    # window  => skip k-tiles entirely left of every q's window.
+    q_lo = qi * bq + offset
+    q_hi = q_lo + bq - 1
+    k_lo = ki * bk
+    k_hi = k_lo + bk - 1
+    live = True
+    if causal:
+        live = jnp.logical_and(live, k_lo <= q_hi)
+    if window and window > 0:
+        live = jnp.logical_and(live, k_hi > q_lo - window)
+
+    @pl.when(live)
+    def _step():
+        q = q_ref[0].astype(jnp.float32) * scale  # (bq, d)
+        k = k_ref[0].astype(jnp.float32)  # (bk, d)
+        v = v_ref[0].astype(jnp.float32)  # (bk, d)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        )  # (bq, bk)
+        mask = k_pos < t_total  # padding mask
+        if causal:
+            mask &= k_pos <= q_pos
+        if window and window > 0:
+            mask &= k_pos > q_pos - window
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_scr[...]  # (bq, 1)
+        m_new = jnp.maximum(m_prev, s.max(axis=1, keepdims=True))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new)  # (bq, bk)
+        l_scr[...] = l_scr[...] * alpha + p.sum(axis=1, keepdims=True)
+        acc_scr[...] = acc_scr[...] * alpha + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+        )
+        m_scr[...] = m_new
+
+    @pl.when(ki == nk - 1)
+    def _finish():
+        l = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0] = (acc_scr[...] / l).astype(o_ref.dtype)
+
+
+def flash_attention_pallas(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    causal: bool = True,
+    window: int = 0,
+    bq: int = 128,
+    bk: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    """softmax(QK^T/sqrt(d))V, shapes q (B,H,S,D), k/v (B,H,T,D)."""
+    b, h, s, d = q.shape
+    t = k.shape[2]
+    bq_ = min(bq, s)
+    bk_ = min(bk, t)
+    s_pad = -s % bq_
+    t_pad = -t % bk_
+    qp = jnp.pad(q, ((0, 0), (0, 0), (0, s_pad), (0, 0)))
+    kp = jnp.pad(k, ((0, 0), (0, 0), (0, t_pad), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, 0), (0, t_pad), (0, 0)))
+    bh = b * h
+    qp = qp.reshape(bh, s + s_pad, d)
+    kp = kp.reshape(bh, t + t_pad, d)
+    vp = vp.reshape(bh, t + t_pad, d)
+    grid = (bh, (s + s_pad) // bq_, (t + t_pad) // bk_)
+    scale = 1.0 / (d**0.5)
+
+    out = pl.pallas_call(
+        functools.partial(
+            _attn_kernel,
+            bq=bq_, bk=bk_, t_total=t, s_total=s,
+            causal=causal, window=window, scale=scale,
+        ),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bq_, d), lambda bh_, qi, ki: (bh_, qi, 0)),
+            pl.BlockSpec((1, bk_, d), lambda bh_, qi, ki: (bh_, ki, 0)),
+            pl.BlockSpec((1, bk_, d), lambda bh_, qi, ki: (bh_, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq_, d), lambda bh_, qi, ki: (bh_, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, s + s_pad, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq_, 1), jnp.float32),
+            pltpu.VMEM((bq_, 1), jnp.float32),
+            pltpu.VMEM((bq_, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qp, kp, vp)
+    return out.reshape(b, h, s + s_pad, d)[:, :, :s, :]

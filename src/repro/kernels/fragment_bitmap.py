@@ -1,0 +1,76 @@
+"""Pallas TPU kernel: fragment-membership bitmap (sketch capture hot loop).
+
+Computes ``bits[r] = OR_{rows i in fragment r} prov[i]`` — the inner loop of
+``capture_sketch``.  The TPU adaptation replaces the row-at-a-time scatter a
+CPU engine would use with a *one-hot compare + column-max* over VMEM tiles:
+each grid step loads a (ROWS_PER_TILE,)-row tile of (bucket, prov) into VMEM,
+materializes the (rows x ranges) one-hot incidence in registers/VMEM, reduces
+over rows with a max, and accumulates into the bitmap block that stays
+resident in VMEM across the whole grid (index_map pins it to block 0).
+
+VMEM budget per step (defaults): 2048 x 1024 int8 one-hot ≈ 2 MiB + tiles,
+comfortably inside the ~16 MiB v5e VMEM while leaving room for double
+buffering of the streamed row tiles.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+ROWS_PER_TILE = 2048
+LANE = 128
+
+
+def _bitmap_kernel(bucket_ref, prov_ref, out_ref, *, n_ranges_p: int):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    bucket = bucket_ref[...].reshape(-1)  # (rows,)
+    prov = prov_ref[...].reshape(-1)  # (rows,) int32 0/1
+    rows = bucket.shape[0]
+    # One-hot incidence of this tile's rows against every range id.
+    range_ids = jax.lax.broadcasted_iota(jnp.int32, (rows, n_ranges_p), 1)
+    hit = jnp.where((bucket[:, None] == range_ids) & (prov[:, None] > 0), 1, 0)
+    tile_bits = jnp.max(hit, axis=0)  # (n_ranges_p,)
+    out_ref[...] = jnp.maximum(out_ref[...], tile_bits.reshape(out_ref.shape))
+
+
+def fragment_bitmap_pallas(
+    bucket: jax.Array,
+    prov: jax.Array,
+    n_ranges: int,
+    rows_per_tile: int = ROWS_PER_TILE,
+    interpret: bool = False,
+) -> jax.Array:
+    """bits (bool[n_ranges]) from bucket (int32[n]) and prov (bool[n])."""
+    n = bucket.shape[0]
+    n_pad = -n % rows_per_tile
+    # Padding rows point at range 0 with prov=False: they contribute nothing.
+    bucket_p = jnp.pad(bucket.astype(jnp.int32), (0, n_pad))
+    prov_p = jnp.pad(prov.astype(jnp.int32), (0, n_pad))
+    n_ranges_p = n_ranges + (-n_ranges % LANE)
+    n_tiles = (n + n_pad) // rows_per_tile
+
+    # 2-D views so the last dim is lane-aligned on TPU.
+    bucket_2d = bucket_p.reshape(n_tiles * (rows_per_tile // LANE), LANE)
+    prov_2d = prov_p.reshape(n_tiles * (rows_per_tile // LANE), LANE)
+    sub = rows_per_tile // LANE
+
+    out = pl.pallas_call(
+        functools.partial(_bitmap_kernel, n_ranges_p=n_ranges_p),
+        grid=(n_tiles,),
+        in_specs=[
+            pl.BlockSpec((sub, LANE), lambda i: (i, 0)),
+            pl.BlockSpec((sub, LANE), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, n_ranges_p), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((1, n_ranges_p), jnp.int32),
+        interpret=interpret,
+    )(bucket_2d, prov_2d)
+    return out[0, :n_ranges] > 0

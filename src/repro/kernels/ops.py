@@ -1,0 +1,96 @@
+"""jit'd public wrappers for the Pallas kernels.
+
+On TPU the Pallas path compiles natively; on the CPU container the kernels
+run under ``interpret=True`` (Python-evaluated kernel bodies) so correctness
+is validated everywhere.  Callers can force the pure-jnp oracle with
+``backend='ref'`` (the default for large CPU workloads, where interpret-mode
+row loops are slow) — the kernels' tests assert the two paths agree.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.flash_attention import flash_attention_pallas
+from repro.kernels.fragment_bitmap import fragment_bitmap_pallas
+from repro.kernels.segment_aggregate import segment_aggregate_pallas
+from repro.kernels.sketch_filter import sketch_filter_pallas
+
+Array = jax.Array
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _mode(backend: Optional[str]) -> str:
+    """'pallas' | 'interpret' | 'ref'."""
+    if backend is not None:
+        return backend
+    return "pallas" if _on_tpu() else "ref"
+
+
+@functools.partial(jax.jit, static_argnums=(2, 3))
+def _fragment_bitmap_jit(prov, bucket, n_ranges, mode):
+    if mode == "pallas":
+        return fragment_bitmap_pallas(bucket, prov, n_ranges)
+    if mode == "interpret":
+        return fragment_bitmap_pallas(bucket, prov, n_ranges, interpret=True)
+    return ref.fragment_bitmap_ref(prov, bucket, n_ranges)
+
+
+def fragment_bitmap(prov: Array, bucket: Array, n_ranges: int, backend: Optional[str] = None) -> Array:
+    return _fragment_bitmap_jit(prov, bucket, n_ranges, _mode(backend))
+
+
+@functools.partial(jax.jit, static_argnums=(2,))
+def _sketch_filter_jit(bucket, bits, mode):
+    if mode == "pallas":
+        return sketch_filter_pallas(bucket, bits)
+    if mode == "interpret":
+        return sketch_filter_pallas(bucket, bits, interpret=True)
+    return ref.sketch_filter_ref(bucket, bits)
+
+
+def sketch_filter(bucket: Array, bits: Array, backend: Optional[str] = None) -> Array:
+    return _sketch_filter_jit(bucket, bits, _mode(backend))
+
+
+@functools.partial(jax.jit, static_argnums=(2, 4))
+def _segment_aggregate_jit(values, gid, n_groups, weights, mode):
+    if mode == "pallas":
+        return segment_aggregate_pallas(values, gid, n_groups, weights)
+    if mode == "interpret":
+        return segment_aggregate_pallas(values, gid, n_groups, weights, interpret=True)
+    return ref.segment_aggregate_ref(values, gid, n_groups, weights)
+
+
+def segment_aggregate(
+    values: Array,
+    gid: Array,
+    n_groups: int,
+    weights: Optional[Array] = None,
+    backend: Optional[str] = None,
+) -> Tuple[Array, Array]:
+    return _segment_aggregate_jit(values, gid, n_groups, weights, _mode(backend))
+
+
+@functools.partial(jax.jit, static_argnums=(3, 4, 5))
+def _flash_attention_jit(q, k, v, causal, window, mode):
+    if mode == "pallas":
+        return flash_attention_pallas(q, k, v, causal=causal, window=window)
+    if mode == "interpret":
+        return flash_attention_pallas(q, k, v, causal=causal, window=window, bq=64, bk=64, interpret=True)
+    return ref.flash_attention_ref(q, k, v, causal=causal, window=window)
+
+
+def flash_attention(
+    q: Array, k: Array, v: Array, causal: bool = True, window: int = 0,
+    backend: Optional[str] = None,
+) -> Array:
+    """Dispatches Pallas on TPU, reference math elsewhere (used by models)."""
+    return _flash_attention_jit(q, k, v, causal, window, _mode(backend))

@@ -1,0 +1,56 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness contract)."""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def fragment_bitmap_ref(prov: Array, bucket: Array, n_ranges: int) -> Array:
+    """bits[r] = OR over rows in fragment r of the provenance mask."""
+    hits = jax.ops.segment_max(
+        prov.astype(jnp.int32), bucket, num_segments=n_ranges
+    )
+    return hits > 0
+
+
+def sketch_filter_ref(bucket: Array, bits: Array) -> Array:
+    """keep[i] = bits[bucket[i]] — the sketch's disjunction-of-ranges."""
+    return bits.astype(bool)[bucket]
+
+
+def segment_aggregate_ref(
+    values: Array, gid: Array, n_groups: int, weights: Optional[Array] = None
+) -> Tuple[Array, Array]:
+    """(sums, counts) per group with optional row weights (WHERE mask)."""
+    w = jnp.ones_like(values, dtype=jnp.float32) if weights is None else weights.astype(jnp.float32)
+    v = values.astype(jnp.float32)
+    sums = jax.ops.segment_sum(v * w, gid, num_segments=n_groups)
+    counts = jax.ops.segment_sum(w, gid, num_segments=n_groups)
+    return sums, counts
+
+
+def flash_attention_ref(
+    q: Array, k: Array, v: Array, causal: bool = True, window: int = 0
+) -> Array:
+    """O = softmax(QK^T / sqrt(d)) V with optional causal/sliding-window mask.
+
+    Shapes: q (B, H, S, D), k/v (B, H, T, D). float32 math.
+    """
+    qf, kf, vf = q.astype(jnp.float32), k.astype(jnp.float32), v.astype(jnp.float32)
+    scale = 1.0 / jnp.sqrt(qf.shape[-1]).astype(jnp.float32)
+    logits = jnp.einsum("bhsd,bhtd->bhst", qf, kf) * scale
+    s, t = qf.shape[2], kf.shape[2]
+    qpos = jnp.arange(s)[:, None] + (t - s)  # align ends (decode-friendly)
+    kpos = jnp.arange(t)[None, :]
+    mask = jnp.ones((s, t), dtype=bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window and window > 0:
+        mask &= kpos > qpos - window
+    logits = jnp.where(mask[None, None], logits, -1e30)
+    p = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("bhst,bhtd->bhsd", p, vf).astype(q.dtype)

@@ -1,0 +1,91 @@
+"""Pallas TPU kernel: segmented aggregation (group-by SUM/COUNT hot loop).
+
+Hash aggregation does not map to the TPU; the MXU does.  For a row tile and a
+group block we materialize the one-hot membership matrix in VMEM and issue a
+single (groups x rows) @ (rows x 2) matmul producing the per-group [sum,
+count] partials, accumulated in the VMEM-resident output block across row
+tiles.  A 2-D grid (group blocks x row tiles) scales to group counts far
+beyond one block: the inner (row) dimension iterates fastest so each group
+block's accumulator stays resident while rows stream.
+
+MXU alignment: the contraction dim is the row tile (2048 = 16*128) and the
+output dims are (GROUP_BLOCK, 128-lane pairs); both multiples of the 128x128
+systolic tile.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+ROWS_PER_TILE = 2048
+GROUP_BLOCK = 512
+LANE = 128
+
+
+def _segagg_kernel(gid_ref, val_ref, w_ref, out_ref, *, group_block: int):
+    g = pl.program_id(0)
+    r = pl.program_id(1)
+
+    @pl.when(r == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    gid = gid_ref[...].reshape(-1)  # (rows,)
+    vals = val_ref[...].reshape(-1).astype(jnp.float32)
+    w = w_ref[...].reshape(-1).astype(jnp.float32)
+    rows = gid.shape[0]
+
+    local = gid - g * group_block
+    group_ids = jax.lax.broadcasted_iota(jnp.int32, (rows, group_block), 1)
+    onehot = (local[:, None] == group_ids).astype(jnp.float32)  # (rows, G)
+    # (G, rows) @ (rows, 2) on the MXU: columns are [sum, count].
+    vw = jnp.stack([vals * w, w], axis=1)  # (rows, 2)
+    partial = jax.lax.dot_general(
+        onehot, vw, (((0,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )  # (G, 2)
+    out_ref[...] += partial.reshape(out_ref.shape)
+
+
+def segment_aggregate_pallas(
+    values: jax.Array,
+    gid: jax.Array,
+    n_groups: int,
+    weights: jax.Array | None = None,
+    rows_per_tile: int = ROWS_PER_TILE,
+    group_block: int = GROUP_BLOCK,
+    interpret: bool = False,
+):
+    """(sums f32[n_groups], counts f32[n_groups]) via one-hot MXU matmuls."""
+    n = values.shape[0]
+    w = jnp.ones_like(values, dtype=jnp.float32) if weights is None else weights.astype(jnp.float32)
+    n_pad = -n % rows_per_tile
+    # Padded rows get gid = -1: they match no group block.
+    gid_p = jnp.pad(gid.astype(jnp.int32), (0, n_pad), constant_values=-1)
+    val_p = jnp.pad(values.astype(jnp.float32), (0, n_pad))
+    w_p = jnp.pad(w, (0, n_pad))
+    n_tiles = (n + n_pad) // rows_per_tile
+    n_gblocks = (n_groups + group_block - 1) // group_block
+    sub = rows_per_tile // LANE
+
+    gid_2d = gid_p.reshape(n_tiles * sub, LANE)
+    val_2d = val_p.reshape(n_tiles * sub, LANE)
+    w_2d = w_p.reshape(n_tiles * sub, LANE)
+
+    out = pl.pallas_call(
+        functools.partial(_segagg_kernel, group_block=group_block),
+        grid=(n_gblocks, n_tiles),
+        in_specs=[
+            pl.BlockSpec((sub, LANE), lambda g, r: (r, 0)),
+            pl.BlockSpec((sub, LANE), lambda g, r: (r, 0)),
+            pl.BlockSpec((sub, LANE), lambda g, r: (r, 0)),
+        ],
+        out_specs=pl.BlockSpec((group_block, 2), lambda g, r: (g, 0)),
+        out_shape=jax.ShapeDtypeStruct((n_gblocks * group_block, 2), jnp.float32),
+        interpret=interpret,
+    )(gid_2d, val_2d, w_2d)
+    sums = out[:n_groups, 0]
+    counts = out[:n_groups, 1]
+    return sums, counts

@@ -1,0 +1,65 @@
+"""Pallas TPU kernel: sketch application (the data-skipping scan).
+
+``keep[i] = bits[bucket[i]]`` — translating a sketch into a row keep-mask.
+TPUs have no fast arbitrary gather, so the lookup is expressed as a one-hot
+contraction against the bitmap, which the compiler maps onto the VPU: for a
+row tile we compute ``max_r bits[r] * (bucket == r)``.  The bitmap block is
+pinned in VMEM across the grid; row tiles stream through with the usual
+double buffering.  On real partitioned tables the fragment-major layout makes
+``bits`` constant per tile, degenerating this to a broadcast — that case is
+handled upstream by simply not scheduling skipped fragments (see
+``repro/data/pipeline.py``); this kernel covers the unsorted fallback.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+ROWS_PER_TILE = 2048
+LANE = 128
+
+
+def _filter_kernel(bucket_ref, bits_ref, out_ref, *, n_ranges_p: int):
+    bucket = bucket_ref[...].reshape(-1)  # (rows,)
+    bits = bits_ref[...].reshape(-1)  # (n_ranges_p,)
+    rows = bucket.shape[0]
+    range_ids = jax.lax.broadcasted_iota(jnp.int32, (rows, n_ranges_p), 1)
+    onehot = (bucket[:, None] == range_ids).astype(jnp.int32)
+    keep = jnp.max(onehot * bits[None, :], axis=1)  # (rows,)
+    out_ref[...] = keep.reshape(out_ref.shape)
+
+
+def sketch_filter_pallas(
+    bucket: jax.Array,
+    bits: jax.Array,
+    rows_per_tile: int = ROWS_PER_TILE,
+    interpret: bool = False,
+) -> jax.Array:
+    """keep (bool[n]) from bucket (int32[n]) and bits (bool[n_ranges])."""
+    n = bucket.shape[0]
+    n_ranges = bits.shape[0]
+    n_pad = -n % rows_per_tile
+    bucket_p = jnp.pad(bucket.astype(jnp.int32), (0, n_pad))
+    n_ranges_p = n_ranges + (-n_ranges % LANE)
+    bits_p = jnp.pad(bits.astype(jnp.int32), (0, n_ranges_p - n_ranges))
+    n_tiles = (n + n_pad) // rows_per_tile
+    sub = rows_per_tile // LANE
+
+    bucket_2d = bucket_p.reshape(n_tiles * sub, LANE)
+    bits_2d = bits_p.reshape(1, n_ranges_p)
+
+    out = pl.pallas_call(
+        functools.partial(_filter_kernel, n_ranges_p=n_ranges_p),
+        grid=(n_tiles,),
+        in_specs=[
+            pl.BlockSpec((sub, LANE), lambda i: (i, 0)),
+            pl.BlockSpec((1, n_ranges_p), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((sub, LANE), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n_tiles * sub, LANE), jnp.int32),
+        interpret=interpret,
+    )(bucket_2d, bits_2d)
+    return out.reshape(-1)[:n] > 0

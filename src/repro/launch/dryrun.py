@@ -1,0 +1,391 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell we build abstract inputs (ShapeDtypeStruct only — nothing is
+allocated), attach NamedShardings from the logical-axis rules, and run
+``jax.jit(step).lower(...).compile()`` against the production mesh.  The
+compiled artifact yields:
+  - memory_analysis(): per-device bytes (proves the cell fits),
+  - cost_analysis(): HLO FLOPs / bytes for the roofline terms,
+  - as_text(): optimized HLO, parsed for collective bytes.
+
+Results append to a JSON cache (benchmarks/dryrun_results.json by default)
+keyed by (arch, shape, mesh, tag) so reruns skip green cells and the §Perf
+hillclimb records variants under distinct tags.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch stablelm-1.6b --shape train_4k --mesh single
+  PYTHONPATH=src python -m repro.launch.dryrun --all --mesh single
+  PYTHONPATH=src python -m repro.launch.dryrun --all --mesh multi
+"""
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec
+
+from repro.configs import ARCHS, cell_is_runnable, get_config
+from repro.launch.hlo_stats import analyze_hlo
+from repro.launch.mesh import make_production_mesh
+from repro.models import lm
+from repro.models.config import SHAPES, ModelConfig, ShapeConfig
+from repro.optim.adamw import OptConfig
+from repro.parallel import sharding as shd
+from repro.train.step import TrainSpec, abstract_train_state, make_decode_step, make_prefill_step, make_train_step
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "..", "..", "benchmarks", "dryrun_results.json")
+
+
+# --------------------------------------------------------------------------
+# Per-(arch, shape) fitting knobs.  Defaults first; overrides below are part
+# of the §Perf iteration log (EXPERIMENTS.md references these by tag).
+# --------------------------------------------------------------------------
+
+def tuning_for(arch: str, shape: str, mesh_kind: str = "single") -> TrainSpec:
+    n_micro = {"train_4k": 4}.get(shape, 1)
+    opt = OptConfig()
+    acc = "float32"
+    if arch == "jamba-1.5-large-398b":
+        # 398B: bf16 moments + master-less updates + bf16 grad accumulator.
+        # DP extent doubles multi-pod: microbatch must stay shardable (>=dp).
+        n_micro = 8 if mesh_kind == "multi" else 16
+        opt = OptConfig(opt_dtype="bfloat16", use_master=False)
+        acc = "bfloat16"
+    if arch == "qwen1.5-32b":
+        n_micro = 16
+    if arch == "internlm2-20b" and shape == "train_4k":
+        n_micro = 16
+    if arch == "gemma3-27b" and shape == "train_4k":
+        n_micro = 16
+    return TrainSpec(microbatch=n_micro, opt=opt, acc_dtype=acc)
+
+
+# Per-cell config overrides (part of the baseline fitting story; see
+# EXPERIMENTS.md §Dry-run).  f8 KV cache: 32k ctx x batch 128 x 48-head MHA
+# is a 6.6 TB cache in bf16 — f8 storage is the production fix.
+CFG_OVERRIDES: Dict[Tuple[str, str], Dict[str, Any]] = {
+    ("qwen1.5-32b", "decode_32k"): {"kv_dtype": "float8_e4m3fn"},
+}
+
+
+# --------------------------------------------------------------------------
+# Abstract inputs
+# --------------------------------------------------------------------------
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def input_specs(cfg: ModelConfig, sh: ShapeConfig, spec: TrainSpec) -> Dict[str, Any]:
+    """ShapeDtypeStruct stand-ins for every model input of this cell."""
+    b, s = sh.global_batch, sh.seq_len
+    if sh.kind == "train":
+        nm = spec.microbatch
+        mb = b // nm
+        if cfg.frontend == "vision":
+            text = s - cfg.n_frontend_tokens
+            return {
+                "tokens": _sds((nm, mb, text), jnp.int32),
+                "frontend": _sds((nm, mb, cfg.n_frontend_tokens, cfg.frontend_dim), jnp.bfloat16),
+            }
+        if cfg.is_encdec:
+            return {
+                "tokens": _sds((nm, mb, s // 2), jnp.int32),
+                "frames": _sds((nm, mb, s // 2, cfg.frontend_dim), jnp.bfloat16),
+            }
+        return {"tokens": _sds((nm, mb, s), jnp.int32)}
+    if sh.kind == "prefill":
+        if cfg.frontend == "vision":
+            text = s - cfg.n_frontend_tokens
+            return {
+                "tokens": _sds((b, text), jnp.int32),
+                "frontend": _sds((b, cfg.n_frontend_tokens, cfg.frontend_dim), jnp.bfloat16),
+            }
+        if cfg.is_encdec:
+            return {
+                "tokens": _sds((b, s // 2), jnp.int32),
+                "frames": _sds((b, s // 2, cfg.frontend_dim), jnp.bfloat16),
+            }
+        return {"tokens": _sds((b, s), jnp.int32)}
+    # decode: one new token against a seq_len cache
+    cross = s // 2 if cfg.is_encdec else 0
+    cache = lm.abstract_cache(cfg, b, s, cross_len=cross)
+    return {
+        "cache": cache,
+        "token": _sds((b,), jnp.int32),
+        "pos": _sds((), jnp.int32),
+    }
+
+
+# --------------------------------------------------------------------------
+# Lower + compile one cell
+# --------------------------------------------------------------------------
+
+
+def lower_cell(arch: str, shape: str, mesh, spec: Optional[TrainSpec] = None,
+               cfg_overrides: Optional[Dict[str, Any]] = None,
+               variant: str = "baseline"):
+    """variant: 'baseline' | 'dponly' (no TP, DP over the whole mesh) |
+    'seqpar' (Megatron sequence parallelism on the residual stream) |
+    'rematdots' (save matmul outputs instead of full recompute)."""
+    cfg = get_config(arch)
+    if variant == "rematdots":
+        cfg = dataclasses.replace(cfg, remat="dots")
+    if cfg_overrides:
+        cfg = dataclasses.replace(cfg, **cfg_overrides)
+    sh = SHAPES[shape]
+    spec = spec or tuning_for(arch, shape)
+    if variant == "dponly" and sh.kind == "train":
+        # pure DP over the whole mesh: the microbatch must divide by ALL chips
+        spec = dataclasses.replace(spec, microbatch=1)
+    param_spec_tree = lm.build_param_spec(cfg)
+    rest_rules = shd.DP_ONLY_RULES if variant == "dponly" else shd.DEFAULT_RULES
+    pspec_tree = shd.param_pspecs(param_spec_tree, mesh, rules=rest_rules)
+    params_sh = shd.to_shardings(mesh, pspec_tree)
+    abs_params = lm.abstract_params(cfg)
+    ins = input_specs(cfg, sh, spec)
+
+    # Compute-time (ZeRO-3 gather-point) specs, looked up by subtree inside
+    # the model via the activation-sharding context.
+    if variant == "dponly":
+        # fully gathered at compute (pure DP), ZeRO-3 at rest
+        from repro.models.params import tree_map_p
+
+        gather_all = {k: () for k in shd.DEFAULT_RULES}
+
+        def leaf(p):
+            s = shd.spec_for(p, mesh, gather_all)
+            if p.axes and p.axes[0] == "layers":
+                return PartitionSpec(*tuple(s)[1:])
+            return s
+
+        cps = tree_map_p(leaf, param_spec_tree)
+    elif variant in ("moe2d", "all2d"):
+        from repro.models.params import tree_map_p
+
+        rules2 = shd.MOE2D_COMPUTE_RULES if variant == "moe2d" else shd.ALL2D_COMPUTE_RULES
+
+        def leaf2(p):
+            s = shd.spec_for(p, mesh, rules2)
+            if p.axes and p.axes[0] == "layers":
+                return PartitionSpec(*tuple(s)[1:])
+            return s
+
+        cps = tree_map_p(leaf2, param_spec_tree)
+    else:
+        cps = shd.compute_pspecs(param_spec_tree, mesh)
+    compute_specs = {
+        "periods": cps["periods"],
+        "embed": cps["embed"],
+        "lm_head": cps["lm_head"],
+    }
+    if "rem" in cps:
+        compute_specs["rem"] = cps["rem"]
+    if cfg.is_encdec:
+        compute_specs["encoder_layers"] = cps["encoder"]["layers"]
+
+    from repro.parallel.context import activation_sharding
+
+    seq_axis = "model" if variant == "seqpar" else None
+
+    if sh.kind == "train":
+        state = abstract_train_state(cfg, spec)
+        opt_sh = {
+            "m": params_sh, "v": params_sh,
+            "step": NamedSharding(mesh, PartitionSpec()),
+        }
+        if "master" in state["opt"]:
+            opt_sh["master"] = params_sh
+        state_sh = {"params": params_sh, "opt": opt_sh}
+        mb = sh.global_batch // spec.microbatch
+        ba = shd.dp_batch_axes(mesh, mb) if variant == "dponly" else shd.batch_axes(mesh, mb)
+        batch_sh = jax.tree_util.tree_map(
+            lambda x: NamedSharding(mesh, PartitionSpec(None, ba, *([None] * (x.ndim - 2)))),
+            ins,
+        )
+        fn = make_train_step(cfg, spec)
+        jitted = jax.jit(
+            fn,
+            in_shardings=(state_sh, batch_sh),
+            donate_argnums=(0,),
+        )
+        with activation_sharding(mesh, ba, compute_specs, seq_axis=seq_axis):
+            return jitted.lower(state, ins), cfg, spec
+
+    if sh.kind == "prefill":
+        # Serving path: weights live in the serving layout (no FSDP, hidden
+        # dims take every axis) and never move; tokens/partials move instead.
+        serve_params_sh = shd.to_shardings(
+            mesh, shd.param_pspecs(param_spec_tree, mesh, rules=shd.SERVING_RULES)
+        )
+        rps = shd.resident_pspecs(param_spec_tree, mesh)
+        serve_specs = {"periods": rps["periods"], "embed": rps["embed"], "lm_head": rps["lm_head"]}
+        if "rem" in rps:
+            serve_specs["rem"] = rps["rem"]
+        if cfg.is_encdec:
+            serve_specs["encoder_layers"] = rps["encoder"]["layers"]
+        ba = shd.batch_axes(mesh, sh.global_batch)
+        batch_sh = jax.tree_util.tree_map(
+            lambda x: NamedSharding(mesh, PartitionSpec(ba, *([None] * (x.ndim - 1)))), ins
+        )
+        fn = make_prefill_step(cfg)
+        jitted = jax.jit(fn, in_shardings=(serve_params_sh, batch_sh))
+        with activation_sharding(mesh, ba, serve_specs):
+            return jitted.lower(abs_params, ins), cfg, spec
+
+    # decode: weights live in the serving layout and never move (a decode
+    # step has no reuse to amortize gathers; tiny activation partial-sums
+    # cross the ICI instead).
+    serve_params_sh = shd.to_shardings(
+        mesh, shd.param_pspecs(param_spec_tree, mesh, rules=shd.SERVING_RULES)
+    )
+    rps = shd.resident_pspecs(param_spec_tree, mesh)
+    compute_specs = {"periods": rps["periods"], "embed": rps["embed"], "lm_head": rps["lm_head"]}
+    if "rem" in rps:
+        compute_specs["rem"] = rps["rem"]
+    if cfg.is_encdec:
+        compute_specs["encoder_layers"] = rps["encoder"]["layers"]
+    ba = shd.batch_axes(mesh, sh.global_batch)
+    cache_ps = shd.cache_pspecs(cfg, mesh, ins["cache"], sh.global_batch)
+    cache_sh = shd.to_shardings(mesh, cache_ps)
+    tok_sh = NamedSharding(mesh, PartitionSpec(ba))
+    pos_sh = NamedSharding(mesh, PartitionSpec())
+    fn = make_decode_step(cfg)
+    jitted = jax.jit(
+        fn,
+        in_shardings=(serve_params_sh, cache_sh, tok_sh, pos_sh),
+        donate_argnums=(1,),
+    )
+    with activation_sharding(mesh, ba, compute_specs):
+        return jitted.lower(abs_params, ins["cache"], ins["token"], ins["pos"]), cfg, spec
+
+
+def analyze(lowered, mesh) -> Dict[str, Any]:
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0]
+    hlo = compiled.as_text()
+    stats = analyze_hlo(hlo)
+    n_dev = int(np.prod(mesh.devices.shape))
+    out = {
+        "compile_s": round(t_compile, 1),
+        "n_devices": n_dev,
+        # Per-device numbers (post-SPMD HLO), loop-multiplier-aware.
+        "flops_per_device": float(stats["dot_flops"]),
+        "collective_bytes_per_device": float(stats["collective_bytes"]),
+        "collective_by_kind": {k: float(v) for k, v in stats["collective_by_kind"].items()},
+        "n_dot_sites": int(stats["n_dot_sites"]),
+        "while_trips": stats["while_trips"],
+        # Entry-computation-only numbers from XLA (for cross-checking).
+        "xla_entry_flops": float(cost.get("flops", 0.0)),
+        "xla_entry_bytes": float(cost.get("bytes accessed", 0.0)),
+        "memory": {
+            "argument_bytes": getattr(mem, "argument_size_in_bytes", 0),
+            "output_bytes": getattr(mem, "output_size_in_bytes", 0),
+            "temp_bytes": getattr(mem, "temp_size_in_bytes", 0),
+            "alias_bytes": getattr(mem, "alias_size_in_bytes", 0),
+            "code_bytes": getattr(mem, "generated_code_size_in_bytes", 0),
+        },
+        "hlo_bytes": len(hlo),
+    }
+    return out
+
+
+def run_cell(arch: str, shape: str, mesh_kind: str, tag: str = "baseline",
+             cfg_overrides: Optional[Dict[str, Any]] = None,
+             spec: Optional[TrainSpec] = None,
+             variant: str = "baseline") -> Dict[str, Any]:
+    ok, why = cell_is_runnable(arch, shape)
+    if not ok:
+        return {"arch": arch, "shape": shape, "mesh": mesh_kind, "tag": tag,
+                "status": "skipped", "reason": why}
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    try:
+        spec = spec or tuning_for(arch, shape, mesh_kind)
+        if cfg_overrides is None:
+            cfg_overrides = CFG_OVERRIDES.get((arch, shape))
+        lowered, cfg, spec = lower_cell(arch, shape, mesh, spec=spec,
+                                        cfg_overrides=cfg_overrides, variant=variant)
+        res = analyze(lowered, mesh)
+        res.update(
+            arch=arch, shape=shape, mesh=mesh_kind, tag=tag, status="ok",
+            n_params=cfg.param_count(),
+            n_params_active=cfg.param_count(active_only=True),
+        )
+        # memory_analysis() reports the per-device executable already.
+        mem = res["memory"]
+        per_dev = mem["argument_bytes"] + mem["temp_bytes"] + mem["output_bytes"] - mem["alias_bytes"]
+        res["bytes_per_device"] = per_dev
+        print(f"[dryrun] {arch} x {shape} x {mesh_kind} ({tag}): OK "
+              f"compile={res['compile_s']}s flops/dev={res['flops_per_device']:.3e} "
+              f"bytes/dev={per_dev/2**30:.2f}GiB coll/dev={res['collective_bytes_per_device']:.3e}B")
+        return res
+    except Exception as e:  # noqa: BLE001 - record the failure in the cache
+        print(f"[dryrun] {arch} x {shape} x {mesh_kind} ({tag}): FAIL {e}")
+        return {"arch": arch, "shape": shape, "mesh": mesh_kind, "tag": tag,
+                "status": "error", "error": f"{type(e).__name__}: {e}",
+                "trace": traceback.format_exc()[-2000:]}
+
+
+def load_results(path: str) -> Dict[str, Any]:
+    if os.path.exists(path):
+        with open(path) as f:
+            return json.load(f)
+    return {}
+
+
+def save_result(path: str, res: Dict[str, Any]) -> None:
+    all_res = load_results(path)
+    key = f"{res['arch']}|{res['shape']}|{res['mesh']}|{res['tag']}"
+    all_res[key] = res
+    tmp = path + ".tmp"
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    with open(tmp, "w") as f:
+        json.dump(all_res, f, indent=1)
+    os.replace(tmp, path)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCHS)
+    ap.add_argument("--shape", choices=list(SHAPES))
+    ap.add_argument("--mesh", choices=["single", "multi"], default="single")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--tag", default="baseline")
+    ap.add_argument("--variant", default="baseline",
+                    choices=["baseline", "dponly", "seqpar", "rematdots", "moe2d", "all2d"])
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--out", default=os.path.normpath(RESULTS))
+    args = ap.parse_args()
+
+    cells = (
+        [(a, s) for a in ARCHS for s in SHAPES]
+        if args.all
+        else [(args.arch, args.shape)]
+    )
+    existing = load_results(args.out)
+    for arch, shape in cells:
+        key = f"{arch}|{shape}|{args.mesh}|{args.tag}"
+        prev = existing.get(key)
+        if prev and prev.get("status") in ("ok", "skipped") and not args.force:
+            print(f"[dryrun] {key}: cached ({prev['status']})")
+            continue
+        res = run_cell(arch, shape, args.mesh, tag=args.tag, variant=args.variant)
+        save_result(args.out, res)
+
+
+if __name__ == "__main__":
+    main()

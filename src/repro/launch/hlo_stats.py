@@ -1,0 +1,221 @@
+"""HLO-text analysis: collective traffic and dot FLOPs with loop multipliers.
+
+``compiled.cost_analysis()`` only covers the entry computation — everything
+under a ``lax.scan`` (the period stack, grad accumulation, attention chunks)
+lives in separate while-body computations and is invisible to it.  This
+module walks the optimized HLO text instead:
+
+  1. split into computations; build the call graph (fusion ``calls=``,
+     ``body=``/``condition=`` of whiles, ``branch_computations``, ``to_apply``);
+  2. recover while trip counts from the loop condition's s32 constant;
+  3. propagate multiplicities through the graph (a collective inside the
+     period scan inside the grad-accum scan counts n_periods * n_micro times);
+  4. sum (a) result bytes of all-gather / all-reduce / reduce-scatter /
+     all-to-all / collective-permute ops and (b) 2*M*N*K FLOPs of dot ops.
+
+All sizes are per-device (post-SPMD shapes).
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+    "f64": 8, "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_COLL_RE = re.compile(
+    r"\b(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)(?:-start)?\("
+)
+_COLL_DONE_RE = re.compile(
+    r"\b(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)-done\("
+)
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_COMP_HEAD_RE = re.compile(r"^\s*(?:ENTRY\s+)?%?([\w.\-]+)\s*(?:\(|\.)")
+_CALL_EDGE_RE = re.compile(
+    r"(?:calls|body|to_apply)=%?([\w.\-]+)"
+)
+_COND_EDGE_RE = re.compile(r"condition=%?([\w.\-]+)")
+_BRANCH_RE = re.compile(r"branch_computations=\{([^}]*)\}")
+_CONST_S32_RE = re.compile(r"s32\[\]\s+constant\((\d+)\)")
+_DOT_RE = re.compile(r"=\s*([^=]*?)\s*dot\(")
+_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+_OPERANDS_RE = re.compile(r"dot\(\s*%?([\w.\-]+)\s*,")
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(\([^=]*?\)|[a-z0-9]+\[[0-9,]*\](?:\{[^}]*\})?)")
+
+
+def _shape_bytes(s: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(s):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d.strip():
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _shape_dims(s: str) -> List[int]:
+    m = _SHAPE_RE.search(s)
+    if not m:
+        return []
+    return [int(d) for d in m.group(2).split(",") if d.strip()]
+
+
+def _split_computations(hlo: str) -> Dict[str, List[str]]:
+    """computation name -> list of its op lines."""
+    comps: Dict[str, List[str]] = {}
+    cur: Optional[str] = None
+    for raw in hlo.splitlines():
+        line = raw.rstrip()
+        s = line.strip()
+        if not s:
+            continue
+        # Computation headers end with '{' and contain '->'.
+        if s.endswith("{") and "->" in s and ("(" in s):
+            m = re.match(r"^(?:ENTRY\s+)?%?([\w.\-]+)", s)
+            if m:
+                cur = m.group(1)
+                comps[cur] = []
+            continue
+        if s == "}":
+            continue
+        if cur is not None:
+            comps[cur].append(s)
+    return comps
+
+
+def _fixpoint_multipliers(comps, edges, roots) -> Dict[str, float]:
+    mult: Dict[str, float] = {n: 0.0 for n in comps}
+    for r in roots:
+        mult[r] = 1.0
+    for _ in range(len(comps) + 2):
+        new = {n: 0.0 for n in comps}
+        for r in roots:
+            new[r] = 1.0
+        for caller, outs in edges.items():
+            cm = mult.get(caller, 0.0)
+            if cm <= 0:
+                continue
+            for callee, m in outs:
+                if callee in new:
+                    new[callee] += cm * m
+        if all(abs(new[n] - mult[n]) < 1e-6 for n in comps):
+            mult = new
+            break
+        mult = new
+    return mult
+
+
+_TRIP_CFG_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+
+
+def analyze_hlo(hlo: str) -> Dict[str, object]:
+    comps = _split_computations(hlo)
+    edges: Dict[str, List[Tuple[str, float]]] = defaultdict(list)
+    # Fallback trip detection: the loop-condition computation compares the
+    # induction variable against an s32 constant (possibly via a fusion).
+    cond_trip: Dict[str, int] = {}
+    for name, lines in comps.items():
+        consts = [int(m.group(1)) for l in lines for m in _CONST_S32_RE.finditer(l)]
+        if consts and any("compare" in l or "wrapped_compare" in l for l in lines):
+            cond_trip[name] = max(consts)
+    while_trips: Dict[str, float] = {}
+    for name, lines in comps.items():
+        for l in lines:
+            if " while(" in l:
+                cm = _COND_EDGE_RE.search(l)
+                bm = re.search(r"body=%?([\w.\-]+)", l)
+                tm = _TRIP_CFG_RE.search(l)
+                if tm:
+                    trips = float(tm.group(1))
+                elif cm and cm.group(1) in cond_trip:
+                    trips = float(cond_trip[cm.group(1)])
+                else:
+                    trips = 1.0
+                if bm:
+                    edges[name].append((bm.group(1), trips))
+                    while_trips[bm.group(1)] = trips
+                if cm:
+                    edges[name].append((cm.group(1), trips))
+                continue
+            for m in re.finditer(r"(?:calls|to_apply)=%?([\w.\-]+)", l):
+                edges[name].append((m.group(1), 1.0))
+            bm2 = _BRANCH_RE.search(l)
+            if bm2:
+                for b in bm2.group(1).split(","):
+                    b = b.strip().lstrip("%")
+                    if b:
+                        edges[name].append((b, 1.0))
+
+    called = {c for outs in edges.values() for c, _ in outs}
+    roots = [n for n in comps if n not in called] or list(comps)[:1]
+    mult = _fixpoint_multipliers(comps, edges, roots)
+
+    coll_total = 0.0
+    coll_kind: Dict[str, float] = defaultdict(float)
+    flops_total = 0.0
+    n_dots = 0
+    for name, lines in comps.items():
+        m_comp = mult.get(name, 0.0)
+        if m_comp <= 0:
+            continue
+        # Symbol table for operand shapes (needed for dot contraction sizes).
+        shapes: Dict[str, str] = {}
+        for l in lines:
+            dm = _DEF_RE.match(l)
+            if dm:
+                shapes[dm.group(1)] = dm.group(2)
+        for l in lines:
+            if _COLL_DONE_RE.search(l):
+                continue
+            cm = _COLL_RE.search(l)
+            if cm and "=" in l:
+                out_shape = l.split("=", 1)[1].split(cm.group(1))[0]
+                b = _shape_bytes(out_shape)
+                coll_total += b * m_comp
+                coll_kind[cm.group(1)] += b * m_comp
+                continue
+            if " dot(" in l or l.startswith("dot("):
+                dm = _DOT_RE.search(l)
+                if not dm:
+                    continue
+                out_dims = _shape_dims(dm.group(1))
+                lhs_m = _OPERANDS_RE.search(l)
+                con_m = _CONTRACT_RE.search(l)
+                if not (lhs_m and con_m):
+                    continue
+                lhs_shape = shapes.get(lhs_m.group(1), "")
+                lhs_dims = _shape_dims(lhs_shape)
+                cdims = [int(x) for x in con_m.group(1).split(",") if x.strip()]
+                k = 1
+                for c in cdims:
+                    if c < len(lhs_dims):
+                        k *= lhs_dims[c]
+                out_n = 1
+                for d in out_dims:
+                    out_n *= d
+                flops_total += 2.0 * out_n * k * m_comp
+                n_dots += 1
+
+    return {
+        "collective_bytes": coll_total,
+        "collective_by_kind": dict(coll_kind),
+        "dot_flops": flops_total,
+        "n_dot_sites": n_dots,
+        "n_computations": len(comps),
+        "while_trips": while_trips,
+    }
+
+
+def collective_bytes(hlo: str) -> Tuple[int, Dict[str, int]]:
+    res = analyze_hlo(hlo)
+    return int(res["collective_bytes"]), {
+        k: int(v) for k, v in res["collective_by_kind"].items()
+    }

@@ -1,0 +1,18 @@
+"""Production mesh construction (a FUNCTION so importing never touches jax
+device state — the dry-run sets XLA_FLAGS before any jax initialization)."""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 = 256 chips per pod; 2 pods = 512 chips multi-pod."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh():
+    """Whatever this host has (smoke tests / examples): (n_devices, 1)."""
+    n = len(jax.devices())
+    return jax.make_mesh((n, 1), ("data", "model"))

@@ -1,0 +1,83 @@
+"""Serving driver: batched prefill + decode over sketch-filtered requests.
+
+Demonstrates the inference side of the framework: a request pool carries
+metadata (same schema as the corpus); a PBDS sketch filters which requests a
+given serving policy ("serve only domains whose mean quality passes tau")
+touches, then the model prefills the batch and decodes N tokens.
+
+  PYTHONPATH=src python -m repro.launch.serve --arch stablelm-1.6b --smoke \
+      --requests 16 --prompt-len 64 --gen 16
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import ARCHS, get_config
+from repro.data import CurationSpec, make_corpus_metadata
+from repro.models import lm
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCHS, default="stablelm-1.6b")
+    ap.add_argument("--smoke", action="store_true", default=True)
+    ap.add_argument("--requests", type=int, default=16)
+    ap.add_argument("--prompt-len", type=int, default=64)
+    ap.add_argument("--gen", type=int, default=16)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch, smoke=args.smoke)
+    key = jax.random.PRNGKey(args.seed)
+    params = lm.concrete_params(key, cfg)
+
+    # --- sketch-filtered admission ------------------------------------------
+    meta = make_corpus_metadata(n_docs=5_000, seed=args.seed)
+    from repro.data import SketchedDataPipeline
+
+    pipe = SketchedDataPipeline(
+        meta, CurationSpec(), args.requests, args.prompt_len, cfg.vocab_size, seed=args.seed
+    )
+    print(f"[serve] admission sketch on {pipe.run_info.attr}: "
+          f"skipping {pipe.skipped_fraction:.1%} of request pool")
+    batch_raw = next(iter(pipe))
+    tokens = jnp.asarray(batch_raw["tokens"])  # (B, prompt)
+    b = tokens.shape[0]
+
+    # --- prefill + greedy decode ---------------------------------------------
+    batch = {"tokens": tokens}
+    if cfg.frontend == "vision":
+        batch["frontend"] = jnp.zeros((b, cfg.n_frontend_tokens, cfg.frontend_dim), jnp.float32)
+    if cfg.is_encdec:
+        batch["frames"] = jnp.zeros((b, args.prompt_len, cfg.frontend_dim), jnp.float32)
+
+    t0 = time.perf_counter()
+    logits = jax.jit(lambda p, bb: lm.prefill(p, cfg, bb))(params, batch)
+    logits.block_until_ready()
+    t_prefill = time.perf_counter() - t0
+
+    total = args.prompt_len + args.gen
+    cache = lm.init_cache(cfg, b, total, cross_len=args.prompt_len if cfg.is_encdec else 0)
+    decode = jax.jit(lambda p, c, t, pos: lm.decode_step(p, cfg, c, t, pos))
+    # Feed the prompt through the decode path to fill the cache (teacher-forced),
+    # then generate greedily.
+    tok = tokens[:, 0]
+    t0 = time.perf_counter()
+    for i in range(total - 1):
+        logits, cache = decode(params, cache, tok, jnp.asarray(i, jnp.int32))
+        tok = tokens[:, i + 1] if i + 1 < args.prompt_len else jnp.argmax(logits, -1).astype(jnp.int32)
+    jax.block_until_ready(logits)
+    t_decode = time.perf_counter() - t0
+    per_tok = t_decode / (total - 1)
+    print(f"[serve] B={b} prefill({args.prompt_len} tok)={t_prefill*1e3:.0f}ms "
+          f"decode={per_tok*1e3:.1f}ms/tok throughput={b/per_tok:.0f} tok/s")
+    print(f"[serve] finite logits: {bool(jnp.isfinite(logits).all())}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,353 @@
+"""Transformer building blocks: norms, RoPE, GQA attention (full / sliding /
+cross, train & decode paths), SwiGLU MLP, and capacity-based MoE.
+
+All forwards are pure functions over ``P``-spec param trees (see params.py).
+Attention over long sequences uses an online-softmax *chunked* formulation
+(a flash-attention schedule expressed in XLA: lax.scan over KV blocks) so the
+S x T score matrix is never materialized; the Pallas kernel in
+``repro/kernels/flash_attention.py`` is the TPU-native version of the same
+schedule and is swappable via ``attn_impl``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.config import ModelConfig
+from repro.models.params import P
+
+Array = jax.Array
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# Norms & RoPE
+# ---------------------------------------------------------------------------
+
+
+def norm_params(d: int) -> Dict[str, P]:
+    return {"scale": P((d,), ("embed",), init="ones")}
+
+
+def rmsnorm(p: Dict[str, Array], x: Array) -> Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + 1e-6)
+    return (y * p["scale"].astype(jnp.float32)).astype(x.dtype)
+
+
+def rope(x: Array, positions: Array, theta: float) -> Array:
+    """x (..., S, H, hd); positions broadcastable to (..., S)."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freqs = theta ** (-jnp.arange(half, dtype=jnp.float32) / half)
+    ang = positions.astype(jnp.float32)[..., None] * freqs  # (..., S, half)
+    cos = jnp.cos(ang)[..., None, :]  # (..., S, 1, half)
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = x[..., :half].astype(jnp.float32), x[..., half:].astype(jnp.float32)
+    return jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Attention
+# ---------------------------------------------------------------------------
+
+
+def attn_params(cfg: ModelConfig, cross: bool = False) -> Dict[str, Any]:
+    d, hq, hkv, hd = cfg.d_model, cfg.heads_p, cfg.kv_heads_p, cfg.hd
+    p: Dict[str, Any] = {
+        "ln": norm_params(d),
+        "wq": P((d, hq, hd), ("embed", "q_heads", "head_dim")),
+        "wk": P((d, hkv, hd), ("embed", "kv_heads", "head_dim")),
+        "wv": P((d, hkv, hd), ("embed", "kv_heads", "head_dim")),
+        "wo": P((hq, hd, d), ("q_heads", "head_dim", "embed")),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = P((hq, hd), ("q_heads", "head_dim"), init="zeros")
+        p["bk"] = P((hkv, hd), ("kv_heads", "head_dim"), init="zeros")
+        p["bv"] = P((hkv, hd), ("kv_heads", "head_dim"), init="zeros")
+    if cross:
+        p["ln_kv"] = norm_params(d)
+    return p
+
+
+def _qkv(p, cfg: ModelConfig, x: Array, kv_src: Optional[Array] = None):
+    dt = x.dtype
+    src = x if kv_src is None else kv_src
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(dt))
+    k = jnp.einsum("btd,dhk->bthk", src, p["wk"].astype(dt))
+    v = jnp.einsum("btd,dhk->bthk", src, p["wv"].astype(dt))
+    if "bq" in p:
+        q = q + p["bq"].astype(dt)
+        k = k + p["bk"].astype(dt)
+        v = v + p["bv"].astype(dt)
+    return q, k, v
+
+
+def gqa_chunked(
+    q: Array,  # (B, S, Hq, hd)
+    k: Array,  # (B, T, Hkv, hd)
+    v: Array,
+    *,
+    causal: bool,
+    window: int = 0,
+    q_positions: Optional[Array] = None,  # absolute positions of q rows (S,)
+    k_valid: Optional[Array] = None,  # (B, T) bool extra mask (cache validity)
+    k_positions: Optional[Array] = None,  # absolute positions of k slots (T,)
+    chunk: int = 1024,
+) -> Array:
+    """Online-softmax GQA; never materializes (S, T)."""
+    b, s, hq, hd = q.shape
+    t, hkv = k.shape[1], k.shape[2]
+    g = hq // hkv
+    scale = 1.0 / np.sqrt(hd)
+    qg = (q * scale).reshape(b, s, hkv, g, hd)
+
+    if q_positions is None:
+        q_positions = jnp.arange(s) + (t - s)
+    if k_positions is None:
+        k_positions = jnp.arange(t)
+
+    chunk = min(chunk, t)
+    pad = -t % chunk
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        k_positions = jnp.pad(k_positions, (0, pad), constant_values=-1)
+        k_valid = jnp.ones((b, t), bool) if k_valid is None else k_valid
+        k_valid = jnp.pad(k_valid, ((0, 0), (0, pad)))
+    n_chunks = (t + pad) // chunk
+    kc = k.reshape(b, n_chunks, chunk, hkv, hd)
+    vc = v.reshape(b, n_chunks, chunk, hkv, hd)
+    pc = k_positions.reshape(n_chunks, chunk)
+    valc = None if k_valid is None else k_valid.reshape(b, n_chunks, chunk)
+
+    def body(carry, inp):
+        m, l, acc = carry
+        kci, vci, pci, vali = inp
+        logits = jnp.einsum(
+            "bskgd,btkd->bskgt", qg.astype(jnp.float32), kci.astype(jnp.float32)
+        )  # (B,S,Hkv,G,chunk)
+        mask = (pci >= 0)[None, None, :]
+        if vali is not None:
+            mask = mask & vali[:, None, :]
+        mask = mask[:, :, None, None, :]  # (B,S,1,1,chunk)
+        rel = q_positions[None, :, None] - pci[None, None, :]  # (1,S,chunk)
+        if causal:
+            mask = mask & (rel >= 0)[:, :, None, None, :]
+        if window and window > 0:
+            mask = mask & (rel < window)[:, :, None, None, :]
+        logits = jnp.where(mask, logits, NEG_INF)
+        m_new = jnp.maximum(m, logits.max(axis=-1))
+        alpha = jnp.exp(m - m_new)
+        probs = jnp.exp(logits - m_new[..., None])
+        l_new = l * alpha + probs.sum(axis=-1)
+        acc_new = acc * alpha[..., None] + jnp.einsum(
+            "bskgt,btkd->bskgd", probs, vci.astype(jnp.float32)
+        )
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((b, s, hkv, g), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, s, hkv, g), jnp.float32)
+    a0 = jnp.zeros((b, s, hkv, g, hd), jnp.float32)
+    xs = (
+        jnp.moveaxis(kc, 1, 0),
+        jnp.moveaxis(vc, 1, 0),
+        pc,
+        None if valc is None else jnp.moveaxis(valc, 1, 0),
+    )
+    if valc is None:
+        (m, l, acc), _ = jax.lax.scan(
+            lambda c, i: body(c, (i[0], i[1], i[2], None)), (m0, l0, a0), xs[:3]
+        )
+    else:
+        (m, l, acc), _ = jax.lax.scan(body, (m0, l0, a0), xs)
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.reshape(b, s, hq, hd).astype(q.dtype)
+
+
+def attention_train(
+    p, cfg: ModelConfig, x: Array, *, causal: bool = True, window: int = 0,
+    enc: Optional[Array] = None, return_kv: bool = False,
+):
+    """Full-sequence attention (training / encoder / prefill compute)."""
+    h = rmsnorm(p["ln"], x)
+    kv_src = rmsnorm(p["ln_kv"], enc) if enc is not None else None
+    q, k, v = _qkv(p, cfg, h, kv_src)
+    if enc is None:
+        s = x.shape[1]
+        pos = jnp.arange(s)
+        q = rope(q, pos, cfg.rope_theta)
+        k = rope(k, pos, cfg.rope_theta)
+    out = gqa_chunked(q, k, v, causal=causal and enc is None, window=window,
+                      chunk=cfg.attn_chunk)
+    y = jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(x.dtype))
+    if return_kv:
+        return x + y, (k, v)
+    return x + y
+
+
+def init_attn_cache(cfg: ModelConfig, batch: int, length: int, window: int, dtype) -> Dict[str, Any]:
+    t = min(length, window) if window else length
+    shape = (batch, t, cfg.kv_heads_p, cfg.hd)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+def attention_decode(
+    p, cfg: ModelConfig, x: Array, cache: Dict[str, Array], pos: Array,
+    *, window: int = 0,
+) -> Tuple[Array, Dict[str, Array]]:
+    """One decode step. x (B, 1, d); cache k/v (B, T, Hkv, hd); pos scalar."""
+    h = rmsnorm(p["ln"], x)
+    q, k_new, v_new = _qkv(p, cfg, h)
+    q = rope(q, pos[None], cfg.rope_theta)
+    k_new = rope(k_new, pos[None], cfg.rope_theta)
+
+    t = cache["k"].shape[1]
+    slot = jnp.where(window > 0, pos % jnp.maximum(window, 1), pos) if window else pos
+    slot = jnp.minimum(slot, t - 1)
+    k = jax.lax.dynamic_update_slice_in_dim(cache["k"], k_new.astype(cache["k"].dtype), slot, 1)
+    v = jax.lax.dynamic_update_slice_in_dim(cache["v"], v_new.astype(cache["v"].dtype), slot, 1)
+
+    idx = jnp.arange(t)
+    if window:
+        # Ring buffer: slot s holds absolute position pos - ((pos - s) mod W).
+        abs_pos = pos - jnp.mod(pos - idx, window)
+        valid = abs_pos >= 0
+    else:
+        abs_pos = idx
+        valid = idx <= pos
+
+    b, hq = q.shape[0], q.shape[2]
+    hkv = k.shape[2]
+    g = hq // hkv
+    scale = 1.0 / np.sqrt(cfg.hd)
+    # Keys in the cache were stored *with* RoPE already applied at their
+    # absolute positions, so no re-rotation is needed here.  The contraction
+    # reads the (possibly f8) cache in the compute dtype with f32
+    # accumulation — no f32 materialization of the cache.
+    cdt = x.dtype
+    logits = jnp.einsum(
+        "bkgd,btkd->bkgt",
+        (q[:, 0] * scale).reshape(b, hkv, g, cfg.hd).astype(cdt),
+        k.astype(cdt),
+        preferred_element_type=jnp.float32,
+    )
+    logits = jnp.where(valid[None, None, None, :], logits, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum(
+        "bkgt,btkd->bkgd",
+        probs.astype(cdt),
+        v.astype(cdt),
+        preferred_element_type=jnp.float32,
+    )
+    out = out.reshape(b, 1, hq, cfg.hd).astype(x.dtype)
+    y = jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(x.dtype))
+    return x + y, {"k": k, "v": v}
+
+
+# ---------------------------------------------------------------------------
+# FFN: dense SwiGLU + capacity-based MoE
+# ---------------------------------------------------------------------------
+
+
+def mlp_params(cfg: ModelConfig, d_ff: Optional[int] = None) -> Dict[str, Any]:
+    d, ff = cfg.d_model, d_ff or cfg.d_ff
+    return {
+        "ln": norm_params(d),
+        "wg": P((d, ff), ("embed", "ffn")),
+        "wi": P((d, ff), ("embed", "ffn")),
+        "wo": P((ff, d), ("ffn", "embed")),
+    }
+
+
+def mlp(p, cfg: ModelConfig, x: Array, residual: bool = True) -> Array:
+    h = rmsnorm(p["ln"], x)
+    dt = x.dtype
+    g = jnp.einsum("bsd,df->bsf", h, p["wg"].astype(dt))
+    u = jnp.einsum("bsd,df->bsf", h, p["wi"].astype(dt))
+    y = jnp.einsum("bsf,fd->bsd", jax.nn.silu(g) * u, p["wo"].astype(dt))
+    return x + y if residual else y
+
+
+def moe_params(cfg: ModelConfig) -> Dict[str, Any]:
+    d, e, ffe = cfg.d_model, cfg.experts_p, cfg.moe_d_ff
+    p: Dict[str, Any] = {
+        "ln": norm_params(d),
+        "router": P((d, e), ("embed", "experts")),
+        "wg": P((e, d, ffe), ("experts", "embed", "moe_ffn")),
+        "wi": P((e, d, ffe), ("experts", "embed", "moe_ffn")),
+        "wo": P((e, ffe, d), ("experts", "moe_ffn", "embed")),
+    }
+    if cfg.shared_d_ff:
+        p["shared"] = {
+            "wg": P((d, cfg.shared_d_ff), ("embed", "ffn")),
+            "wi": P((d, cfg.shared_d_ff), ("embed", "ffn")),
+            "wo": P((cfg.shared_d_ff, d), ("ffn", "embed")),
+        }
+    return p
+
+
+def moe(p, cfg: ModelConfig, x: Array, group_size: int = 4096) -> Tuple[Array, Array]:
+    """GShard-style top-k dispatch with capacity groups.
+
+    Tokens are split into (batch x sequence-chunk) groups of <= group_size;
+    each group gets its own expert capacity C = ceil(gs*k/E*cf).  The
+    dispatch/combine one-hots are (B, G, gs, E, C) and shard over
+    ('data', None, None, 'model', None); grouping keeps them linear (not
+    quadratic) in sequence length.  Returns (output, aux_load_balance_loss).
+    """
+    b, s, d = x.shape
+    e, k = cfg.experts_p, cfg.experts_per_token
+    gs = min(group_size, s)
+    pad = -s % gs
+    h = rmsnorm(p["ln"], x)
+    dt = x.dtype
+    hp = jnp.pad(h, ((0, 0), (0, pad), (0, 0))) if pad else h
+    ng = (s + pad) // gs
+    hg = hp.reshape(b, ng, gs, d)
+    cap = max(1, int(np.ceil(gs * k / e * cfg.capacity_factor)))
+
+    logits = jnp.einsum("bgsd,de->bgse", hg.astype(jnp.float32), p["router"].astype(jnp.float32))
+    if cfg.padded_experts and cfg.padded_experts > cfg.n_experts:
+        pad_mask = jnp.arange(e) >= cfg.n_experts
+        logits = jnp.where(pad_mask[None, None, None], NEG_INF, logits)
+    if pad:  # padded positions route nowhere
+        valid = (jnp.arange(s + pad) < s).reshape(1, ng, gs, 1)
+        logits = jnp.where(valid, logits, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_vals, top_idx = jax.lax.top_k(probs, k)  # (B,G,gs,k)
+    gates = top_vals / jnp.maximum(top_vals.sum(-1, keepdims=True), 1e-9)
+
+    sel = jax.nn.one_hot(top_idx, e, dtype=jnp.float32)  # (B,G,gs,k,E)
+    mask = sel.sum(3)  # (B,G,gs,E)
+    gate_e = jnp.einsum("bgske,bgsk->bgse", sel, gates)
+
+    pos_in_e = jnp.cumsum(mask, axis=2) - mask  # position within the group
+    keep = (pos_in_e < cap) * mask
+    dispatch = jax.nn.one_hot(pos_in_e, cap, dtype=dt) * keep[..., None].astype(dt)
+    combine = dispatch * gate_e[..., None].astype(dt)  # (B,G,gs,E,C)
+
+    xin = jnp.einsum("bgsec,bgsd->bgecd", dispatch, hg)  # (B,G,E,C,d)
+    gsw = jax.nn.silu(jnp.einsum("bgecd,edf->bgecf", xin, p["wg"].astype(dt)))
+    up = jnp.einsum("bgecd,edf->bgecf", xin, p["wi"].astype(dt))
+    out_e = jnp.einsum("bgecf,efd->bgecd", gsw * up, p["wo"].astype(dt))
+    y = jnp.einsum("bgsec,bgecd->bgsd", combine, out_e)
+    y = y.reshape(b, s + pad, d)[:, :s]
+
+    if "shared" in p:
+        sh = p["shared"]
+        g2 = jnp.einsum("bsd,df->bsf", h, sh["wg"].astype(dt))
+        u2 = jnp.einsum("bsd,df->bsf", h, sh["wi"].astype(dt))
+        y = y + jnp.einsum("bsf,fd->bsd", jax.nn.silu(g2) * u2, sh["wo"].astype(dt))
+
+    # Switch-style load-balance aux loss over the *real* experts.
+    e_real = cfg.n_experts
+    f_e = mask[..., :e_real].mean(axis=(0, 1, 2))
+    p_e = probs[..., :e_real].mean(axis=(0, 1, 2))
+    aux = e_real * jnp.sum(f_e * p_e)
+    return x + y, aux

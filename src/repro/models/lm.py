@@ -1,0 +1,432 @@
+"""Model assembly: decoder-only LMs (dense / MoE / SSM / hybrid patterns) and
+encoder-decoder backbones, with scan-over-periods layer stacking.
+
+The repeating layer pattern (cfg.pattern) is the scan unit: parameters for
+one period are stacked over ``n_periods`` and consumed by ``lax.scan``, which
+keeps HLO size O(period) instead of O(layers) — essential for compiling 62-72
+layer models quickly, and the idiom XLA pipelines FSDP all-gathers around.
+Pattern remainders (e.g. gemma3's 62 = 10*6 + 2) run unrolled after the scan.
+
+Three entry points per model:
+  loss_fn(params, batch)                 -- training loss (+ MoE aux)
+  prefill(params, tokens, ...)           -- full-seq forward -> (logits, cache)
+  decode_step(params, cache, token, pos) -- one token with O(1)/O(T) state
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import layers as L
+from repro.models import ssm as S
+from repro.models.config import Block, ModelConfig
+from repro.models.params import P, abstract, init_params
+
+Array = jax.Array
+
+
+# ---------------------------------------------------------------------------
+# Parameter tree construction
+# ---------------------------------------------------------------------------
+
+
+def _mixer_params(cfg: ModelConfig, mixer: str) -> Dict[str, Any]:
+    if mixer in ("attn", "swa"):
+        return L.attn_params(cfg)
+    if mixer == "mamba":
+        return S.mamba_params(cfg)
+    if mixer == "mlstm":
+        return S.mlstm_params(cfg)
+    if mixer == "slstm":
+        return S.slstm_params(cfg)
+    raise ValueError(mixer)
+
+
+def _ffn_params(cfg: ModelConfig, ffn: str) -> Optional[Dict[str, Any]]:
+    if ffn == "mlp":
+        return L.mlp_params(cfg)
+    if ffn == "moe":
+        return L.moe_params(cfg)
+    if ffn == "none":
+        return None
+    raise ValueError(ffn)
+
+
+def _block_params(cfg: ModelConfig, block: Block, decoder_cross: bool = False) -> Dict[str, Any]:
+    mixer, ffn = block
+    p: Dict[str, Any] = {"mixer": _mixer_params(cfg, mixer)}
+    f = _ffn_params(cfg, ffn)
+    if f is not None:
+        p["ffn"] = f
+    if decoder_cross:
+        p["xattn"] = L.attn_params(cfg, cross=True)
+    return p
+
+
+def build_param_spec(cfg: ModelConfig) -> Dict[str, Any]:
+    d, vp = cfg.d_model, cfg.vocab_p
+    spec: Dict[str, Any] = {
+        "embed": P((vp, d), ("vocab", "embed"), init="embed"),
+        "final_norm": L.norm_params(d),
+        "lm_head": P((d, vp), ("embed", "vocab")),
+    }
+    if cfg.frontend:
+        spec["frontend"] = {"proj": P((cfg.frontend_dim, d), (None, "embed"))}
+    cross = cfg.is_encdec
+    period = {
+        f"b{j}": _block_params(cfg, blk, decoder_cross=cross)
+        for j, blk in enumerate(cfg.pattern)
+    }
+    from repro.models.params import stack
+
+    spec["periods"] = stack(period, cfg.n_periods)
+    if cfg.remainder:
+        spec["rem"] = {
+            f"r{j}": _block_params(cfg, blk, decoder_cross=cross)
+            for j, blk in enumerate(cfg.remainder)
+        }
+    if cfg.is_encdec:
+        spec["encoder"] = {
+            "in_proj": P((cfg.frontend_dim or d, d), (None, "embed")),
+            "layers": stack(
+                {"b0": _block_params(cfg, ("attn", "mlp"))}, cfg.n_encoder_layers
+            ),
+            "norm": L.norm_params(d),
+        }
+    return spec
+
+
+def abstract_params(cfg: ModelConfig):
+    return abstract(build_param_spec(cfg), jnp.dtype(cfg.dtype))
+
+
+def concrete_params(key: jax.Array, cfg: ModelConfig):
+    return init_params(key, build_param_spec(cfg), jnp.dtype(cfg.dtype))
+
+
+# ---------------------------------------------------------------------------
+# Block application (train / full-sequence)
+# ---------------------------------------------------------------------------
+
+
+def _apply_block_train(
+    cfg: ModelConfig, block: Block, p, h: Array, enc: Optional[Array]
+) -> Tuple[Array, Array]:
+    mixer, ffn = block
+    aux = jnp.zeros((), jnp.float32)
+    if mixer == "attn":
+        h = L.attention_train(p["mixer"], cfg, h, causal=not cfg.is_encdec or True)
+    elif mixer == "swa":
+        h = L.attention_train(p["mixer"], cfg, h, window=cfg.sliding_window)
+    elif mixer == "mamba":
+        h = S.mamba_train(p["mixer"], cfg, h)
+    elif mixer == "mlstm":
+        h = S.mlstm_train(p["mixer"], cfg, h)
+    elif mixer == "slstm":
+        h = S.slstm_train(p["mixer"], cfg, h)
+    if "xattn" in p and enc is not None:
+        h = L.attention_train(p["xattn"], cfg, h, enc=enc)
+    if ffn == "mlp":
+        h = L.mlp(p["ffn"], cfg, h)
+    elif ffn == "moe":
+        h, aux = L.moe(p["ffn"], cfg, h)
+    return h, aux
+
+
+def _remat(fn, cfg: ModelConfig):
+    if cfg.remat == "none":
+        return fn
+    if cfg.remat == "dots":
+        policy = jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims
+        return jax.checkpoint(fn, policy=policy)
+    return jax.checkpoint(fn)
+
+
+def _run_stack(cfg: ModelConfig, params, h: Array, enc: Optional[Array] = None) -> Tuple[Array, Array]:
+    """Scan the periods, then run the remainder blocks."""
+    from repro.parallel.context import constrain_batch, constrain_params
+
+    def period_body(carry, pparams):
+        hh, aux = carry
+        hh = constrain_batch(hh)  # keep the residual stream DP-sharded
+        for j, blk in enumerate(cfg.pattern):
+            bp = constrain_params(("periods", f"b{j}"), pparams[f"b{j}"])  # ZeRO-3 gather
+            hh, a = _apply_block_train(cfg, blk, bp, hh, enc)
+            aux = aux + a
+        return (hh, aux), None
+
+    body = _remat(period_body, cfg)
+    (h, aux), _ = jax.lax.scan(body, (h, jnp.zeros((), jnp.float32)), params["periods"])
+    for j, blk in enumerate(cfg.remainder):
+        rp = constrain_params(("rem", f"r{j}"), params["rem"][f"r{j}"])
+        h, a = _apply_block_train(cfg, blk, rp, h, enc)
+        aux = aux + a
+    return h, aux
+
+
+def _run_encoder(cfg: ModelConfig, params, frames: Array) -> Array:
+    enc_p = params["encoder"]
+    h = jnp.einsum("bsf,fd->bsd", frames.astype(jnp.dtype(cfg.dtype)), enc_p["in_proj"])
+
+    from repro.parallel.context import constrain_batch, constrain_params
+
+    def body(hh, lp):
+        hh = constrain_batch(hh)
+        lp = constrain_params("encoder_layers", lp)
+        hh = L.attention_train(lp["b0"]["mixer"], cfg, hh, causal=False)
+        hh = L.mlp(lp["b0"]["ffn"], cfg, hh)
+        return hh, None
+
+    h, _ = jax.lax.scan(_remat(body, cfg), h, enc_p["layers"])
+    return L.rmsnorm(enc_p["norm"], h)
+
+
+# ---------------------------------------------------------------------------
+# Embedding / loss
+# ---------------------------------------------------------------------------
+
+
+def _embed(cfg: ModelConfig, params, tokens: Array) -> Array:
+    from repro.parallel.context import constrain_batch, constrain_params
+
+    table = constrain_params("embed", params["embed"])
+    emb = jnp.take(table, tokens, axis=0)
+    # NB: scale by a *weak-typed* python float — a numpy f32 scalar would
+    # promote the whole residual stream to f32 (2x activation memory + comm).
+    return constrain_batch(emb * float(np.sqrt(cfg.d_model)))
+
+
+def chunked_xent(
+    cfg: ModelConfig, h: Array, head: Array, labels: Array, mask: Array
+) -> Array:
+    """Cross-entropy with the vocab projection applied in sequence chunks, so
+    the (B, S, V) logits tensor never exists; V can be 262k."""
+    b, s, d = h.shape
+    chunk = min(cfg.loss_chunk, s)
+    pad = -s % chunk
+    if pad:
+        h = jnp.pad(h, ((0, 0), (0, pad), (0, 0)))
+        labels = jnp.pad(labels, ((0, 0), (0, pad)))
+        mask = jnp.pad(mask, ((0, 0), (0, pad)))
+    nc = (s + pad) // chunk
+    hc = jnp.moveaxis(h.reshape(b, nc, chunk, d), 1, 0)
+    lc = jnp.moveaxis(labels.reshape(b, nc, chunk), 1, 0)
+    mc = jnp.moveaxis(mask.reshape(b, nc, chunk), 1, 0)
+
+    def body(carry, inp):
+        hh, ll, mm = inp
+        logits = jnp.einsum("bsd,dv->bsv", hh, head).astype(jnp.float32)
+        if cfg.vocab_p > cfg.vocab_size:
+            pad_v = jnp.arange(cfg.vocab_p) >= cfg.vocab_size
+            logits = jnp.where(pad_v[None, None], -1e30, logits)
+        lse = jax.scipy.special.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, ll[..., None], axis=-1)[..., 0]
+        loss = ((lse - gold) * mm).sum()
+        return (carry[0] + loss, carry[1] + mm.sum()), None
+
+    (loss_sum, n), _ = jax.lax.scan(body, (jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32)), (hc, lc, mc))
+    return loss_sum / jnp.maximum(n, 1.0)
+
+
+# ---------------------------------------------------------------------------
+# Public entry points
+# ---------------------------------------------------------------------------
+
+
+def loss_fn(params, cfg: ModelConfig, batch: Dict[str, Array]) -> Array:
+    """batch: tokens (B, S_text) [+ 'frontend' (B, F, fdim)] [+ 'frames']."""
+    tokens = batch["tokens"]
+    h = _embed(cfg, params, tokens)
+    n_front = 0
+    if cfg.frontend and "frontend" in batch:
+        fe = jnp.einsum(
+            "bsf,fd->bsd", batch["frontend"].astype(h.dtype), params["frontend"]["proj"]
+        )
+        h = jnp.concatenate([fe, h], axis=1)
+        n_front = fe.shape[1]
+    enc = None
+    if cfg.is_encdec:
+        enc = _run_encoder(cfg, params, batch["frames"])
+    h, aux = _run_stack(cfg, params, h, enc)
+    from repro.parallel.context import constrain_batch
+
+    h = constrain_batch(L.rmsnorm(params["final_norm"], h))
+    # Next-token prediction over the text region only.
+    h_text = h[:, n_front:, :]
+    labels = jnp.pad(tokens[:, 1:], ((0, 0), (0, 1)))
+    mask = jnp.pad(
+        jnp.ones_like(tokens[:, 1:], jnp.float32), ((0, 0), (0, 1))
+    )
+    from repro.parallel.context import constrain_params
+
+    head = constrain_params("lm_head", params["lm_head"])
+    xent = chunked_xent(cfg, h_text, head, labels, mask)
+    return xent + 0.01 * aux
+
+
+# -- caches -----------------------------------------------------------------
+
+
+def _block_cache(cfg: ModelConfig, block: Block, batch: int, length: int, dtype, cross_len: int = 0):
+    mixer, _ = block
+    c: Dict[str, Any] = {}
+    if mixer == "attn":
+        c["kv"] = L.init_attn_cache(cfg, batch, length, 0, dtype)
+    elif mixer == "swa":
+        c["kv"] = L.init_attn_cache(cfg, batch, length, cfg.sliding_window, dtype)
+    elif mixer == "mamba":
+        c["ssm"] = S.init_mamba_cache(cfg, batch, dtype)
+    elif mixer == "mlstm":
+        c["ml"] = S.init_mlstm_cache(cfg, batch)
+    elif mixer == "slstm":
+        c["sl"] = S.init_slstm_cache(cfg, batch)
+    if cfg.is_encdec and cross_len:
+        c["xkv"] = {
+            "k": jnp.zeros((batch, cross_len, cfg.kv_heads_p, cfg.hd), dtype),
+            "v": jnp.zeros((batch, cross_len, cfg.kv_heads_p, cfg.hd), dtype),
+        }
+    return c
+
+
+def init_cache(cfg: ModelConfig, batch: int, length: int, cross_len: int = 0):
+    """Decode cache pytree; period leaves stacked over n_periods."""
+    dtype = jnp.dtype(cfg.kv_dtype or cfg.dtype)
+    period = {
+        f"b{j}": _block_cache(cfg, blk, batch, length, dtype, cross_len)
+        for j, blk in enumerate(cfg.pattern)
+    }
+    cache = {
+        "periods": jax.tree_util.tree_map(
+            lambda x: jnp.broadcast_to(x[None], (cfg.n_periods,) + x.shape), period
+        )
+    }
+    if cfg.remainder:
+        cache["rem"] = {
+            f"r{j}": _block_cache(cfg, blk, batch, length, dtype, cross_len)
+            for j, blk in enumerate(cfg.remainder)
+        }
+    return cache
+
+
+def abstract_cache(cfg: ModelConfig, batch: int, length: int, cross_len: int = 0):
+    return jax.eval_shape(lambda: init_cache(cfg, batch, length, cross_len))
+
+
+# -- decode -------------------------------------------------------------------
+
+
+def _apply_block_decode(
+    cfg: ModelConfig, block: Block, p, c, h: Array, pos: Array
+) -> Tuple[Array, Any]:
+    mixer, ffn = block
+    if mixer == "attn":
+        h, kv = L.attention_decode(p["mixer"], cfg, h, c["kv"], pos)
+        c = {**c, "kv": kv}
+    elif mixer == "swa":
+        h, kv = L.attention_decode(p["mixer"], cfg, h, c["kv"], pos, window=cfg.sliding_window)
+        c = {**c, "kv": kv}
+    elif mixer == "mamba":
+        h, st = S.mamba_decode(p["mixer"], cfg, h, c["ssm"])
+        c = {**c, "ssm": st}
+    elif mixer == "mlstm":
+        h, st = S.mlstm_decode(p["mixer"], cfg, h, c["ml"])
+        c = {**c, "ml": st}
+    elif mixer == "slstm":
+        h, st = S.slstm_decode(p["mixer"], cfg, h, c["sl"])
+        c = {**c, "sl": st}
+    if "xattn" in p and "xkv" in c:
+        # Cross-attention against the precomputed encoder KV (static).
+        h = _cross_decode(p["xattn"], cfg, h, c["xkv"])
+    if ffn == "mlp":
+        h = L.mlp(p["ffn"], cfg, h)
+    elif ffn == "moe":
+        h, _ = L.moe(p["ffn"], cfg, h)
+    return h, c
+
+
+def _cross_decode(p, cfg: ModelConfig, x: Array, xkv) -> Array:
+    h = L.rmsnorm(p["ln"], x)
+    dt = x.dtype
+    q = jnp.einsum("bsd,dhk->bshk", h, p["wq"].astype(dt))
+    out = L.gqa_chunked(q, xkv["k"], xkv["v"], causal=False, chunk=cfg.attn_chunk)
+    return x + jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(dt))
+
+
+def decode_step(params, cfg: ModelConfig, cache, token: Array, pos: Array):
+    """token (B,) int32, pos () int32 -> (logits (B, vocab_p), new cache)."""
+    h = _embed(cfg, params, token[:, None])
+
+    from repro.parallel.context import constrain_batch, constrain_params
+
+    # Cache travels in the scan CARRY (not xs/ys): the per-period
+    # dynamic_update_index on the carry is done in place by XLA, so decode
+    # holds ONE cache buffer instead of double-buffering a stacked ys copy —
+    # at 32k x 128-batch MHA that's ~13 GiB/device saved.
+    def body(carry, xs):
+        hh, cache_st = carry
+        hh = constrain_batch(hh)
+        pparams, idx = xs
+        pcache = jax.tree_util.tree_map(
+            lambda c: jax.lax.dynamic_index_in_dim(c, idx, 0, keepdims=False), cache_st
+        )
+        for j, blk in enumerate(cfg.pattern):
+            bp = constrain_params(("periods", f"b{j}"), pparams[f"b{j}"])
+            hh, newc = _apply_block_decode(cfg, blk, bp, pcache[f"b{j}"], hh, pos)
+            pcache = {**pcache, f"b{j}": newc}
+        cache_st = jax.tree_util.tree_map(
+            lambda c, n: jax.lax.dynamic_update_index_in_dim(c, n.astype(c.dtype), idx, 0),
+            cache_st,
+            pcache,
+        )
+        return (hh, cache_st), None
+
+    (h, new_pcache), _ = jax.lax.scan(
+        body,
+        (h, cache["periods"]),
+        (params["periods"], jnp.arange(cfg.n_periods)),
+    )
+    new_cache = {"periods": new_pcache}
+    if cfg.remainder:
+        rem = {}
+        for j, blk in enumerate(cfg.remainder):
+            h, newc = _apply_block_decode(cfg, blk, params["rem"][f"r{j}"], cache["rem"][f"r{j}"], h, pos)
+            rem[f"r{j}"] = newc
+        new_cache["rem"] = rem
+    h = L.rmsnorm(params["final_norm"], h)
+    head = constrain_params("lm_head", params["lm_head"])
+    logits = jnp.einsum("bsd,dv->bsv", h, head).astype(jnp.float32)[:, 0]
+    if cfg.vocab_p > cfg.vocab_size:
+        logits = jnp.where(jnp.arange(cfg.vocab_p) >= cfg.vocab_size, -1e30, logits)
+    return logits, new_cache
+
+
+# -- prefill ------------------------------------------------------------------
+
+
+def prefill(params, cfg: ModelConfig, batch: Dict[str, Array]):
+    """Full-sequence forward returning last-position logits.
+
+    The dry-run lowers this as the prefill cost proxy: it contains the same
+    attention/FFN work as cache-building prefill; per-layer KV emission is
+    covered by the decode path's cache signature.
+    """
+    tokens = batch["tokens"]
+    h = _embed(cfg, params, tokens)
+    if cfg.frontend and "frontend" in batch:
+        fe = jnp.einsum(
+            "bsf,fd->bsd", batch["frontend"].astype(h.dtype), params["frontend"]["proj"]
+        )
+        h = jnp.concatenate([fe, h], axis=1)
+    enc = _run_encoder(cfg, params, batch["frames"]) if cfg.is_encdec else None
+    h, _ = _run_stack(cfg, params, h, enc)
+    h = L.rmsnorm(params["final_norm"], h)
+    from repro.parallel.context import constrain_params
+
+    head = constrain_params("lm_head", params["lm_head"])
+    logits = jnp.einsum("bd,dv->bv", h[:, -1], head).astype(jnp.float32)
+    return logits

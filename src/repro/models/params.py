@@ -1,0 +1,71 @@
+"""Parameter specs: one tree describing shapes, logical axes, and init.
+
+Every model builds a tree of ``P`` leaves.  From it we derive
+  - abstract params (ShapeDtypeStruct) for the dry-run (never allocated),
+  - concrete params for smoke tests / the real trainer,
+  - PartitionSpecs via the logical-axis rules in ``repro.parallel.sharding``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Axes = Tuple[Optional[str], ...]
+
+
+@dataclasses.dataclass(frozen=True)
+class P:
+    """A parameter leaf spec."""
+
+    shape: Tuple[int, ...]
+    axes: Axes  # logical axis names per dim (None = replicated dim)
+    init: str = "normal"  # 'normal' | 'zeros' | 'ones' | 'embed'
+    scale: float = 0.02
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def is_leaf(x: Any) -> bool:
+    return isinstance(x, P)
+
+
+def tree_map_p(fn: Callable[[P], Any], tree: Any) -> Any:
+    return jax.tree_util.tree_map(fn, tree, is_leaf=is_leaf)
+
+
+def stack(tree: Any, n: int, axis_name: str = "layers") -> Any:
+    """Add a leading stacked-layers dim to every leaf (for scan-over-periods)."""
+    return tree_map_p(
+        lambda p: P((n,) + p.shape, (axis_name,) + p.axes, p.init, p.scale), tree
+    )
+
+
+def abstract(tree: Any, dtype: jnp.dtype) -> Any:
+    return tree_map_p(lambda p: jax.ShapeDtypeStruct(p.shape, dtype), tree)
+
+
+def n_params(tree: Any) -> int:
+    leaves = jax.tree_util.tree_leaves(tree, is_leaf=is_leaf)
+    return sum(int(np.prod(p.shape)) for p in leaves)
+
+
+def init_params(key: jax.Array, tree: Any, dtype: jnp.dtype) -> Any:
+    """Concrete initialization (smoke tests / real training)."""
+    leaves, treedef = jax.tree_util.tree_flatten(tree, is_leaf=is_leaf)
+    keys = jax.random.split(key, max(len(leaves), 1))
+    out = []
+    for k, p in zip(keys, leaves):
+        if p.init == "zeros":
+            out.append(jnp.zeros(p.shape, dtype))
+        elif p.init == "ones":
+            out.append(jnp.ones(p.shape, dtype))
+        else:
+            fan_in = p.shape[-2] if len(p.shape) >= 2 else p.shape[-1]
+            scale = p.scale if p.init == "embed" else 1.0 / np.sqrt(max(fan_in, 1))
+            out.append((jax.random.normal(k, p.shape, jnp.float32) * scale).astype(dtype))
+    return jax.tree_util.tree_unflatten(treedef, out)

@@ -1,0 +1,447 @@
+"""State-space & recurrent mixers: Mamba (selective SSM), xLSTM's mLSTM and
+sLSTM blocks.  Each provides a parallel/full-sequence form for training and an
+O(1)-state recurrent form for decode — the property that makes `long_500k`
+runnable for the ssm/hybrid architectures.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.config import ModelConfig
+from repro.models.layers import norm_params, rmsnorm
+from repro.models.params import P
+
+Array = jax.Array
+
+
+# ---------------------------------------------------------------------------
+# Mamba (selective SSM, Mamba-1 style)
+# ---------------------------------------------------------------------------
+
+
+def mamba_params(cfg: ModelConfig) -> Dict[str, Any]:
+    d = cfg.d_model
+    di = cfg.ssm_expand * d
+    n = cfg.ssm_state
+    r = cfg.ssm_dt_rank
+    return {
+        "ln": norm_params(d),
+        "in_proj": P((d, 2 * di), ("embed", "ssm_inner")),
+        "conv": P((cfg.ssm_conv, di), (None, "ssm_inner")),
+        "wb": P((di, n), ("ssm_inner", None)),
+        "wc": P((di, n), ("ssm_inner", None)),
+        "wdt_lo": P((di, r), ("ssm_inner", None)),
+        "wdt_hi": P((r, di), (None, "ssm_inner")),
+        "dt_bias": P((di,), ("ssm_inner",), init="zeros"),
+        "a_log": P((di, n), ("ssm_inner", None), init="ones"),
+        "dd": P((di,), ("ssm_inner",), init="ones"),
+        "out_proj": P((di, d), ("ssm_inner", "embed")),
+    }
+
+
+def _mamba_gates(p, x1: Array):
+    """B, C, dt from the post-conv activations. x1 (..., di)."""
+    f32 = jnp.float32
+    bmat = jnp.einsum("...i,in->...n", x1.astype(f32), p["wb"].astype(f32))
+    cmat = jnp.einsum("...i,in->...n", x1.astype(f32), p["wc"].astype(f32))
+    dt = jnp.einsum("...i,ir->...r", x1.astype(f32), p["wdt_lo"].astype(f32))
+    dt = jnp.einsum("...r,ri->...i", dt, p["wdt_hi"].astype(f32))
+    dt = jax.nn.softplus(dt + p["dt_bias"].astype(f32))
+    a = -jnp.exp(p["a_log"].astype(f32))  # (di, n)
+    return bmat, cmat, dt, a
+
+
+def mamba_train(p, cfg: ModelConfig, x: Array, chunk: int = 1024) -> Array:
+    """Chunked selective scan. x (B, S, d).
+
+    The (B,S,di,n) decay/drive tensors and the state history never exist at
+    full sequence length: an outer scan walks S/chunk chunks (carrying the
+    (B,di,n) state), the inner scan walks steps within a chunk and emits y_t
+    directly (contracted with C_t), so the live set is one chunk's tensors —
+    the TPU-native equivalent of mamba's chunked CUDA kernel.
+    """
+    b, s, d = x.shape
+    di = cfg.ssm_expand * d
+    h = rmsnorm(p["ln"], x)
+    dt_ = x.dtype
+    xz = jnp.einsum("bsd,de->bse", h, p["in_proj"].astype(dt_))
+    x1, z = jnp.split(xz, 2, axis=-1)  # (B,S,di)
+    # Causal depthwise conv along S.
+    k = cfg.ssm_conv
+    xpad = jnp.pad(x1, ((0, 0), (k - 1, 0), (0, 0)))
+    conv = sum(
+        xpad[:, i : i + s] * p["conv"][i].astype(dt_) for i in range(k)
+    )
+    x1 = jax.nn.silu(conv)
+
+    c = min(chunk, s)
+    pad = -s % c
+    x1p = jnp.pad(x1, ((0, 0), (0, pad), (0, 0)))
+    nc = (s + pad) // c
+    xc = jnp.moveaxis(x1p.reshape(b, nc, c, di), 1, 0)  # (nc,B,c,di)
+
+    def chunk_step(hst, x_chunk):
+        bmat, cmat, dtv, a = _mamba_gates(p, x_chunk)  # (B,c,di,n)-ish
+        decay = jnp.exp(dtv[..., None] * a)  # (B,c,di,n)
+        drive = (dtv * x_chunk.astype(jnp.float32))[..., None] * bmat[..., None, :]
+
+        def step(hh, inp):
+            dec, drv, cm = inp
+            hh = hh * dec + drv
+            y = jnp.einsum("bin,bn->bi", hh, cm)
+            return hh, y
+
+        hst, ys = jax.lax.scan(
+            step,
+            hst,
+            (jnp.moveaxis(decay, 1, 0), jnp.moveaxis(drive, 1, 0), jnp.moveaxis(cmat, 1, 0)),
+        )  # ys (c,B,di)
+        return hst, jnp.moveaxis(ys, 0, 1)  # (B,c,di)
+
+    from repro.parallel.context import constrain_state
+
+    h0 = constrain_state(jnp.zeros((b, di, cfg.ssm_state), jnp.float32))
+    _, ychunks = jax.lax.scan(chunk_step, h0, xc)  # (nc,B,c,di)
+    y = jnp.moveaxis(ychunks, 0, 1).reshape(b, s + pad, di)[:, :s]
+    y = y + p["dd"].astype(jnp.float32) * x1.astype(jnp.float32)
+    y = (y * jax.nn.silu(z.astype(jnp.float32))).astype(dt_)
+    return x + jnp.einsum("bsi,id->bsd", y, p["out_proj"].astype(dt_))
+
+
+def init_mamba_cache(cfg: ModelConfig, batch: int, dtype) -> Dict[str, Array]:
+    di = cfg.ssm_expand * cfg.d_model
+    return {
+        "h": jnp.zeros((batch, di, cfg.ssm_state), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.ssm_conv - 1, di), dtype),
+    }
+
+
+def mamba_decode(p, cfg: ModelConfig, x: Array, cache: Dict[str, Array]) -> Tuple[Array, Dict[str, Array]]:
+    """One step. x (B, 1, d); cache: ssm state + conv tail."""
+    dt_ = x.dtype
+    h = rmsnorm(p["ln"], x)
+    xz = jnp.einsum("bsd,de->bse", h, p["in_proj"].astype(dt_))
+    x1, z = jnp.split(xz, 2, axis=-1)  # (B,1,di)
+    hist = jnp.concatenate([cache["conv"], x1], axis=1)  # (B,k,di)
+    conv = jnp.einsum("bki,ki->bi", hist.astype(jnp.float32), p["conv"].astype(jnp.float32))
+    x1s = jax.nn.silu(conv)  # (B,di)
+    bmat, cmat, dtv, a = _mamba_gates(p, x1s)
+    hstate = cache["h"] * jnp.exp(dtv[..., None] * a) + (dtv * x1s)[..., None] * bmat[..., None, :]
+    y = jnp.einsum("bin,bn->bi", hstate, cmat) + p["dd"].astype(jnp.float32) * x1s
+    y = (y * jax.nn.silu(z[:, 0].astype(jnp.float32))).astype(dt_)
+    out = x + jnp.einsum("bi,id->bd", y, p["out_proj"].astype(dt_))[:, None]
+    return out, {"h": hstate, "conv": hist[:, 1:].astype(cache["conv"].dtype)}
+
+
+# ---------------------------------------------------------------------------
+# xLSTM: mLSTM (matrix memory) & sLSTM (scalar memory, block-diag recurrence)
+# ---------------------------------------------------------------------------
+
+
+def mlstm_params(cfg: ModelConfig) -> Dict[str, Any]:
+    d = cfg.d_model
+    f = int(cfg.xlstm_proj_factor * d)
+    return {
+        "ln": norm_params(d),
+        "up": P((d, 2 * f), ("embed", "xl_inner")),
+        "wq": P((f, f), ("xl_inner", None)),
+        "wk": P((f, f), ("xl_inner", None)),
+        "wv": P((f, f), ("xl_inner", None)),
+        "wif": P((f, 2), ("xl_inner", None)),  # input & forget gate pre-acts
+        "wog": P((f, f), ("xl_inner", None)),
+        "down": P((f, d), ("xl_inner", "embed")),
+    }
+
+
+def mlstm_train(p, cfg: ModelConfig, x: Array, chunk: int = 1024) -> Array:
+    """Chunk-recurrent mLSTM (xLSTM's parallel form, tiled).
+
+    The naive parallel form materializes (B,H,S,S) decay/score matrices —
+    34 GiB at 32k context.  Here an outer scan carries the (C, n, m) matrix-
+    memory state across chunks; within a chunk the quadratic form runs on a
+    (chunk x chunk) tile, and the inter-chunk contribution comes from the
+    carried state (exactly the recurrence mlstm_decode implements).  Memory
+    is O(chunk^2), matching the chunkwise formulation of the xLSTM kernels.
+    """
+    b, s, d = x.shape
+    hh = cfg.n_heads
+    f = int(cfg.xlstm_proj_factor * d)
+    dh = f // hh
+    dt_ = x.dtype
+    f32 = jnp.float32
+    hin = rmsnorm(p["ln"], x)
+    u = jnp.einsum("bsd,de->bse", hin, p["up"].astype(dt_))
+    xm, z = jnp.split(u, 2, axis=-1)  # (B,S,f)
+
+    def heads(w):
+        return jnp.einsum("bsf,fg->bsg", xm, w.astype(dt_)).reshape(b, s, hh, dh)
+
+    q, k, v = heads(p["wq"]), heads(p["wk"]), heads(p["wv"])
+    gates = jnp.einsum("bsf,fg->bsg", xm.astype(f32), p["wif"].astype(f32))  # (B,S,2)
+    logi = gates[..., 0]
+    logf = jax.nn.log_sigmoid(gates[..., 1])  # (B,S)
+    scale = 1.0 / np.sqrt(dh)
+
+    c = min(chunk, s)
+    pad = -s % c
+    if pad:
+        q = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        logi = jnp.pad(logi, ((0, 0), (0, pad)), constant_values=-1e30)
+        logf = jnp.pad(logf, ((0, 0), (0, pad)))
+    nc = (s + pad) // c
+
+    def to_chunks(t, extra_dims):
+        return jnp.moveaxis(t.reshape((b, nc, c) + extra_dims), 1, 0)
+
+    qc = to_chunks(q.astype(f32), (hh, dh))
+    kc = to_chunks(k.astype(f32), (hh, dh))
+    vc = to_chunks(v.astype(f32), (hh, dh))
+    lic = to_chunks(logi, ())
+    lfc = to_chunks(logf, ())
+
+    def chunk_step(state, inp):
+        C, n, m0 = state  # (B,H,dh,dh), (B,H,dh), (B,H)
+        qq, kk, vv, li, lf = inp  # (B,c,H,dh) / (B,c)
+        lf_cum = jnp.cumsum(lf, axis=1)  # (B,c) local sum of log f
+        # intra-chunk log decay: lf_cum[t] - lf_cum[s] + li[s], s <= t
+        logd = lf_cum[:, :, None] - lf_cum[:, None, :] + li[:, None, :]
+        tri = jnp.tril(jnp.ones((c, c), bool))
+        logd = jnp.where(tri[None], logd, -1e30)
+        m_intra = logd.max(axis=-1)  # (B,c)
+        m_inter = m0[:, None, :] + 0.0  # (B,1,H) -> broadcast below
+        # per-step stabilizer across heads: gates are shared across heads.
+        m_t = jnp.maximum(m_intra[..., None], m0[:, None, :] + lf_cum[..., None])  # (B,c,H)
+        dmat = jnp.exp(logd[:, :, None, :] - m_t[..., None])  # (B,c,H,c)
+        sqk = jnp.einsum("bthd,bshd->bths", qq * scale, kk)  # (B,c,H,c)
+        w = sqk * dmat
+        inter_scale = jnp.exp(m0[:, None, :] + lf_cum[..., None] - m_t)  # (B,c,H)
+        h_inter = jnp.einsum("bthd,bhde->bthe", qq * scale, C) * inter_scale[..., None]
+        n_inter = jnp.einsum("bthd,bhd->bth", qq * scale, n) * inter_scale
+        num = jnp.einsum("bths,bshd->bthd", w, vv) + h_inter
+        den = jnp.maximum(jnp.abs(w.sum(-1) + n_inter), jnp.exp(-m_t))
+        hout = num / den[..., None]  # (B,c,H,dh)
+        # ---- state update to end of chunk ----
+        lf_tot = lf_cum[:, -1]  # (B,)
+        decay_s = lf_tot[:, None] - lf_cum + li  # (B,c) log weight of each s
+        m_new = jnp.maximum(m0 + lf_tot[:, None], decay_s.max(1)[:, None])  # (B,H)
+        w_s = jnp.exp(decay_s[:, :, None] - m_new[:, None, :])  # (B,c,H)
+        C_new = C * jnp.exp(m0 + lf_tot[:, None] - m_new)[..., None, None] + jnp.einsum(
+            "bsh,bshd,bshe->bhde", w_s, kk, vv
+        )
+        n_new = n * jnp.exp(m0 + lf_tot[:, None] - m_new)[..., None] + jnp.einsum(
+            "bsh,bshd->bhd", w_s, kk
+        )
+        return (C_new, n_new, m_new), hout
+
+    from repro.parallel.context import constrain_state
+
+    C0 = constrain_state(jnp.zeros((b, hh, dh, dh), f32))
+    n0 = constrain_state(jnp.zeros((b, hh, dh), f32))
+    m0 = constrain_state(jnp.full((b, hh), -1e30, f32))
+    _, houts = jax.lax.scan(chunk_step, (C0, n0, m0), (qc, kc, vc, lic, lfc))
+    hout = jnp.moveaxis(houts, 0, 1).reshape(b, s + pad, f)[:, :s]
+    og = jax.nn.sigmoid(jnp.einsum("bsf,fg->bsg", xm.astype(f32), p["wog"].astype(f32)))
+    y = (hout * og * jax.nn.silu(z.astype(f32))).astype(dt_)
+    return x + jnp.einsum("bsf,fd->bsd", y, p["down"].astype(dt_))
+
+
+def init_mlstm_cache(cfg: ModelConfig, batch: int) -> Dict[str, Array]:
+    hh = cfg.n_heads
+    f = int(cfg.xlstm_proj_factor * cfg.d_model)
+    dh = f // hh
+    return {
+        "c": jnp.zeros((batch, hh, dh, dh), jnp.float32),
+        "n": jnp.zeros((batch, hh, dh), jnp.float32),
+        "m": jnp.full((batch, hh), -1e30, jnp.float32),
+    }
+
+
+def mlstm_decode(p, cfg: ModelConfig, x: Array, cache: Dict[str, Array]) -> Tuple[Array, Dict[str, Array]]:
+    b, _, d = x.shape
+    hh = cfg.n_heads
+    f = int(cfg.xlstm_proj_factor * d)
+    dh = f // hh
+    dt_ = x.dtype
+    f32 = jnp.float32
+    hin = rmsnorm(p["ln"], x)
+    u = jnp.einsum("bsd,de->bse", hin, p["up"].astype(dt_))[:, 0]
+    xm, z = jnp.split(u, 2, axis=-1)  # (B,f)
+
+    def heads(w):
+        return jnp.einsum("bf,fg->bg", xm, w.astype(dt_)).reshape(b, hh, dh).astype(f32)
+
+    q, k, v = heads(p["wq"]), heads(p["wk"]), heads(p["wv"])
+    gates = jnp.einsum("bf,fg->bg", xm.astype(f32), p["wif"].astype(f32))
+    logi, logf = gates[..., 0:1], jax.nn.log_sigmoid(gates[..., 1:2])  # (B,1)
+    # Broadcast the scalar gates across heads.
+    logi_h = jnp.repeat(logi, hh, axis=1)  # (B,H)
+    logf_h = jnp.repeat(logf, hh, axis=1)
+    m_new = jnp.maximum(logf_h + cache["m"], logi_h)
+    i_p = jnp.exp(logi_h - m_new)[..., None]  # (B,H,1)
+    f_p = jnp.exp(logf_h + cache["m"] - m_new)[..., None]
+    scale = 1.0 / np.sqrt(dh)
+    c = cache["c"] * f_p[..., None] + i_p[..., None] * jnp.einsum("bhd,bhe->bhde", v, k * scale)
+    n = cache["n"] * f_p + i_p * (k * scale)
+    num = jnp.einsum("bhde,bhe->bhd", c, q)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhd,bhd->bh", n, q)), jnp.exp(-m_new))[..., None]
+    hout = (num / den).reshape(b, f)
+    og = jax.nn.sigmoid(jnp.einsum("bf,fg->bg", xm.astype(f32), p["wog"].astype(f32)))
+    y = (hout * og * jax.nn.silu(z.astype(f32))).astype(dt_)
+    out = x + jnp.einsum("bf,fd->bd", y, p["down"].astype(dt_))[:, None]
+    return out, {"c": c, "n": n, "m": m_new}
+
+
+def slstm_params(cfg: ModelConfig) -> Dict[str, Any]:
+    d = cfg.d_model
+    hh = cfg.n_heads
+    uh = d // hh
+    return {
+        "ln": norm_params(d),
+        "wx": P((d, 4 * d), ("embed", "units")),
+        "wr": P((hh, uh, 4 * uh), (None, None, "units")),
+        "bias": P((4 * d,), ("units",), init="zeros"),
+        "out": P((d, d), ("units", "embed")),
+    }
+
+
+def _slstm_step(p, cfg: ModelConfig, xproj_t: Array, state):
+    """xproj_t (B, 4d); state (h, c, n, m) each (B, H, uh)."""
+    b = xproj_t.shape[0]
+    d = cfg.d_model
+    hh = cfg.n_heads
+    uh = d // hh
+    h, c, n, m = state
+    rec = jnp.einsum("bhu,hug->bhg", h, p["wr"].astype(jnp.float32))  # (B,H,4uh)
+    pre = xproj_t.reshape(b, hh, 4 * uh).astype(jnp.float32) + rec + p["bias"].reshape(hh, 4 * uh).astype(jnp.float32)
+    zt, it, ft, ot = jnp.split(pre, 4, axis=-1)  # (B,H,uh)
+    logf = jax.nn.log_sigmoid(ft)
+    m_new = jnp.maximum(logf + m, it)
+    i_p = jnp.exp(it - m_new)
+    f_p = jnp.exp(logf + m - m_new)
+    c_new = f_p * c + i_p * jnp.tanh(zt)
+    n_new = f_p * n + i_p
+    h_new = jax.nn.sigmoid(ot) * c_new / jnp.maximum(n_new, 1e-6)
+    return h_new, c_new, n_new, m_new
+
+
+def _slstm_cell(xt: Array, hprev: Array, state, wr_b: Array, bias: Array, hh: int, uh: int):
+    """One sLSTM step with PER-BATCH recurrent weights wr_b (B,H,uh,4uh).
+
+    The per-batch broadcast of wr is the point: its cotangent is per-batch
+    too, so the backward scan can accumulate weight gradients *locally*
+    (batch-sharded) and cross-device reduction happens once after the loop —
+    not once per timestep (see EXPERIMENTS.md §Perf, xlstm iterations 3-5).
+    """
+    b = xt.shape[0]
+    c, n, m = state
+    rec = jnp.einsum("bhu,bhug->bhg", hprev, wr_b)
+    pre = xt.reshape(b, hh, 4 * uh).astype(jnp.float32) + rec + bias.reshape(hh, 4 * uh).astype(jnp.float32)
+    zt, it, ft, ot = jnp.split(pre, 4, axis=-1)
+    logf = jax.nn.log_sigmoid(ft)
+    m_new = jnp.maximum(logf + m, it)
+    i_p = jnp.exp(it - m_new)
+    f_p = jnp.exp(logf + m - m_new)
+    c_new = f_p * c + i_p * jnp.tanh(zt)
+    n_new = f_p * n + i_p
+    h_new = jax.nn.sigmoid(ot) * c_new / jnp.maximum(n_new, 1e-6)
+    return h_new, (c_new, n_new, m_new)
+
+
+def _slstm_scan_fwd_impl(xproj, wr, bias, hh, uh):
+    from repro.parallel.context import constrain_state
+
+    b, s, _ = xproj.shape
+    wr_b = jnp.broadcast_to(wr.astype(jnp.float32)[None], (b,) + wr.shape)
+    z = constrain_state(jnp.zeros((b, hh, uh), jnp.float32))
+    m0 = constrain_state(jnp.full((b, hh, uh), -1e30, jnp.float32))
+
+    def step(carry, xt):
+        h, st = carry
+        h_new, st_new = _slstm_cell(xt, h, st, wr_b, bias, hh, uh)
+        return (h_new, st_new), (h_new, h, st)
+
+    (_, _), (hs, hs_prev, states_prev) = jax.lax.scan(
+        step, (z, (z, z, m0)), jnp.moveaxis(xproj, 1, 0)
+    )
+    return jnp.moveaxis(hs, 0, 1), (xproj, wr, bias, hs_prev, states_prev)
+
+
+def _slstm_scan_bwd(hh, uh, res, dhs):
+    xproj, wr, bias, hs_prev, states_prev = res
+    b, s, _ = xproj.shape
+    wr_b = jnp.broadcast_to(wr.astype(jnp.float32)[None], (b,) + wr.shape)
+    dhs_rev = jnp.moveaxis(dhs, 1, 0)[::-1]
+    xs_rev = jnp.moveaxis(xproj, 1, 0)[::-1]
+    hsp_rev = hs_prev[::-1]
+    stp_rev = jax.tree_util.tree_map(lambda t: t[::-1], states_prev)
+
+    def cell_for_vjp(xt, hprev, st, wrb, bi):
+        return _slstm_cell(xt, hprev, st, wrb, bi, hh, uh)
+
+    def step(carry, inp):
+        dh_next, dst_next, dwr_acc, dbias_acc = carry
+        dh_out, xt, hprev, st = inp
+        _, pullback = jax.vjp(cell_for_vjp, xt, hprev, st, wr_b, bias)
+        dxt, dhprev, dst, dwrb, dbi = pullback((dh_next + dh_out, dst_next))
+        # dwrb is PER-BATCH (B,H,uh,4uh): accumulate locally in the carry.
+        return (dhprev, dst, dwr_acc + dwrb, dbias_acc + dbi), dxt
+
+    zst = jax.tree_util.tree_map(jnp.zeros_like, stp_rev)
+    zst0 = jax.tree_util.tree_map(lambda t: t[0] * 0.0, stp_rev)
+    dh0 = jnp.zeros((b, hh, uh), jnp.float32)
+    dwr0 = jnp.zeros((b,) + wr.shape, jnp.float32)
+    dbias0 = jnp.zeros_like(bias, dtype=jnp.float32)
+    (dh_last, _, dwr_b, dbias), dxs = jax.lax.scan(
+        step, (dh0, zst0, dwr0, dbias0), (dhs_rev, xs_rev, hsp_rev, stp_rev)
+    )
+    dxproj = jnp.moveaxis(dxs[::-1], 0, 1)
+    # ONE reduction over the (sharded) batch — outside the loop.
+    dwr = dwr_b.sum(0).astype(wr.dtype)
+    return dxproj, dwr, dbias.astype(bias.dtype)
+
+
+from functools import partial as _partial
+
+
+@_partial(jax.custom_vjp, nondiff_argnums=(3, 4))
+def _slstm_scan_p(xproj: Array, wr: Array, bias: Array, hh: int, uh: int) -> Array:
+    return _slstm_scan_fwd_impl(xproj, wr, bias, hh, uh)[0]
+
+
+_slstm_scan_p.defvjp(_slstm_scan_fwd_impl, _slstm_scan_bwd)
+
+
+def slstm_train(p, cfg: ModelConfig, x: Array) -> Array:
+    b, s, d = x.shape
+    hh = cfg.n_heads
+    uh = d // hh
+    dt_ = x.dtype
+    hin = rmsnorm(p["ln"], x)
+    xproj = jnp.einsum("bsd,dg->bsg", hin, p["wx"].astype(dt_))  # (B,S,4d)
+    hs = _slstm_scan_p(xproj, p["wr"], p["bias"], hh, uh)  # (B,S,H,uh)
+    hs = hs.reshape(b, s, d).astype(dt_)
+    return x + jnp.einsum("bsd,dg->bsg", hs, p["out"].astype(dt_))
+
+
+def init_slstm_cache(cfg: ModelConfig, batch: int) -> Tuple[Array, ...]:
+    hh = cfg.n_heads
+    uh = cfg.d_model // hh
+    z = jnp.zeros((batch, hh, uh), jnp.float32)
+    return (z, z, z, jnp.full((batch, hh, uh), -1e30, jnp.float32))
+
+
+def slstm_decode(p, cfg: ModelConfig, x: Array, cache) -> Tuple[Array, Any]:
+    dt_ = x.dtype
+    hin = rmsnorm(p["ln"], x)
+    xproj = jnp.einsum("bsd,dg->bsg", hin, p["wx"].astype(dt_))[:, 0]
+    h, c, n, m = _slstm_step(p, cfg, xproj, cache)
+    b = x.shape[0]
+    y = h.reshape(b, cfg.d_model).astype(dt_)
+    out = x + jnp.einsum("bd,dg->bg", y, p["out"].astype(dt_))[:, None]
+    return out, (h, c, n, m)

@@ -1,0 +1,1 @@
+from repro.optim.adamw import OptConfig, abstract_opt_state, adamw_update, init_opt_state

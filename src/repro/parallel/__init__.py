@@ -1,0 +1,1 @@
+"""Distribution: mesh construction + logical-axis sharding rules."""

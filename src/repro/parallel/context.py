@@ -1,0 +1,114 @@
+"""Activation-sharding context.
+
+The logical-axis rules shard *parameters*; XLA's sharding propagation is then
+free to choose activation shardings — and with FSDP-sharded weights it will
+happily reshard activations' embed dim onto the 'data' axis (Megatron-style
+activation TP) instead of keeping data parallelism, inserting an all-reduce
+per norm.  Pinning the batch dim of the residual stream at block boundaries
+forces the FSDP schedule: weights all-gather per layer, activations stay DP.
+
+Model code calls ``constrain_batch(x)``; outside a context (smoke tests,
+single device) it is a no-op.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Any, Optional, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec
+
+_TLS = threading.local()
+
+
+@contextlib.contextmanager
+def activation_sharding(mesh: Mesh, batch_axes: Any, param_specs: Any = None,
+                        seq_axis: Any = None):
+    """batch_axes: mesh axis (or tuple) for the leading batch dim, or None.
+
+    ``param_specs``: optional tree (mirroring the model's param tree) of
+    *compute* PartitionSpecs — FSDP dims gathered (None), TP dims kept.
+    Applied to each period's weights inside the layer scan, this forces the
+    ZeRO-3 schedule: weights all-gather per layer; activations stay DP.
+
+    ``seq_axis``: Megatron-style sequence parallelism — the residual stream's
+    sequence dim is pinned to this mesh axis between blocks, turning the TP
+    activation all-reduces into reduce-scatter + all-gather pairs and running
+    norms on sequence shards.
+    """
+    prev = getattr(_TLS, "ctx", None)
+    _TLS.ctx = (mesh, batch_axes, param_specs, seq_axis)
+    try:
+        yield
+    finally:
+        _TLS.ctx = prev
+
+
+def current() -> Optional[Tuple[Mesh, Any, Any]]:
+    return getattr(_TLS, "ctx", None)
+
+
+def constrain_state(x: jax.Array) -> jax.Array:
+    """Pin a recurrent-state tensor's batch dim to the DP axes, leaving the
+    other dims unconstrained (model sharding of inner dims survives).  Used
+    on scan-carry INITIAL values: the while-loop carry sharding is decided by
+    the init, and an unsharded init means a reshard every step."""
+    ctx = current()
+    if ctx is None:
+        return x
+    mesh, ba = ctx[0], ctx[1]
+    if ba is None:
+        return x
+    rest = [PartitionSpec.UNCONSTRAINED] * (x.ndim - 1)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, PartitionSpec(ba, *rest))
+    )
+
+
+def constrain_params(path, params: Any) -> Any:
+    """Pin a param subtree to its compute sharding.
+
+    ``path``: key or tuple of keys into the compute-spec tree.  Constraining
+    at the *innermost* use site (one block, not one period) lets XLA schedule
+    the ZeRO-3 all-gathers per block — the transient is one layer's weights,
+    not a whole period's (matters for jamba's 8-layer period at 398B).
+    """
+    ctx = current()
+    if ctx is None or ctx[2] is None:
+        return params
+    mesh, specs = ctx[0], ctx[2]
+    sub = specs
+    for k in (path if isinstance(path, tuple) else (path,)):
+        if not isinstance(sub, dict) or k not in sub:
+            return params
+        sub = sub[k]
+    return jax.tree_util.tree_map(
+        lambda x, s: jax.lax.with_sharding_constraint(x, NamedSharding(mesh, s)),
+        params,
+        sub,
+    )
+
+
+def constrain_batch(x: jax.Array, *, trailing: Optional[Tuple] = None) -> jax.Array:
+    """Pin x's dim 0 to the DP axes (and optionally dim 1 to the SP axis)."""
+    ctx = current()
+    if ctx is None:
+        return x
+    mesh, ba = ctx[0], ctx[1]
+    seq_axis = ctx[3] if len(ctx) > 3 else None
+    if trailing is None:
+        rest = [None] * (x.ndim - 1)
+        if seq_axis is not None and x.ndim >= 3 and x.shape[1] > 1:
+            sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+            ax = seq_axis if isinstance(seq_axis, tuple) else (seq_axis,)
+            import numpy as _np
+
+            if x.shape[1] % int(_np.prod([sizes[a] for a in ax])) == 0:
+                rest[0] = seq_axis
+        rest = tuple(rest)
+    else:
+        rest = trailing
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, PartitionSpec(ba, *rest))
+    )

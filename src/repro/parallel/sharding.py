@@ -1,0 +1,270 @@
+"""Logical-axis sharding rules (MaxText-style), divisibility-aware.
+
+Every parameter leaf (``P`` spec) names its dims with logical axes; the rules
+below map logical axes to mesh axes.  ``spec_for`` checks divisibility and
+never assigns the same mesh axis twice within one PartitionSpec, so any
+(config x mesh) combination lowers — heads that don't divide the TP axis
+simply replicate (the configs pad where that matters, see DESIGN.md §6).
+
+Parallelism coverage:
+  DP    batch dim over ('pod', 'data')
+  FSDP  'embed' (+ 'layers' fallback) over ('pod', 'data')  [ZeRO-3]
+  TP    'q_heads'/'kv_heads'/'ffn'/'vocab'/'ssm_inner'/... over 'model'
+  EP    'experts' over 'model'
+  SP    decode KV-cache sequence dim over 'data' when batch can't use it
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec
+
+from repro.models.config import ModelConfig, ShapeConfig
+from repro.models.params import P, is_leaf, tree_map_p
+
+# logical axis -> candidate mesh axes (first that divides wins; tried in order)
+DEFAULT_RULES: Dict[Optional[str], Tuple[Tuple[str, ...], ...]] = {
+    "embed": (("pod", "data"), ("data",)),  # FSDP / ZeRO-3
+    "vocab": (("model",),),
+    "q_heads": (("model",),),
+    "kv_heads": (("model",),),
+    "ffn": (("model",),),
+    "experts": (("model",),),
+    "moe_ffn": (),  # training: experts take 'model', embed takes FSDP
+    "ssm_inner": (("model",),),
+    "xl_inner": (("model",),),
+    "units": (("model",),),
+    "head_dim": (),
+    "layers": (),
+    None: (),
+}
+
+# Small-arch layout (<~1.5B params): TP over 16 chips makes every matmul's
+# activation all-reduce dominate a tiny compute; instead run pure DP over the
+# *whole* mesh (batch on pod x data x model) with ZeRO over the same axes.
+DP_ONLY_RULES: Dict[Optional[str], Tuple[Tuple[str, ...], ...]] = {
+    "embed": (("pod", "data", "model"), ("data", "model"), ("data",)),
+    "vocab": (),
+    "q_heads": (),
+    "kv_heads": (),
+    "ffn": (),
+    "experts": (),
+    "moe_ffn": (),
+    "ssm_inner": (),
+    "xl_inner": (),
+    "units": (),
+    "head_dim": (),
+    "layers": (),
+    None: (),
+}
+
+
+def dp_batch_axes(mesh: Mesh, batch: int) -> Optional[Any]:
+    """Densest prefix of ('pod','data','model') dividing the batch."""
+    sizes = _mesh_axis_sizes(mesh)
+    for axes in (("pod", "data", "model"), ("data", "model"), ("pod", "data"), ("data",)):
+        axes = tuple(a for a in axes if a in sizes)
+        if axes and batch % int(np.prod([sizes[a] for a in axes])) == 0:
+            return axes if len(axes) > 1 else axes[0]
+    return None
+
+
+# Serving layout: NO FSDP — weights never move at decode/prefill.  Hidden
+# dims take every available axis instead of the embed dim, so contractions
+# stay local and only (tiny) activation partial-sums cross the ICI.
+SERVING_RULES: Dict[Optional[str], Tuple[Tuple[str, ...], ...]] = {
+    "embed": (),
+    "vocab": (("model",),),
+    "q_heads": (("model",),),
+    "kv_heads": (("model",),),
+    "ffn": (("model", "data"), ("model",)),
+    "experts": (("model",),),
+    "moe_ffn": (("data",),),
+    "ssm_inner": (("model", "data"), ("model",)),
+    "xl_inner": (("model", "data"), ("model",)),
+    "units": (("model",),),
+    "head_dim": (),
+    "layers": (),
+    None: (),
+}
+
+
+def _mesh_axis_sizes(mesh: Mesh) -> Dict[str, int]:
+    return dict(zip(mesh.axis_names, mesh.devices.shape))
+
+
+def spec_for(p: P, mesh: Mesh, rules: Optional[Dict] = None) -> PartitionSpec:
+    rules = rules or DEFAULT_RULES
+    sizes = _mesh_axis_sizes(mesh)
+    used: set = set()
+    out = []
+    for dim, ax in zip(p.shape, p.axes):
+        assigned = None
+        for cand in rules.get(ax, ()):  # each cand is a tuple of mesh axes
+            cand = tuple(a for a in cand if a in sizes)
+            if not cand or any(a in used for a in cand):
+                continue
+            prod = int(np.prod([sizes[a] for a in cand]))
+            if prod > 1 and dim % prod == 0:
+                assigned = cand if len(cand) > 1 else cand[0]
+                used.update(cand)
+                break
+        out.append(assigned)
+    return PartitionSpec(*out)
+
+
+def param_pspecs(spec_tree: Any, mesh: Mesh, rules: Optional[Dict] = None) -> Any:
+    return tree_map_p(lambda p: spec_for(p, mesh, rules), spec_tree)
+
+
+# Compute-time rules: FSDP dims are *gathered* at the point of use (ZeRO-3
+# schedule); only true TP axes stay sharded during the matmul.
+COMPUTE_RULES: Dict[Optional[str], Tuple[Tuple[str, ...], ...]] = {
+    **DEFAULT_RULES,
+    "embed": (),
+}
+
+# moe2d variant: expert weights are *resharded* (d gathered, ffe sharded over
+# 'data') instead of fully gathered — the compute copy is 1/|data| the size
+# and the reshard moves ~1/|data| the bytes of an all-gather; the price is an
+# activation partial-sum after the down-projection.
+MOE2D_COMPUTE_RULES: Dict[Optional[str], Tuple[Tuple[str, ...], ...]] = {
+    **COMPUTE_RULES,
+    "moe_ffn": (("data",),),
+}
+
+# all2d: every hidden dim 2-D sharded at compute — weights reshard (cheap)
+# instead of gathering the embed dim; partial-sums on (B,S,d) activations.
+ALL2D_COMPUTE_RULES: Dict[Optional[str], Tuple[Tuple[str, ...], ...]] = {
+    **MOE2D_COMPUTE_RULES,
+    "ffn": (("model", "data"), ("model",)),
+    "ssm_inner": (("model", "data"), ("model",)),
+}
+
+
+def compute_pspecs(spec_tree: Any, mesh: Mesh) -> Any:
+    """Per-leaf compute PartitionSpecs with the leading stack dim dropped for
+    period-stacked leaves (the scan body sees one period's slice)."""
+
+    def leaf(p: P) -> PartitionSpec:
+        s = spec_for(p, mesh, COMPUTE_RULES)
+        if p.axes and p.axes[0] == "layers":
+            return PartitionSpec(*tuple(s)[1:])
+        return s
+
+    return tree_map_p(leaf, spec_tree)
+
+
+def resident_pspecs(spec_tree: Any, mesh: Mesh, rules: Optional[Dict] = None) -> Any:
+    """Serving-layout specs with the stack dim dropped: pins weights to where
+    they live during compute (no gathers — EP/TP stay put, activations move
+    instead)."""
+    rules = rules or SERVING_RULES
+
+    def leaf(p: P) -> PartitionSpec:
+        s = spec_for(p, mesh, rules)
+        if p.axes and p.axes[0] == "layers":
+            return PartitionSpec(*tuple(s)[1:])
+        return s
+
+    return tree_map_p(leaf, spec_tree)
+
+
+def param_shardings(spec_tree: Any, mesh: Mesh, rules: Optional[Dict] = None) -> Any:
+    return tree_map_p(lambda p: NamedSharding(mesh, spec_for(p, mesh, rules)), spec_tree)
+
+
+# ---------------------------------------------------------------------------
+# Activation / batch / cache shardings
+# ---------------------------------------------------------------------------
+
+
+def batch_axes(mesh: Mesh, batch: int) -> Optional[Any]:
+    """Densest prefix of ('pod','data') that divides the batch."""
+    sizes = _mesh_axis_sizes(mesh)
+    dp = tuple(a for a in ("pod", "data") if a in sizes)
+    full = int(np.prod([sizes[a] for a in dp])) if dp else 1
+    if dp and batch % full == 0:
+        return dp if len(dp) > 1 else dp[0]
+    if "data" in sizes and batch % sizes["data"] == 0:
+        return "data"
+    return None
+
+
+def token_pspec(mesh: Mesh, batch: int) -> PartitionSpec:
+    return PartitionSpec(batch_axes(mesh, batch), None)
+
+
+def batch_pspecs(mesh: Mesh, abstract_batch: Any, batch_size: int) -> Any:
+    """Shardings for the training/prefill input dict (tokens/frontend/frames)."""
+    ba = batch_axes(mesh, batch_size)
+
+    def leaf(x):
+        return PartitionSpec(ba, *([None] * (x.ndim - 1)))
+
+    return jax.tree_util.tree_map(leaf, abstract_batch)
+
+
+def cache_pspecs(cfg: ModelConfig, mesh: Mesh, abstract_cache: Any, batch: int) -> Any:
+    """KV/state cache shardings.
+
+    Batch shards over DP axes when divisible.  When it is not (long_500k has
+    batch 1) the *sequence* dim of attention caches shards over 'data'
+    instead — sequence parallelism for decode.  Head/inner dims shard over
+    'model' when divisible.
+    """
+    sizes = _mesh_axis_sizes(mesh)
+    ba = batch_axes(mesh, batch)
+    model = sizes.get("model", 1)
+    data = sizes.get("data", 1)
+
+    def leaf(path, x):
+        keys = [getattr(k, "key", getattr(k, "name", None)) for k in path]
+        keys = [k for k in keys if isinstance(k, str)]
+        # Leading dim may be the period-stack; detect via parent 'periods'.
+        stacked = "periods" in keys
+        lead = (None,) if stacked else ()
+        shape = x.shape[1:] if stacked else x.shape
+        kind = None
+        for k in ("kv", "xkv", "ssm", "ml", "sl"):
+            if k in keys:
+                kind = k
+        name = keys[-1] if keys else ""
+        if kind in ("kv", "xkv") and len(shape) == 4:
+            b, t, h, hd = shape
+            used = set()
+            if ba is not None:
+                used.update(ba if isinstance(ba, tuple) else (ba,))
+            head_ax = "model" if h % model == 0 and model > 1 else None
+            if head_ax:
+                used.add("model")
+            # Sequence parallelism for the cache: shard seq over every axis
+            # not already carrying batch/heads (long-context decode, and GQA
+            # archs whose few KV heads can't fill the model axis).
+            seq_axes = []
+            seq_div = 1
+            for a in ("data", "model"):
+                if a in sizes and a not in used and t % (seq_div * sizes[a]) == 0:
+                    seq_axes.append(a)
+                    seq_div *= sizes[a]
+            seq_ax = tuple(seq_axes) if len(seq_axes) > 1 else (seq_axes[0] if seq_axes else None)
+            return PartitionSpec(*lead, ba, seq_ax, head_ax, None)
+        if kind == "ssm" and name == "h" and len(shape) == 3:
+            return PartitionSpec(*lead, ba, "model" if shape[1] % model == 0 else None, None)
+        if kind == "ssm" and name == "conv" and len(shape) == 3:
+            return PartitionSpec(*lead, ba, None, "model" if shape[2] % model == 0 else None)
+        # xLSTM states & anything else: shard batch only.
+        return PartitionSpec(*lead, ba, *([None] * (len(shape) - 1)))
+
+    return jax.tree_util.tree_map_with_path(leaf, abstract_cache)
+
+
+def to_shardings(mesh: Mesh, pspec_tree: Any) -> Any:
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s),
+        pspec_tree,
+        is_leaf=lambda x: isinstance(x, PartitionSpec),
+    )

@@ -1,0 +1,6 @@
+from repro.runtime.elastic import (
+    ElasticPlan,
+    feasible_mesh_shape,
+    plan_remesh,
+)
+from repro.runtime.resilience import RetryPolicy, StragglerMonitor, with_retries

@@ -1,0 +1,76 @@
+"""Elastic scaling: re-mesh planning after node loss/addition.
+
+On real fleets a failed host removes a slice of devices; the runtime must
+pick a new (pod, data, model) factorization, re-shard the latest checkpoint,
+and resume.  The planning logic is pure and fully unit-tested here; the IO
+path reuses CheckpointManager (restore accepts any target sharding, so
+re-sharding on restore is free).
+
+Policy: keep the TP ('model') extent unchanged if possible — TP extent is
+baked into padded head/expert counts — and shrink/grow the DP axes; global
+batch is preserved by rescaling grad-accumulation microbatches.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class ElasticPlan:
+    mesh_shape: Tuple[int, ...]
+    axis_names: Tuple[str, ...]
+    n_micro: int  # new grad-accum factor preserving global batch
+    dropped_devices: int
+
+
+def feasible_mesh_shape(
+    n_devices: int, model_parallel: int, prefer_pods: int = 1
+) -> Optional[Tuple[int, ...]]:
+    """Largest (pod, data, model) grid with data*model*pod <= n_devices."""
+    if n_devices < model_parallel:
+        return None
+    usable = n_devices - (n_devices % model_parallel)
+    dp_total = usable // model_parallel
+    if dp_total == 0:
+        return None
+    pods = prefer_pods
+    while pods > 1 and dp_total % pods != 0:
+        pods -= 1
+    data = dp_total // pods
+    if pods > 1:
+        return (pods, data, model_parallel)
+    return (data, model_parallel)
+
+
+def plan_remesh(
+    n_devices: int,
+    model_parallel: int,
+    global_batch: int,
+    old_n_micro: int,
+    old_data_extent: int,
+    prefer_pods: int = 1,
+) -> Optional[ElasticPlan]:
+    shape = feasible_mesh_shape(n_devices, model_parallel, prefer_pods)
+    if shape is None:
+        return None
+    names = ("pod", "data", "model") if len(shape) == 3 else ("data", "model")
+    data_extent = shape[-2] * (shape[0] if len(shape) == 3 else 1)
+    # Preserve the global batch: per-device batch fixed => n_micro scales
+    # inversely with the DP extent.
+    n_micro = max(1, old_n_micro * old_data_extent // max(data_extent, 1))
+    while n_micro < global_batch and global_batch % n_micro != 0:
+        n_micro += 1
+    while (global_batch // n_micro) % data_extent != 0 and n_micro < global_batch:
+        n_micro += 1
+        while global_batch % n_micro != 0 and n_micro < global_batch:
+            n_micro += 1
+    used = 1
+    for s in shape:
+        used *= s
+    return ElasticPlan(
+        mesh_shape=shape,
+        axis_names=names,
+        n_micro=n_micro,
+        dropped_devices=n_devices - used,
+    )

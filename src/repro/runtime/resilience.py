@@ -1,0 +1,66 @@
+"""Failure handling primitives: bounded retries with backoff for transient
+device/host errors, and a straggler monitor that flags slow steps against a
+trailing median (the mitigation at scale: reshard away from the slow host via
+the elastic planner, or preemptively restart it)."""
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import deque
+from typing import Callable, Deque, Optional, Tuple, TypeVar
+
+T = TypeVar("T")
+
+
+@dataclasses.dataclass(frozen=True)
+class RetryPolicy:
+    max_attempts: int = 3
+    backoff_s: float = 0.1
+    backoff_mult: float = 2.0
+    retryable: Tuple[type, ...] = (RuntimeError, OSError)
+
+
+def with_retries(fn: Callable[[], T], policy: RetryPolicy = RetryPolicy(),
+                 on_retry: Optional[Callable[[int, Exception], None]] = None) -> T:
+    delay = policy.backoff_s
+    for attempt in range(1, policy.max_attempts + 1):
+        try:
+            return fn()
+        except policy.retryable as e:  # noqa: PERF203
+            if attempt == policy.max_attempts:
+                raise
+            if on_retry:
+                on_retry(attempt, e)
+            time.sleep(delay)
+            delay *= policy.backoff_mult
+    raise AssertionError("unreachable")
+
+
+class StragglerMonitor:
+    """Flags steps slower than ``threshold`` x trailing median.
+
+    At scale the same logic runs per-host on step barrier times; a flagged
+    host is reported to the elastic controller.  Deterministic and
+    unit-testable: feed it durations, read back flags.
+    """
+
+    def __init__(self, window: int = 32, threshold: float = 2.0):
+        self.window = window
+        self.threshold = threshold
+        self._times: Deque[float] = deque(maxlen=window)
+        self.flagged = 0
+
+    def observe(self, duration_s: float) -> bool:
+        med = self.median()
+        self._times.append(duration_s)
+        if med is None:
+            return False
+        slow = duration_s > self.threshold * med
+        self.flagged += int(slow)
+        return slow
+
+    def median(self) -> Optional[float]:
+        if len(self._times) < max(4, self.window // 4):
+            return None
+        s = sorted(self._times)
+        return s[len(s) // 2]

@@ -1,0 +1,7 @@
+from repro.train.step import (
+    TrainSpec,
+    abstract_train_state,
+    make_decode_step,
+    make_prefill_step,
+    make_train_step,
+)

@@ -1,0 +1,100 @@
+"""Jittable train / prefill / decode steps.
+
+train_step runs gradient accumulation as a ``lax.scan`` over microbatches
+(compute/communication overlap: XLA pipelines the FSDP all-gathers of the
+next layer against the current layer's matmuls inside the period-scan, and
+the single grad all-reduce happens once per *step*, not per microbatch).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import lm
+from repro.models.config import ModelConfig, ShapeConfig
+from repro.optim.adamw import OptConfig, abstract_opt_state, adamw_update
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainSpec:
+    """Per-(arch, shape) fitting knobs — the §Perf hillclimb surface."""
+
+    microbatch: int = 8  # per-step microbatch (global); must divide global batch
+    opt: OptConfig = OptConfig()
+    acc_dtype: str = "float32"  # grad-accumulator dtype (bf16 halves it at 398B)
+
+
+def abstract_train_state(cfg: ModelConfig, spec: TrainSpec) -> Dict[str, Any]:
+    params = lm.abstract_params(cfg)
+    return {"params": params, "opt": abstract_opt_state(params, spec.opt)}
+
+
+def init_train_state(key: jax.Array, cfg: ModelConfig, spec: TrainSpec) -> Dict[str, Any]:
+    from repro.optim.adamw import init_opt_state
+
+    params = lm.concrete_params(key, cfg)
+    return {"params": params, "opt": init_opt_state(params, spec.opt)}
+
+
+def make_train_step(cfg: ModelConfig, spec: TrainSpec):
+    """(state, batch) -> (state, metrics).
+
+    ``batch`` leaves have shape (n_micro, micro_batch, ...): the scan axis is
+    the accumulation loop.
+    """
+
+    acc_dt = jnp.dtype(spec.acc_dtype)
+
+    def train_step(state, batch):
+        params = state["params"]
+
+        def micro(carry, mb):
+            gacc, lacc = carry
+            loss, grads = jax.value_and_grad(lm.loss_fn)(params, cfg, mb)
+            gacc = jax.tree_util.tree_map(
+                lambda a, g: a + g.astype(acc_dt), gacc, grads
+            )
+            return (gacc, lacc + loss), None
+
+        gzero = jax.tree_util.tree_map(
+            lambda p: jnp.zeros(p.shape, acc_dt), params
+        )
+        n_micro = jax.tree_util.tree_leaves(batch)[0].shape[0]
+        (gacc, lsum), _ = jax.lax.scan(micro, (gzero, jnp.zeros((), jnp.float32)), batch)
+        grads = jax.tree_util.tree_map(lambda g: g / n_micro, gacc)
+        new_params, new_opt, metrics = adamw_update(grads, state["opt"], params, spec.opt)
+        metrics["loss"] = lsum / n_micro
+        return {"params": new_params, "opt": new_opt}, metrics
+
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig):
+    def prefill_step(params, batch):
+        return lm.prefill(params, cfg, batch)
+
+    return prefill_step
+
+
+def make_decode_step(cfg: ModelConfig):
+    def decode_step(params, cache, token, pos):
+        return lm.decode_step(params, cfg, cache, token, pos)
+
+    return decode_step
+
+
+def microbatch_reshape(batch: Dict[str, Array], n_micro: int) -> Dict[str, Array]:
+    """(B, ...) -> (n_micro, B/n_micro, ...) for the accumulation scan."""
+
+    def leaf(x):
+        b = x.shape[0]
+        assert b % n_micro == 0, (b, n_micro)
+        return x.reshape(n_micro, b // n_micro, *x.shape[1:])
+
+    return jax.tree_util.tree_map(leaf, batch)

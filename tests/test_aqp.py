@@ -1,0 +1,136 @@
+"""AQP layer: stratified sampling, Haas estimators, bootstrap, wander join,
+size estimation accuracy."""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.aqp.bootstrap import bootstrap_group_means
+from repro.aqp.estimators import group_estimates, norm_cdf, pass_probability
+from repro.aqp.sampling import SampleCache, stratified_reservoir_sample, uniform_reservoir_sample
+from repro.aqp.size_estimation import EstimationConfig, approximate_query_result, estimate_size
+from repro.aqp.wander_join import JoinIndex, walk
+from repro.core import Aggregate, Database, Having, JoinSpec, Query, capture_sketch, equi_depth_ranges
+from repro.core.datasets import make_crimes, make_tpch
+
+KEY = jax.random.PRNGKey(0)
+
+
+@pytest.fixture(scope="module")
+def db():
+    return Database({"crimes": make_crimes(30_000, seed=5)})
+
+
+def test_stratified_sample_represents_every_group(db):
+    t = db["crimes"]
+    s = stratified_reservoir_sample(KEY, t, ("district", "year"), theta=0.05)
+    assert s.stratified
+    assert (s.sample_sizes >= 1).all()  # every group represented
+    assert (s.sample_sizes <= s.group_sizes).all()
+    # roughly theta of the table overall (min-1-per-group inflates slightly)
+    assert 0.03 < s.num_samples / t.num_rows < 0.15
+    # sampled rows really belong to their groups
+    d = np.asarray(t["district"])[s.indices]
+    assert (d == s.group_values["district"][s.sample_gid]).all()
+
+
+def test_uniform_fallback_when_too_many_groups(db):
+    t = db["crimes"]
+    # beat x year x month has ~more groups than 0.1% sample budget
+    s = stratified_reservoir_sample(KEY, t, ("beat", "year", "month"), theta=0.001)
+    assert not s.stratified
+
+
+def test_sum_estimator_unbiased(db):
+    """Mean of per-group SUM estimates over many sample draws ~ true sums."""
+    t = db["crimes"]
+    from repro.core.table import encode_groups
+
+    gid, n_groups, _ = encode_groups(t, ("district",))
+    vals = np.asarray(t["records"], dtype=np.float64)
+    true = np.bincount(gid, weights=vals, minlength=n_groups)
+    ests = []
+    for i in range(30):
+        s = stratified_reservoir_sample(jax.random.PRNGKey(i), t, ("district",), 0.05)
+        est = group_estimates(
+            "sum", t["records"][np.sort(s.indices)] if False else t.gather(s.indices)["records"],
+            np.ones(s.num_samples, bool), s.sample_gid, s.n_groups, s.group_sizes,
+        )
+        ests.append(est.estimate)
+    mean_est = np.mean(ests, axis=0)
+    rel = np.abs(mean_est - true) / np.maximum(true, 1)
+    # records is zipf-skewed: SUM estimates are high-variance but unbiased;
+    # the 30-draw mean should land within ~15% for most groups.
+    assert np.median(rel) < 0.15
+
+
+def test_pass_probability_monotone():
+    est = group_estimates(
+        "sum",
+        jax.numpy.asarray(np.array([10.0, 20.0, 30.0, 40.0], np.float32)),
+        jax.numpy.asarray(np.ones(4, bool)),
+        np.array([0, 0, 1, 1], np.int32),
+        2,
+        np.array([10, 10]),
+    )
+    p_low = pass_probability(est, ">", 50.0)
+    p_high = pass_probability(est, ">", 500.0)
+    assert (p_low >= p_high).all()
+    assert norm_cdf(np.array([0.0]))[0] == pytest.approx(0.5, abs=1e-6)
+
+
+def test_bootstrap_shrinks_with_group_size():
+    rng = np.random.default_rng(0)
+    gid = np.repeat([0, 1], [400, 25]).astype(np.int32)
+    vals = rng.normal(10, 3, 425).astype(np.float32)
+    bs = bootstrap_group_means(KEY, vals, gid, 2, n_resamples=50)
+    assert bs.std[0] < bs.std[1]  # bigger stratum -> tighter statistic
+    assert bs.mean == pytest.approx(
+        [vals[gid == 0].mean(), vals[gid == 1].mean()], abs=1.0
+    )
+
+
+def test_wander_join_walk():
+    tpch = make_tpch(5_000, seed=6)
+    idx = JoinIndex.build(tpch["orders"], "o_orderkey")
+    fact_keys = np.asarray(tpch["lineitem"]["l_orderkey"])[:500]
+    rows, fanout = walk(KEY, idx, fact_keys)
+    ok = np.asarray(tpch["orders"]["o_orderkey"])
+    assert (fanout >= 1).all()  # all orderkeys exist
+    assert (ok[rows] == fact_keys).all()  # picked partner matches the key
+
+
+def test_size_estimation_accuracy(db):
+    q = Query("crimes", ("district", "year"), Aggregate("sum", "records"),
+              having=Having(">", 100.0))
+    s = stratified_reservoir_sample(KEY, db["crimes"], q.groupby, 0.05)
+    for attr in ("district", "year"):
+        ranges = equi_depth_ranges(db["crimes"], attr, 20)
+        est = estimate_size(KEY, q, db, ranges, s)
+        actual = capture_sketch(q, db, ranges).size_rows
+        rse = abs(est.est_rows - actual) / max(actual, 1)
+        assert rse < 0.2, (attr, est.est_rows, actual)
+        assert est.lo_rows <= est.hi_rows
+        assert 0 <= est.est_selectivity <= 1
+
+
+def test_join_size_estimation():
+    tpch = make_tpch(20_000, seed=7)
+    q = Query("lineitem", ("l_suppkey",), Aggregate("sum", "l_quantity"),
+              join=JoinSpec("orders", "l_orderkey", "o_orderkey"),
+              having=Having(">", 50.0))
+    s = stratified_reservoir_sample(KEY, tpch["lineitem"], ("l_suppkey",), 0.1)
+    ranges = equi_depth_ranges(tpch["lineitem"], "l_suppkey", 20)
+    est = estimate_size(KEY, q, tpch, ranges, s)
+    actual = capture_sketch(q, tpch, ranges).size_rows
+    assert abs(est.est_rows - actual) / max(actual, 1) < 0.35
+
+
+def test_sample_cache_reuse(db):
+    cache = SampleCache()
+    s1 = cache.get_or_create(KEY, db["crimes"], ("district",), 0.05)
+    s2 = cache.get_or_create(jax.random.PRNGKey(9), db["crimes"], ("district",), 0.05)
+    assert s1 is s2 and cache.hits == 1 and cache.misses == 1
+    assert s1.reusable_for("crimes", ("district",))
+    assert not s1.reusable_for("crimes", ("year",))

@@ -1,0 +1,111 @@
+"""Per-architecture smoke tests (reduced configs): one forward/train step on
+CPU asserting output shapes + no NaNs, a decode step, and decode-vs-prefill
+consistency for the attention path."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, get_config
+from repro.models import lm
+from repro.optim.adamw import OptConfig
+from repro.train.step import TrainSpec, init_train_state, make_train_step, microbatch_reshape
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _batch(cfg, b, s):
+    batch = {"tokens": jax.random.randint(KEY, (b, s), 0, cfg.vocab_size)}
+    if cfg.frontend == "vision":
+        batch["frontend"] = jax.random.normal(KEY, (b, cfg.n_frontend_tokens, cfg.frontend_dim))
+    if cfg.is_encdec:
+        batch["frames"] = jax.random.normal(KEY, (b, s, cfg.frontend_dim))
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_forward_and_train_step(arch):
+    cfg = get_config(arch, smoke=True)
+    spec = TrainSpec(microbatch=2, opt=OptConfig(total_steps=10))
+    state = init_train_state(KEY, cfg, spec)
+    step = jax.jit(make_train_step(cfg, spec))
+    batch = microbatch_reshape(_batch(cfg, 4, 32), 2)
+    state, metrics = step(state, batch)
+    assert np.isfinite(float(metrics["loss"])), arch
+    assert float(metrics["loss"]) > 0
+    # params updated and still finite
+    leaf = jax.tree_util.tree_leaves(state["params"])[0]
+    assert np.isfinite(np.asarray(leaf, np.float32)).all()
+    assert int(state["opt"]["step"]) == 1
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_decode_step(arch):
+    cfg = get_config(arch, smoke=True)
+    params = lm.concrete_params(KEY, cfg)
+    b, t = 2, 16
+    cache = lm.init_cache(cfg, b, t, cross_len=t if cfg.is_encdec else 0)
+    logits, cache2 = jax.jit(
+        lambda p, c, tok, pos: lm.decode_step(p, cfg, c, tok, pos)
+    )(params, cache, jnp.zeros((b,), jnp.int32), jnp.array(0, jnp.int32))
+    assert logits.shape == (b, cfg.vocab_p)
+    assert np.isfinite(np.asarray(logits)).all(), arch
+    # cache structure preserved
+    assert jax.tree_util.tree_structure(cache) == jax.tree_util.tree_structure(cache2)
+
+
+def test_decode_matches_full_forward_attention():
+    """Teacher-forced decode logits == full-sequence forward logits (dense)."""
+    cfg = get_config("stablelm-1.6b", smoke=True)
+    params = lm.concrete_params(KEY, cfg)
+    b, s = 1, 12
+    tokens = jax.random.randint(KEY, (b, s), 0, cfg.vocab_size)
+    full_logits = lm.prefill(params, cfg, {"tokens": tokens})  # last position
+    cache = lm.init_cache(cfg, b, s)
+    logits = None
+    for i in range(s):
+        logits, cache = lm.decode_step(params, cfg, cache, tokens[:, i], jnp.array(i, jnp.int32))
+    np.testing.assert_allclose(
+        np.asarray(logits), np.asarray(full_logits), atol=0.15, rtol=0.05
+    )
+
+
+def test_sliding_window_cache_ring_buffer():
+    """gemma3-style local attention: ring buffer gives same logits as full
+    cache once positions exceed the window."""
+    cfg = get_config("gemma3-27b", smoke=True)
+    params = lm.concrete_params(KEY, cfg)
+    b, s = 1, 24  # window is 8 in the smoke config
+    tokens = jax.random.randint(KEY, (b, s), 0, cfg.vocab_size)
+    cache = lm.init_cache(cfg, b, s)
+    for i in range(s):
+        logits, cache = lm.decode_step(params, cfg, cache, tokens[:, i], jnp.array(i, jnp.int32))
+    full = lm.prefill(params, cfg, {"tokens": tokens})
+    np.testing.assert_allclose(np.asarray(logits), np.asarray(full), atol=0.2, rtol=0.08)
+
+
+def test_param_count_sane():
+    for arch, lo, hi in [
+        ("stablelm-1.6b", 1.2e9, 2.2e9),
+        ("internlm2-20b", 15e9, 25e9),
+        ("qwen1.5-32b", 25e9, 40e9),
+        ("gemma3-27b", 20e9, 35e9),
+        ("jamba-1.5-large-398b", 300e9, 480e9),
+        ("qwen3-moe-30b-a3b", 22e9, 40e9),
+        ("xlstm-350m", 0.2e9, 0.6e9),
+    ]:
+        n = get_config(arch).param_count()
+        assert lo < n < hi, (arch, f"{n:.3e}")
+
+
+def test_moe_active_params_less_than_total():
+    cfg = get_config("qwen3-moe-30b-a3b")
+    assert cfg.param_count(active_only=True) < 0.25 * cfg.param_count()
+
+
+def test_long_context_support_flags():
+    assert get_config("xlstm-350m").supports_long_context()
+    assert get_config("jamba-1.5-large-398b").supports_long_context()
+    assert get_config("gemma3-27b").supports_long_context()
+    assert not get_config("stablelm-1.6b").supports_long_context()
+    assert not get_config("qwen3-moe-30b-a3b").supports_long_context()

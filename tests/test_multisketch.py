@@ -1,0 +1,68 @@
+"""Composite (multi-attribute) sketches — the beyond-paper extension."""
+import jax
+import numpy as np
+import pytest
+
+from repro.core import Aggregate, Database, Having, Query, capture_sketch, equi_depth_ranges, execute
+from repro.core.datasets import make_crimes
+from repro.core.multisketch import (
+    CompositeRanges,
+    capture_composite,
+    composite_ranges,
+    execute_with_composite,
+    select_composite_gb,
+)
+
+
+@pytest.fixture(scope="module")
+def db():
+    return Database({"crimes": make_crimes(15_000, seed=31)})
+
+
+@pytest.fixture(scope="module")
+def q(db):
+    base = Query("crimes", ("district", "year"), Aggregate("sum", "records"))
+    tau = float(np.quantile(execute(base, db).values, 0.9))
+    import dataclasses
+
+    return dataclasses.replace(base, having=Having(">", tau))
+
+
+def test_composite_sketch_safe(db, q):
+    cr = composite_ranges(db["crimes"], ("district", "year"), 100)
+    sk = capture_composite(q, db, cr)
+    assert execute_with_composite(q, db, sk).canonical() == execute(q, db).canonical()
+    assert 0.0 < sk.selectivity <= 1.0
+
+
+def test_composite_never_larger_than_singles(db, q):
+    """A GB-pair partition refines both singles => selectivity can only drop."""
+    cr = composite_ranges(db["crimes"], ("district", "year"), 100)
+    comp = capture_composite(q, db, cr)
+    for attr in ("district", "year"):
+        single = capture_sketch(q, db, equi_depth_ranges(db["crimes"], attr, 100))
+        # composite uses ~sqrt budget per attr, so compare against same-ranges
+        # singles built from the composite's own parts:
+        part = [p for p in cr.parts if p.attr == attr][0]
+        single_same = capture_sketch(q, db, part)
+        assert comp.selectivity <= single_same.selectivity + 1e-9
+
+
+def test_composite_bucketize_is_cross_product(db):
+    cr = composite_ranges(db["crimes"], ("district", "year"), 64)
+    b = np.asarray(cr.bucketize(db["crimes"]))
+    assert b.min() >= 0 and b.max() < cr.n_ranges
+    b0 = np.asarray(cr.parts[0].bucketize(db["crimes"]["district"]))
+    b1 = np.asarray(cr.parts[1].bucketize(db["crimes"]["year"]))
+    np.testing.assert_array_equal(b, b0 * cr.parts[1].n_ranges + b1)
+
+
+def test_cb_opt_gb2_selects_reasonably(db, q):
+    key = jax.random.PRNGKey(0)
+    best, cr, sizes = select_composite_gb(key, q, db, 100, theta=0.1)
+    # exact capture of the chosen candidate should be close to its estimate
+    sk = capture_composite(q, db, cr)
+    assert abs(sk.selectivity - sizes[best]) < 0.15
+    # the winner must be no worse than the worst single by a margin
+    singles = {k: v for k, v in sizes.items() if len(k) == 1}
+    assert sizes[best] <= min(singles.values()) + 1e-9

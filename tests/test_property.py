@@ -1,0 +1,108 @@
+"""Hypothesis property tests for the system's core invariants:
+
+  1. SAFETY: for any generated table + Q-AGH query + safe attribute, the
+     sketch-instrumented query returns exactly the full-data result.
+  2. Sketch covers provenance; selectivity in (0, 1]; accurate sketch bits
+     equal the brute-force fragment incidence of the provenance.
+  3. Size estimation is bounded by the table size and the Frechet interval
+     is ordered.
+  4. Index subsumption never returns an unsafe sketch.
+"""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+from hypothesis import HealthCheck, given, settings
+from hypothesis import strategies as st
+
+from repro.aqp.sampling import stratified_reservoir_sample
+from repro.aqp.size_estimation import estimate_size
+from repro.core import (
+    Aggregate, Database, Having, Query, capture_sketch, equi_depth_ranges,
+    execute, execute_with_sketch, provenance_mask, subsumes,
+)
+from repro.core.table import from_numpy
+
+SETTINGS = dict(
+    max_examples=25,
+    deadline=None,
+    suppress_health_check=[HealthCheck.too_slow, HealthCheck.data_too_large],
+)
+
+
+@st.composite
+def table_and_query(draw):
+    n = draw(st.integers(min_value=30, max_value=400))
+    seed = draw(st.integers(min_value=0, max_value=2**31 - 1))
+    rng = np.random.default_rng(seed)
+    ncat = draw(st.integers(min_value=2, max_value=12))
+    t = from_numpy(
+        "t",
+        dict(
+            a=rng.integers(0, ncat, n).astype(np.int32),
+            b=rng.integers(0, ncat * 2, n).astype(np.int32),
+            c=rng.integers(0, 50, n).astype(np.int32),
+            v=rng.integers(0, 100, n).astype(np.int32),  # non-negative values
+        ),
+    )
+    gb = draw(st.sampled_from([("a",), ("b",), ("a", "b")]))
+    fn = draw(st.sampled_from(["sum", "count", "avg"]))
+    tau = draw(st.floats(min_value=1.0, max_value=500.0))
+    q = Query("t", gb, Aggregate(fn, None if fn == "count" else "v"),
+              having=Having(">", tau))
+    attr_pool = list(gb) if fn == "avg" else ["a", "b", "c"]
+    attr = draw(st.sampled_from(attr_pool))
+    n_ranges = draw(st.integers(min_value=2, max_value=20))
+    return Database({"t": t}), q, attr, n_ranges
+
+
+@given(table_and_query())
+@settings(**SETTINGS)
+def test_sketch_safety_invariant(tq):
+    db, q, attr, n_ranges = tq
+    ranges = equi_depth_ranges(db["t"], attr, n_ranges)
+    sk = capture_sketch(q, db, ranges)
+    assert execute_with_sketch(q, db, sk).canonical() == execute(q, db).canonical()
+    assert 0.0 <= sk.selectivity <= 1.0
+
+
+@given(table_and_query())
+@settings(**SETTINGS)
+def test_sketch_bits_are_exact_incidence(tq):
+    db, q, attr, n_ranges = tq
+    ranges = equi_depth_ranges(db["t"], attr, n_ranges)
+    sk = capture_sketch(q, db, ranges)
+    prov = provenance_mask(q, db)
+    bucket = np.asarray(ranges.bucketize(db["t"][attr]))
+    want = np.zeros(ranges.n_ranges, bool)
+    for r in bucket[prov]:
+        want[r] = True
+    np.testing.assert_array_equal(sk.bits, want)
+
+
+@given(table_and_query())
+@settings(**SETTINGS)
+def test_size_estimate_bounded(tq):
+    db, q, attr, n_ranges = tq
+    ranges = equi_depth_ranges(db["t"], attr, n_ranges)
+    s = stratified_reservoir_sample(jax.random.PRNGKey(0), db["t"], q.groupby, 0.3)
+    est = estimate_size(jax.random.PRNGKey(1), q, db, ranges, s)
+    n = db["t"].num_rows
+    assert 0.0 <= est.est_rows <= n + 1e-6
+    assert 0.0 <= est.est_selectivity <= 1.0
+    assert est.lo_rows <= est.hi_rows + 1e-6
+    assert est.expected_rows <= est.hi_rows + 1e-6
+
+
+@given(table_and_query(), st.floats(min_value=0.0, max_value=300.0))
+@settings(**SETTINGS)
+def test_subsumption_soundness(tq, delta):
+    """If subsumes(q1, q2), the q1 sketch answers q2 exactly."""
+    db, q1, attr, n_ranges = tq
+    q2 = dataclasses.replace(q1, having=Having(">", q1.having.value + delta))
+    if not subsumes(q1, q2):
+        pytest.skip("not subsumed (op not monotone)")
+    ranges = equi_depth_ranges(db["t"], attr, n_ranges)
+    sk = capture_sketch(q1, db, ranges)
+    assert execute_with_sketch(q2, db, sk).canonical() == execute(q2, db).canonical()

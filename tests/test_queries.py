@@ -1,0 +1,119 @@
+"""Executor correctness vs a numpy brute-force oracle for all templates."""
+import numpy as np
+import pytest
+
+from repro.core import Aggregate, Database, Having, JoinSpec, Predicate, Query, execute, provenance_mask
+from repro.core.datasets import make_crimes, make_tpch
+
+
+@pytest.fixture(scope="module")
+def crimes_db():
+    return Database({"crimes": make_crimes(5_000, seed=11)})
+
+
+@pytest.fixture(scope="module")
+def tpch_db():
+    return make_tpch(8_000, seed=12)
+
+
+def brute_force_agh(db, q):
+    t = db[q.table].to_numpy()
+    n = len(next(iter(t.values())))
+    where = np.ones(n, bool)
+    if q.where:
+        ops = {">": np.greater, ">=": np.greater_equal, "<": np.less,
+               "<=": np.less_equal, "=": np.equal}
+        where = ops[q.where.op](t[q.where.attr], q.where.value)
+    groups = {}
+    for i in range(n):
+        key = tuple(float(t[a][i]) for a in q.groupby)
+        groups.setdefault(key, []).append(i)
+    out = {}
+    for key, idx in groups.items():
+        idx = [i for i in idx if where[i]]
+        if not idx:
+            continue
+        if q.agg.fn == "count":
+            v = float(len(idx))
+        elif q.agg.fn == "sum":
+            v = float(sum(t[q.agg.attr][i] for i in idx))
+        else:
+            v = float(np.mean([t[q.agg.attr][i] for i in idx]))
+        if q.having is None or eval(f"v {q.having.op.replace('=','==') if q.having.op=='=' else q.having.op} {q.having.value}"):
+            out[key] = v
+    return out
+
+
+@pytest.mark.parametrize("fn,attr", [("sum", "records"), ("avg", "records"), ("count", None)])
+@pytest.mark.parametrize("with_where", [False, True])
+def test_agh_matches_bruteforce(crimes_db, fn, attr, with_where):
+    q = Query(
+        table="crimes",
+        groupby=("district", "year"),
+        agg=Aggregate(fn, attr),
+        where=Predicate("month", "<=", 6) if with_where else None,
+        having=Having(">", 30.0) if fn != "avg" else Having(">", 18.0),
+    )
+    got = {tuple(float(q2[i]) for q2 in [execute(q, crimes_db).group_values[a] for a in sorted(execute(q, crimes_db).group_values)]): None for i in []}
+    res = execute(q, crimes_db)
+    got = {}
+    attrs = list(q.groupby)
+    for i in range(len(res.values)):
+        key = tuple(float(res.group_values[a][i]) for a in attrs)
+        got[key] = float(res.values[i])
+    want = brute_force_agh(crimes_db, q)
+    assert set(got) == set(want)
+    for k in want:
+        assert got[k] == pytest.approx(want[k], rel=1e-4)
+
+
+def test_join_template(tpch_db):
+    q = Query(
+        table="lineitem",
+        groupby=("l_suppkey",),
+        agg=Aggregate("sum", "l_quantity"),
+        join=JoinSpec("orders", "l_orderkey", "o_orderkey"),
+        having=Having(">", 100.0),
+    )
+    res = execute(q, tpch_db)
+    # oracle: manual join (all lineitems match since orders cover the range)
+    li = tpch_db["lineitem"].to_numpy()
+    ok = np.asarray(tpch_db["orders"]["o_orderkey"])
+    match = np.isin(li["l_orderkey"], ok)
+    sums = {}
+    for sk, qy, m in zip(li["l_suppkey"], li["l_quantity"], match):
+        if m:
+            sums[float(sk)] = sums.get(float(sk), 0.0) + float(qy)
+    want = {k: v for k, v in sums.items() if v > 100.0}
+    got = dict(zip(map(float, res.group_values["l_suppkey"]), map(float, res.values)))
+    assert got == pytest.approx(want, rel=1e-4)
+
+
+def test_nested_template(crimes_db):
+    q = Query(
+        table="crimes",
+        groupby=("district", "year"),
+        agg=Aggregate("sum", "records"),
+        having=Having(">", 20.0),
+        outer_groupby=("district",),
+        outer_agg=Aggregate("sum", None),
+        outer_having=Having(">", 100.0),
+    )
+    res = execute(q, crimes_db)
+    assert q.template == "Q-AAGH"
+    # oracle
+    inner = brute_force_agh(crimes_db, Query("crimes", ("district", "year"), Aggregate("sum", "records"), having=Having(">", 20.0)))
+    outer = {}
+    for (d, y), v in inner.items():
+        outer[d] = outer.get(d, 0.0) + v
+    want = {k: v for k, v in outer.items() if v > 100.0}
+    got = dict(zip(map(float, res.group_values["district"]), map(float, res.values)))
+    assert got == pytest.approx(want, rel=1e-4)
+
+
+def test_provenance_is_sufficient(crimes_db):
+    """Q(P(Q,D)) == Q(D): the lineage really is a sufficient subset."""
+    q = Query("crimes", ("district", "month"), Aggregate("sum", "records"), having=Having(">", 50.0))
+    prov = provenance_mask(q, crimes_db)
+    sub = Database({"crimes": crimes_db["crimes"].select(prov)})
+    assert execute(q, sub).canonical() == execute(q, crimes_db).canonical()

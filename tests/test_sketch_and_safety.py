@@ -1,0 +1,95 @@
+"""Sketch capture / application / safety / index-reuse behaviour."""
+import numpy as np
+import pytest
+
+from repro.core import (
+    Aggregate, Database, Having, Predicate, Query, SketchIndex, apply_sketch,
+    capture_sketch, equi_depth_ranges, execute, execute_with_sketch,
+    is_safe_sketch, prefilter_candidates, safe_attributes, subsumes,
+)
+from repro.core.datasets import make_crimes
+
+
+@pytest.fixture(scope="module")
+def db():
+    return Database({"crimes": make_crimes(20_000, seed=3)})
+
+
+@pytest.fixture(scope="module")
+def q():
+    # Threshold at the ~85th percentile of group sums so the sketch actually
+    # skips fragments on a 20k-row table.
+    return Query(
+        table="crimes",
+        groupby=("district", "year"),
+        agg=Aggregate("sum", "records"),
+        having=Having(">", 400.0),
+    )
+
+
+@pytest.mark.parametrize("attr", ["district", "year", "month", "records", "beat"])
+def test_sketch_is_safe_on_any_attr(db, q, attr):
+    """SUM >= 0 with HAVING '>' is upward monotone: all attrs safe (Sec. 4.3)."""
+    ranges = equi_depth_ranges(db["crimes"], attr, 50)
+    sk = capture_sketch(q, db, ranges)
+    assert is_safe_sketch(q, db, sk)
+    assert 0.0 < sk.selectivity <= 1.0
+
+
+def test_sketch_covers_provenance(db, q):
+    from repro.core import provenance_mask, sketch_keep_mask
+
+    ranges = equi_depth_ranges(db["crimes"], "beat", 50)
+    sk = capture_sketch(q, db, ranges)
+    prov = provenance_mask(q, db)
+    keep = np.asarray(sketch_keep_mask(sk, db["crimes"]))
+    assert (keep | ~prov).all()  # every provenance row kept
+
+
+def test_avg_having_restricts_safety(db):
+    q_avg = Query("crimes", ("district",), Aggregate("avg", "records"), having=Having(">", 5.0))
+    safe = safe_attributes(q_avg, db)
+    assert set(safe) == {"district"}  # only GB attrs safe for AVG
+
+
+def test_prefilter_keeps_gb_attrs(db, q):
+    cands = prefilter_candidates(q, db, ("district", "year", "month", "beat"), 100)
+    assert "district" in cands and "year" in cands  # GB attrs exempt
+    assert "month" not in cands  # 12 distinct < 100 ranges, not a GB attr
+    assert "beat" in cands  # enough distinct values
+
+
+def test_index_reuse_subsumption(db, q):
+    idx = SketchIndex()
+    sk = capture_sketch(q, db, equi_depth_ranges(db["crimes"], "district", 25))
+    idx.insert(q, sk)
+    # Higher threshold => subset provenance => reusable.
+    import dataclasses
+
+    q_higher = dataclasses.replace(q, having=Having(">", q.having.value + 200.0))
+    assert subsumes(q, q_higher)
+    assert idx.lookup(q_higher) is not None
+    # Lower threshold needs MORE data: not reusable.
+    q_lower = dataclasses.replace(q, having=Having(">", q.having.value - 300.0))
+    assert not subsumes(q, q_lower)
+    assert idx.lookup(q_lower) is None
+    # Different group-by: not reusable.
+    q_other = dataclasses.replace(q, groupby=("month",))
+    assert idx.lookup(q_other) is None
+    # Reused sketch still yields exact results.
+    res = execute_with_sketch(q_higher, db, idx.lookup(q_higher))
+    assert res.canonical() == execute(q_higher, db).canonical()
+
+
+def test_apply_sketch_shrinks_db(db):
+    # A 99th-percentile threshold leaves a handful of groups => the sketch
+    # must actually skip fragments.
+    import dataclasses
+
+    base = Query("crimes", ("district", "year"), Aggregate("sum", "records"))
+    sums = execute(base, db).values
+    qs = dataclasses.replace(base, having=Having(">", float(np.quantile(sums, 0.99))))
+    sk = capture_sketch(qs, db, equi_depth_ranges(db["crimes"], "beat", 50))
+    db2 = apply_sketch(sk, db)
+    assert db2["crimes"].num_rows == sk.size_rows
+    assert db2["crimes"].num_rows < db["crimes"].num_rows

@@ -1,0 +1,107 @@
+"""Chunked-vs-exact numerics for the SSM/recurrent training forms, and
+decode-vs-train consistency — the invariants behind the memory fixes."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models import ssm
+from repro.models.params import init_params
+
+KEY = jax.random.PRNGKey(0)
+
+
+@pytest.fixture(scope="module")
+def cfg():
+    return get_config("xlstm-350m", smoke=True)
+
+
+def test_mamba_chunked_equals_unchunked(cfg):
+    p = init_params(KEY, ssm.mamba_params(cfg), jnp.float32)
+    x = jax.random.normal(KEY, (2, 40, cfg.d_model))
+    y_full = ssm.mamba_train(p, cfg, x, chunk=40)
+    y_chunk = ssm.mamba_train(p, cfg, x, chunk=8)
+    np.testing.assert_allclose(np.asarray(y_full), np.asarray(y_chunk), atol=1e-5)
+
+
+def test_mamba_decode_matches_train(cfg):
+    p = init_params(KEY, ssm.mamba_params(cfg), jnp.float32)
+    x = jax.random.normal(KEY, (2, 16, cfg.d_model))
+    y_train = ssm.mamba_train(p, cfg, x, chunk=16)
+    cache = ssm.init_mamba_cache(cfg, 2, jnp.float32)
+    outs = []
+    for t in range(x.shape[1]):
+        o, cache = ssm.mamba_decode(p, cfg, x[:, t : t + 1], cache)
+        outs.append(o)
+    y_dec = jnp.concatenate(outs, 1)
+    np.testing.assert_allclose(np.asarray(y_dec), np.asarray(y_train), atol=2e-4, rtol=1e-3)
+
+
+def test_mlstm_chunked_equals_quadratic(cfg):
+    p = init_params(KEY, ssm.mlstm_params(cfg), jnp.float32)
+    x = jax.random.normal(KEY, (2, 48, cfg.d_model))
+    y_one = ssm.mlstm_train(p, cfg, x, chunk=48)  # single chunk == quadratic
+    y_chunked = ssm.mlstm_train(p, cfg, x, chunk=8)
+    np.testing.assert_allclose(np.asarray(y_one), np.asarray(y_chunked), atol=1e-4)
+
+
+def test_mlstm_decode_matches_train(cfg):
+    p = init_params(KEY, ssm.mlstm_params(cfg), jnp.float32)
+    x = jax.random.normal(KEY, (2, 24, cfg.d_model))
+    y_train = ssm.mlstm_train(p, cfg, x, chunk=8)
+    cache = ssm.init_mlstm_cache(cfg, 2)
+    outs = []
+    for t in range(x.shape[1]):
+        o, cache = ssm.mlstm_decode(p, cfg, x[:, t : t + 1], cache)
+        outs.append(o)
+    y_dec = jnp.concatenate(outs, 1)
+    np.testing.assert_allclose(np.asarray(y_dec), np.asarray(y_train), atol=2e-4, rtol=1e-3)
+
+
+def test_slstm_custom_vjp_grads_match_autodiff(cfg):
+    """The collective-saving custom VJP must be *exact* (EXPERIMENTS §Perf)."""
+    p = init_params(KEY, ssm.slstm_params(cfg), jnp.float32)
+    x = jax.random.normal(KEY, (2, 20, cfg.d_model))
+
+    def ref_train(p, x):
+        b, s, d = x.shape
+        hh, uh = cfg.n_heads, d // cfg.n_heads
+        hin = ssm.rmsnorm(p["ln"], x)
+        xproj = jnp.einsum("bsd,dg->bsg", hin, p["wx"])
+
+        def step(state, xt):
+            h, c, n, m = ssm._slstm_step(p, cfg, xt, state)
+            return (h, c, n, m), h
+
+        z = jnp.zeros((b, hh, uh), jnp.float32)
+        init = (z, z, z, jnp.full((b, hh, uh), -1e30, jnp.float32))
+        _, hs = jax.lax.scan(step, init, jnp.moveaxis(xproj, 1, 0))
+        hs = jnp.moveaxis(hs, 0, 1).reshape(b, s, d)
+        return x + jnp.einsum("bsd,dg->bsg", hs, p["out"])
+
+    y1 = ssm.slstm_train(p, cfg, x)
+    y2 = ref_train(p, x)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), atol=1e-5)
+
+    g1 = jax.grad(lambda p: (ssm.slstm_train(p, cfg, x) ** 2).sum())(p)
+    g2 = jax.grad(lambda p: (ref_train(p, x) ** 2).sum())(p)
+    f1 = sorted(jax.tree_util.tree_leaves_with_path(g1), key=lambda kv: str(kv[0]))
+    f2 = sorted(jax.tree_util.tree_leaves_with_path(g2), key=lambda kv: str(kv[0]))
+    for (k1, a), (k2, b) in zip(f1, f2):
+        np.testing.assert_allclose(
+            np.asarray(a), np.asarray(b), atol=5e-4, rtol=1e-3, err_msg=str(k1)
+        )
+
+
+def test_slstm_decode_matches_train(cfg):
+    p = init_params(KEY, ssm.slstm_params(cfg), jnp.float32)
+    x = jax.random.normal(KEY, (2, 12, cfg.d_model))
+    y_train = ssm.slstm_train(p, cfg, x)
+    cache = ssm.init_slstm_cache(cfg, 2)
+    outs = []
+    for t in range(x.shape[1]):
+        o, cache = ssm.slstm_decode(p, cfg, x[:, t : t + 1], cache)
+        outs.append(o)
+    y_dec = jnp.concatenate(outs, 1)
+    np.testing.assert_allclose(np.asarray(y_dec), np.asarray(y_train), atol=2e-4, rtol=1e-3)
