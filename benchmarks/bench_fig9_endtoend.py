@@ -1,9 +1,20 @@
 """Fig. 9: cumulative end-to-end workload runtime per strategy, starting from
 an empty sketch index (sampling + estimation + capture overhead up front,
 reuse pays it back).  Workloads mix repeated templates so the sketch index
-gets hits, as in the paper's setup."""
+gets hits, as in the paper's setup.
+
+Besides the CSV rows this benchmark tracks the per-phase split
+(t_select / t_capture / t_execute) and the mean execution time of
+*reused-sketch* runs — the index-hit path whose cost the catalog +
+fragment-skipping executor is designed to flatten.  ``--json`` (via
+``benchmarks.run``) writes ``BENCH_fig9.json`` with those numbers and, when
+``benchmarks/seed_fig9_baseline.json`` is present, the speedup over the
+pre-catalog seed measurement.
+"""
 from __future__ import annotations
 
+import json
+import os
 import time
 
 import numpy as np
@@ -14,9 +25,12 @@ from repro.core.workload import STARS_SPEC, TPCH_SPEC, generate_workload
 
 STRATEGIES = ("NO-PS", "RAND-PK", "RAND-GB", "CB-OPT-GB")
 
+SEED_BASELINE_PATH = os.path.join(os.path.dirname(__file__), "seed_fig9_baseline.json")
 
-def run(scale: str = "quick", n_unique: int = 8, n_repeat: int = 5):
+
+def run(scale: str = "quick", n_unique: int = 8, n_repeat: int = 5, json_path: str | None = None):
     rows = []
+    results = []
     for ds, spec in (("tpch", TPCH_SPEC), ("stars", STARS_SPEC)):
         db = bench_databases(scale)[ds]
         base = generate_workload(spec, db, n_unique, seed=9)
@@ -26,16 +40,82 @@ def run(scale: str = "quick", n_unique: int = 8, n_repeat: int = 5):
             eng = PBDSEngine(db, strategy=strat, n_ranges=100, theta=0.05, seed=9)
             cum = 0.0
             marks = []
+            phase = {"t_select": 0.0, "t_capture": 0.0, "t_execute": 0.0}
+            reused_exec = []
             for i, q in enumerate(workload):
                 t0 = time.perf_counter()
-                eng.run(q)
+                _, info = eng.run(q)
                 cum += time.perf_counter() - t0
+                phase["t_select"] += info.t_select
+                phase["t_capture"] += info.t_capture
+                phase["t_execute"] += info.t_execute
+                if info.reused:
+                    reused_exec.append(info.t_execute)
                 if (i + 1) % 10 == 0:
                     marks.append(round(cum, 3))
+            reused_mean = float(np.mean(reused_exec)) if reused_exec else None
+            results.append(dict(
+                dataset=ds,
+                strategy=strat,
+                cum_s=round(cum, 4),
+                t_select_s=round(phase["t_select"], 4),
+                t_capture_s=round(phase["t_capture"], 4),
+                t_execute_s=round(phase["t_execute"], 4),
+                reused_exec_mean_s=round(reused_mean, 6) if reused_mean is not None else None,
+                reused_exec_count=len(reused_exec),
+                idx_hits=eng.index.hits,
+                idx_misses=eng.index.misses,
+            ))
             rows.append(("fig9", ds, strat, f"{cum:.3f}",
+                         f"{phase['t_select']:.3f}", f"{phase['t_capture']:.3f}",
+                         f"{phase['t_execute']:.3f}",
+                         f"{reused_mean:.5f}" if reused_mean is not None else "",
                          eng.index.hits, eng.index.misses, " ".join(map(str, marks))))
-    return emit(rows, ("bench", "dataset", "strategy", "cum_s", "idx_hits",
-                       "idx_misses", "cum_marks_every10"))
+    emit(rows, ("bench", "dataset", "strategy", "cum_s", "t_select_s", "t_capture_s",
+                "t_execute_s", "reused_exec_mean_s", "idx_hits", "idx_misses",
+                "cum_marks_every10"))
+    if json_path:
+        payload = {
+            "bench": "fig9",
+            "scale": scale,
+            "n_unique": n_unique,
+            "n_repeat": n_repeat,
+            "results": results,
+        }
+        if os.path.exists(SEED_BASELINE_PATH):
+            with open(SEED_BASELINE_PATH) as f:
+                seed = json.load(f)
+            payload["seed_baseline"] = seed
+            seed_by_key = {
+                (r["dataset"], r["strategy"]): r.get("reused_exec_mean_s")
+                for r in seed.get("results", [])
+            }
+            seed_counts = {
+                (r["dataset"], r["strategy"]): r.get("reused_exec_count", 0)
+                for r in seed.get("results", [])
+            }
+            speedups = {}
+            seed_tot = new_tot = n_tot = 0.0
+            for r in results:
+                k = (r["dataset"], r["strategy"])
+                ref = seed_by_key.get(k)
+                if ref and r["reused_exec_mean_s"]:
+                    speedups[f"{r['dataset']}/{r['strategy']}"] = round(
+                        ref / r["reused_exec_mean_s"], 2
+                    )
+                    n = seed_counts.get(k, 0)
+                    seed_tot += n * ref
+                    new_tot += n * r["reused_exec_mean_s"]
+                    n_tot += n
+            if n_tot:
+                # Hit-count-weighted mean over the configs measured in the
+                # seed baseline (single-hit cells are noise-dominated).
+                speedups["overall_weighted"] = round(seed_tot / new_tot, 2)
+            payload["reused_exec_speedup_vs_seed"] = speedups
+        with open(json_path, "w") as f:
+            json.dump(payload, f, indent=2)
+        print(f"# wrote {json_path}")
+    return rows
 
 
 if __name__ == "__main__":

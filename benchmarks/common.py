@@ -1,6 +1,7 @@
 """Shared benchmark scaffolding: datasets at bench scale, timing, CSV out."""
 from __future__ import annotations
 
+import dataclasses
 import time
 from typing import Callable, Dict, Tuple
 
@@ -23,13 +24,43 @@ def bench_databases(scale: str = "quick") -> Dict[str, Database]:
     }
 
 
+def block_until_ready(out: object) -> object:
+    """Block on every device array reachable from ``out``.
+
+    ``jax.block_until_ready`` only handles pytrees; benchmark functions also
+    return plain dataclasses (QueryResult, SizeEstimate, ...) and containers
+    of them, whose device work would otherwise be timed as zero.
+    """
+    seen = set()
+
+    def _walk(x):
+        if id(x) in seen:
+            return
+        seen.add(id(x))
+        if dataclasses.is_dataclass(x) and not isinstance(x, type):
+            for f in dataclasses.fields(x):
+                _walk(getattr(x, f.name))
+        elif isinstance(x, dict):
+            for v in x.values():
+                _walk(v)
+        elif isinstance(x, (list, tuple)):
+            for v in x:
+                _walk(v)
+        else:
+            for leaf in jax.tree_util.tree_leaves(x):
+                if hasattr(leaf, "block_until_ready"):
+                    leaf.block_until_ready()
+
+    _walk(out)
+    return out
+
+
 def timeit(fn: Callable, repeats: int = 3) -> Tuple[float, object]:
     best = float("inf")
     out = None
     for _ in range(repeats):
         t0 = time.perf_counter()
-        out = fn()
-        jax.block_until_ready(out) if hasattr(out, "block_until_ready") else None
+        out = block_until_ready(fn())
         best = min(best, time.perf_counter() - t0)
     return best, out
 

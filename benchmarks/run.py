@@ -1,14 +1,18 @@
 """Benchmark harness: one entry per paper table/figure.
 
-  PYTHONPATH=src python -m benchmarks.run [--scale quick|full] [--only NAME]
+  PYTHONPATH=src python -m benchmarks.run [--scale quick|full] [--only NAME] [--json]
 
-Emits CSV per benchmark.  The dry-run/roofline artifacts are produced by
-``repro.launch.dryrun`` + ``benchmarks.roofline`` (they need the 512-device
-XLA flag and hence their own process).
+Emits CSV per benchmark.  ``--json`` additionally writes ``BENCH_fig9.json``
+(per-strategy t_select/t_capture/t_execute + reused-exec means and the
+speedup over ``benchmarks/seed_fig9_baseline.json``) so successive PRs have
+a perf trajectory to compare against.  The dry-run/roofline artifacts are
+produced by ``repro.launch.dryrun`` + ``benchmarks.roofline`` (they need the
+512-device XLA flag and hence their own process).
 """
 from __future__ import annotations
 
 import argparse
+import functools
 import sys
 import time
 import traceback
@@ -18,6 +22,8 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--scale", choices=["quick", "full"], default="quick")
     ap.add_argument("--only", default=None)
+    ap.add_argument("--json", action="store_true",
+                    help="write BENCH_fig9.json next to the working directory")
     args = ap.parse_args()
 
     from benchmarks import (
@@ -34,7 +40,10 @@ def main() -> None:
         "fig4": bench_fig4_bootstrap.run,
         "fig7": bench_fig7_strategies.run,
         "fig8": bench_fig8_accuracy.run,
-        "fig9": bench_fig9_endtoend.run,
+        "fig9": functools.partial(
+            bench_fig9_endtoend.run,
+            json_path="BENCH_fig9.json" if args.json else None,
+        ),
         "ablation": bench_ablation.run,
     }
     failed = []

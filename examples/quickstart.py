@@ -42,7 +42,8 @@ q2 = Query(
     having=Having(">", 600.0),
 )
 res, info = eng.run(q2)  # cold: samples, estimates, captures
-print(f"cold run : attr={info.attr} selectivity={info.selectivity:.3f} "
+sel_str = f"{info.selectivity:.3f}" if info.selectivity is not None else "n/a"
+print(f"cold run : attr={info.attr} selectivity={sel_str} "
       f"select={info.t_select*1e3:.0f}ms capture={info.t_capture*1e3:.0f}ms "
       f"exec={info.t_execute*1e3:.0f}ms")
 res2, info2 = eng.run(q2)  # warm: sketch index hit

@@ -143,3 +143,9 @@ class SampleCache:
         s = stratified_reservoir_sample(key, table, groupby, theta)
         self._cache[ck] = s
         return s
+
+    def invalidate(self, table_name: str) -> None:
+        """Drop cached samples of one table (its physical layout changed:
+        sample indices refer to row positions, which a re-cluster permutes)."""
+        for ck in [ck for ck in self._cache if ck[0] == table_name]:
+            del self._cache[ck]

@@ -6,11 +6,16 @@ Pipeline (Fig. 3):
   ->  fragment incidence of G' under the candidate's range partition
   ->  size  = sum of #R_r over satisfied ranges        (Alg. 2)
       E[size], Frechet lo/hi via pass probabilities    (Def. 9)
+
+``estimate_size_batched`` evaluates *all* candidate attributes of one query
+in a single vmapped fragment-incidence pass over the catalog's cached
+bucketizations — the per-candidate loop only assembles (frag, group)
+incidence pairs from the sample.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Optional, Tuple
+from typing import TYPE_CHECKING, Dict, Mapping, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -21,7 +26,18 @@ from repro.aqp.estimators import GroupEstimates, group_estimates, pass_probabili
 from repro.aqp.sampling import SampleSet
 from repro.aqp.wander_join import JoinIndex, join_sample_values
 
+if TYPE_CHECKING:  # pragma: no cover - typing only
+    from repro.core.catalog import Catalog
+
 Array = jax.Array
+
+
+def _catalog(catalog: "Optional[Catalog]") -> "Catalog":
+    # Imported lazily: repro.core's package init imports the engine, which
+    # imports this module — a top-level catalog import would cycle.
+    from repro.core.catalog import default_catalog
+
+    return catalog if catalog is not None else default_catalog()
 
 
 @dataclasses.dataclass(frozen=True)
@@ -151,17 +167,141 @@ def _full_incidence(
     samples: SampleSet,
     ranges: "RangeSet",
     satisfied: np.ndarray,
+    catalog: "Optional[Catalog]" = None,
 ) -> Tuple[np.ndarray, np.ndarray]:
     """Def. 8's f(G', D): scan the full table for rows of satisfied groups."""
-    from repro.core.table import encode_groups
-
+    catalog = _catalog(catalog)
     fact = db[q.table]
-    gid, _, _ = encode_groups(fact, samples.groupby)
+    gid = catalog.groups(fact, tuple(samples.groupby)).gid
     row_sat = satisfied[gid]
-    frag = np.asarray(ranges.bucketize(fact[ranges.attr]))[row_sat]
+    frag = np.asarray(catalog.bucketize(fact, ranges))[row_sat]
     gids = gid[row_sat]
     pairs = np.unique(np.stack([frag, gids], axis=1), axis=0)
     return pairs[:, 0], pairs[:, 1]
+
+
+def _pass_probabilities(
+    q: "Query", est: GroupEstimates
+) -> np.ndarray:
+    """p_g = P(group g satisfies the HAVING) under the CLT/bootstrap CI."""
+    p_g = pass_probability(
+        est, q.having.op if q.having else ">", q.having.value if q.having else -np.inf
+    )
+    if q.having is None:
+        p_g = np.ones_like(p_g)
+    return p_g
+
+
+def _candidate_incidence(
+    q: "Query",
+    db: "Database",
+    samples: SampleSet,
+    ranges: "RangeSet",
+    satisfied: np.ndarray,
+    cfg: EstimationConfig,
+    catalog: "Catalog",
+) -> Tuple[np.ndarray, np.ndarray]:
+    if cfg.incidence == "full":
+        return _full_incidence(q, db, samples, ranges, satisfied, catalog)
+    return _sample_incidence(q, db, samples, ranges, satisfied)
+
+
+def _incidence_pass(frag, valid, p_pair, sizes):
+    """Alg. 2 + Def. 9 for one candidate from deduped (frag, group) pairs.
+
+    frag (P,) int32, valid (P,) bool padding mask, p_pair (P,) f32 pass
+    probabilities, sizes (R,) f32 fragment sizes.  Vmapped over candidates.
+    """
+    n_r = sizes.shape[0]
+    vf = valid.astype(jnp.float32)
+    hits = jnp.zeros(n_r, jnp.float32).at[frag].max(vf)
+    bits = hits > 0
+    est_rows = (sizes * hits).sum()
+    log1m = jnp.log1p(-jnp.minimum(p_pair, 1 - 1e-12)) * vf
+    sum_log = jnp.zeros(n_r, jnp.float32).at[frag].add(log1m)
+    p_frag = jnp.where(bits, 1.0 - jnp.exp(sum_log), 0.0)
+    max_p = jnp.zeros(n_r, jnp.float32).at[frag].max(p_pair * vf)
+    sum_p = jnp.zeros(n_r, jnp.float32).at[frag].add(p_pair * vf)
+    expected = (sizes * p_frag).sum()
+    lo = (sizes * max_p).sum()
+    hi = (sizes * jnp.minimum(sum_p, 1.0)).sum()
+    return bits, est_rows, expected, lo, hi
+
+
+_incidence_pass_batch = jax.jit(jax.vmap(_incidence_pass))
+
+
+def estimate_size_batched(
+    key: jax.Array,
+    q: "Query",
+    db: "Database",
+    ranges_by_attr: Mapping[str, "RangeSet"],
+    samples: SampleSet,
+    cfg: EstimationConfig = EstimationConfig(),
+    aqr: Optional[Tuple[GroupEstimates, np.ndarray]] = None,
+    catalog: "Optional[Catalog]" = None,
+) -> Dict[str, SizeEstimate]:
+    """Algorithm 2 + Def. 9 for *all* candidates in one vmapped device pass.
+
+    One shared AQR pass (the estimates are candidate-independent), then the
+    per-fragment scatter math for every candidate runs as a single batched
+    kernel over padded (frag, group) incidence pairs.  Fragment sizes and
+    full-table bucketizations come from the catalog's caches.
+    """
+    catalog = _catalog(catalog)
+    if not ranges_by_attr:
+        return {}
+    est, satisfied = aqr if aqr is not None else approximate_query_result(key, q, db, samples, cfg)
+    p_g = _pass_probabilities(q, est)
+    fact = db[q.table]
+    total = max(fact.num_rows, 1)
+    n_sat = int(satisfied.sum())
+
+    attrs = list(ranges_by_attr)
+    incid = []
+    for a in attrs:
+        ranges = ranges_by_attr[a]
+        frag, gids = _candidate_incidence(q, db, samples, ranges, satisfied, cfg, catalog)
+        incid.append((ranges, frag, gids))
+
+    n_cands = len(attrs)
+    max_pairs = max(1, max(len(f) for _, f, _ in incid))
+    max_pairs = 1 << (max_pairs - 1).bit_length()  # quantize: fewer recompiles
+    max_r = max(r.n_ranges for r, _, _ in incid)
+
+    frag_mat = np.zeros((n_cands, max_pairs), dtype=np.int32)
+    valid_mat = np.zeros((n_cands, max_pairs), dtype=bool)
+    p_mat = np.zeros((n_cands, max_pairs), dtype=np.float32)
+    sizes_mat = np.zeros((n_cands, max_r), dtype=np.float32)
+    for i, (ranges, frag, gids) in enumerate(incid):
+        k = len(frag)
+        frag_mat[i, :k] = frag
+        valid_mat[i, :k] = True
+        p_mat[i, :k] = p_g[gids]
+        sizes_mat[i, : ranges.n_ranges] = catalog.fragment_sizes(fact, ranges)
+
+    bits_b, est_b, exp_b, lo_b, hi_b = _incidence_pass_batch(
+        jnp.asarray(frag_mat), jnp.asarray(valid_mat), jnp.asarray(p_mat),
+        jnp.asarray(sizes_mat),
+    )
+    bits_b = np.asarray(bits_b)
+    est_b, exp_b = np.asarray(est_b), np.asarray(exp_b)
+    lo_b, hi_b = np.asarray(lo_b), np.asarray(hi_b)
+
+    out: Dict[str, SizeEstimate] = {}
+    for i, a in enumerate(attrs):
+        ranges = ranges_by_attr[a]
+        out[a] = SizeEstimate(
+            attr=a,
+            est_rows=float(est_b[i]),
+            est_selectivity=float(est_b[i]) / total,
+            expected_rows=float(exp_b[i]),
+            lo_rows=float(lo_b[i]),
+            hi_rows=float(hi_b[i]),
+            est_bits=bits_b[i, : ranges.n_ranges],
+            n_satisfied_groups=n_sat,
+        )
+    return out
 
 
 def estimate_size(
@@ -172,23 +312,21 @@ def estimate_size(
     samples: SampleSet,
     cfg: EstimationConfig = EstimationConfig(),
     aqr: Optional[Tuple[GroupEstimates, np.ndarray]] = None,
+    catalog: "Optional[Catalog]" = None,
 ) -> SizeEstimate:
     """Algorithm 2 + Def. 9 for candidate attribute ``ranges.attr``.
 
     ``aqr`` lets callers share one AQR pass across all candidate attributes
     (the estimates do not depend on the candidate — only incidence does).
+    Single-candidate host-math reference; strategies use the batched variant.
     """
-    from repro.core.ranges import fragment_sizes
-
+    catalog = _catalog(catalog)
     est, satisfied = aqr if aqr is not None else approximate_query_result(key, q, db, samples, cfg)
 
-    if cfg.incidence == "full":
-        frag, gids = _full_incidence(q, db, samples, ranges, satisfied)
-    else:
-        frag, gids = _sample_incidence(q, db, samples, ranges, satisfied)
+    frag, gids = _candidate_incidence(q, db, samples, ranges, satisfied, cfg, catalog)
 
     n_r = ranges.n_ranges
-    sizes = np.asarray(fragment_sizes(db[q.table], ranges)).astype(np.float64)
+    sizes = catalog.fragment_sizes(db[q.table], ranges).astype(np.float64)
 
     bits = np.zeros(n_r, dtype=bool)
     bits[frag] = True
@@ -196,9 +334,7 @@ def estimate_size(
 
     # Def. 9: P(r in P) = 1 - prod_{g in frag} (1 - p_g)   (independent case)
     # with Frechet bounds max_g p_g <= P <= min(1, sum_g p_g).
-    p_g = pass_probability(est, q.having.op if q.having else ">", q.having.value if q.having else -np.inf)
-    if q.having is None:
-        p_g = np.ones_like(p_g)
+    p_g = _pass_probabilities(q, est)
     log1m = np.log1p(-np.minimum(p_g[gids], 1 - 1e-12))
     sum_log = np.zeros(n_r)
     np.add.at(sum_log, frag, log1m)

@@ -1,5 +1,6 @@
 # The paper's primary contribution: provenance sketches + the cost-based
 # selection machinery, implemented as a TPU-native columnar engine.
+from repro.core.catalog import Catalog, default_catalog
 from repro.core.engine import PBDSEngine, RunInfo
 from repro.core.index import SketchIndex, subsumes
 from repro.core.queries import (
@@ -10,6 +11,7 @@ from repro.core.queries import (
     Query,
     QueryResult,
     execute,
+    execute_and_provenance,
     provenance_mask,
 )
 from repro.core.ranges import RangeSet, equi_depth_ranges, equi_width_ranges, fragment_sizes
@@ -17,6 +19,7 @@ from repro.core.safety import prefilter_candidates, safe_attributes
 from repro.core.sketch import (
     ProvenanceSketch,
     apply_sketch,
+    capture_and_execute,
     capture_sketch,
     execute_with_sketch,
     is_safe_sketch,
@@ -30,17 +33,18 @@ from repro.core.strategies import (
     candidate_pool,
     select_attribute,
 )
-from repro.core.table import ColumnTable, Database, encode_groups, from_numpy
+from repro.core.table import ColumnTable, Database, FragmentLayout, encode_groups, from_numpy
 
 __all__ = [
+    "Catalog", "default_catalog",
     "PBDSEngine", "RunInfo", "SketchIndex", "subsumes",
     "Aggregate", "Having", "JoinSpec", "Predicate", "Query", "QueryResult",
-    "execute", "provenance_mask",
+    "execute", "execute_and_provenance", "provenance_mask",
     "RangeSet", "equi_depth_ranges", "equi_width_ranges", "fragment_sizes",
     "prefilter_candidates", "safe_attributes",
-    "ProvenanceSketch", "apply_sketch", "capture_sketch", "execute_with_sketch",
-    "is_safe_sketch", "sketch_keep_mask",
+    "ProvenanceSketch", "apply_sketch", "capture_and_execute", "capture_sketch",
+    "execute_with_sketch", "is_safe_sketch", "sketch_keep_mask",
     "ALL_STRATEGIES", "COST_STRATEGIES", "RANDOM_STRATEGIES",
     "SelectionResult", "candidate_pool", "select_attribute",
-    "ColumnTable", "Database", "encode_groups", "from_numpy",
+    "ColumnTable", "Database", "FragmentLayout", "encode_groups", "from_numpy",
 ]

@@ -81,5 +81,30 @@ class SketchIndex:
     def insert(self, q: Query, sketch: ProvenanceSketch) -> None:
         self._entries.setdefault(_pred_key(q), []).append(IndexEntry(q, sketch))
 
+    def entries(self) -> List[IndexEntry]:
+        return [e for v in self._entries.values() for e in v]
+
+    def prune(self, max_entries: int) -> int:
+        """Keep the ``max_entries`` most-used sketches; returns #evictions.
+
+        Evicted sketches stop being served immediately.  Their materialized
+        instances may survive in a ``Catalog`` until its bounded FIFO maps
+        evict them (the catalog holds its own sketch references).
+        """
+        all_entries = self.entries()
+        if len(all_entries) <= max_entries:
+            return 0
+        all_entries.sort(key=lambda e: (e.uses, -e.sketch.size_rows), reverse=True)
+        keep = set(id(e) for e in all_entries[:max_entries])
+        evicted = 0
+        for k in list(self._entries):
+            kept = [e for e in self._entries[k] if id(e) in keep]
+            evicted += len(self._entries[k]) - len(kept)
+            if kept:
+                self._entries[k] = kept
+            else:
+                del self._entries[k]
+        return evicted
+
     def __len__(self) -> int:
         return sum(len(v) for v in self._entries.values())

@@ -90,9 +90,11 @@ def capture_composite(
         jnp.asarray(prov).astype(jnp.int32), bucket, num_segments=ranges.n_ranges
     )
     bits = np.asarray(hits > 0)
+    # int32 explicitly: jnp.ones_like with int64 silently truncates to int32
+    # under the default x64-disabled config and warns; counts fit int32.
     sizes = np.asarray(
         jax.ops.segment_sum(
-            jnp.ones_like(bucket, dtype=jnp.int64), bucket, num_segments=ranges.n_ranges
+            jnp.ones_like(bucket, dtype=jnp.int32), bucket, num_segments=ranges.n_ranges
         )
     )
     return CompositeSketch(

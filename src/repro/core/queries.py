@@ -6,10 +6,14 @@ Templates:
   Q-AAGH   nested aggregation-aggregation-groupby-having
   Q-AAJGH  nested variant with a join in the inner block
 
-The executor is a vectorized bag-semantics evaluator over ``ColumnTable``:
-group-by keys are dictionary-encoded on the host (catalog work), per-row
-aggregation runs on device via segment ops — on the optimized path through the
-``segment_aggregate`` Pallas kernel (one-hot MXU matmuls).
+The executor is a vectorized bag-semantics evaluator over ``ColumnTable``.
+Group-by dictionary encodings, join layouts and bucketizations are *catalog*
+state (``repro.core.catalog``) built once and reused across queries; per-row
+aggregation runs on device through ``repro.kernels.ops.segment_aggregate``
+(the one-hot MXU Pallas kernel on TPU, the ``jax.ops.segment_sum`` reference
+path elsewhere).  The inner FROM/WHERE/GROUP BY/agg block is evaluated once
+per query and its products are shared between result construction and
+provenance derivation (``execute_and_provenance``).
 """
 from __future__ import annotations
 
@@ -20,7 +24,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.table import ColumnTable, Database, encode_groups
+from repro.core.catalog import Catalog, default_catalog
+from repro.core.table import ColumnTable, Database
 
 Array = jax.Array
 
@@ -155,21 +160,51 @@ class QueryResult:
 # ---------------------------------------------------------------------------
 
 
+def _next_pow2(n: int) -> int:
+    return 1 << max(0, (n - 1)).bit_length()
+
+
+def segment_sums_counts(
+    values: Array, gid: Array, n_groups: int, weights: Optional[Array] = None
+) -> Tuple[Array, Array]:
+    """(per-group sums, per-group counts) via the segment-aggregate kernel.
+
+    Dispatches the Pallas one-hot MXU kernel on TPU and the segment-sum
+    reference path elsewhere (see ``repro.kernels.ops``).  Row and group
+    dimensions are padded to powers of two so the jitted kernel wrapper
+    compiles once per size class instead of once per query shape.
+    """
+    from repro.kernels import ops as kops
+
+    n = int(values.shape[0])
+    n_pad = _next_pow2(max(n, 1))
+    g_pad = _next_pow2(max(n_groups, 1))
+    w = jnp.ones(n, dtype=jnp.float32) if weights is None else weights.astype(jnp.float32)
+    if n_pad != n:
+        # Padded rows carry weight 0 into group 0: they contribute nothing.
+        values = jnp.pad(values.astype(jnp.float32), (0, n_pad - n))
+        gid = jnp.pad(gid.astype(jnp.int32), (0, n_pad - n))
+        w = jnp.pad(w, (0, n_pad - n))
+    sums, counts = kops.segment_aggregate(values, gid, g_pad, w)
+    return sums[:n_groups], counts[:n_groups]
+
+
+def _finalize_aggregate(fn: str, sums: Array, counts: Array) -> Array:
+    if fn == "count":
+        return counts
+    if fn == "sum":
+        return sums
+    if fn == "avg":
+        return sums / jnp.maximum(counts, 1.0)
+    raise ValueError(f"unknown aggregate {fn!r}")
+
+
 def segment_aggregate(
     values: Array, gid: Array, n_groups: int, fn: str, weights: Optional[Array] = None
 ) -> Array:
     """Per-group aggregate; ``weights`` is the row inclusion mask (WHERE)."""
-    w = jnp.ones_like(values, dtype=jnp.float32) if weights is None else weights.astype(jnp.float32)
-    v = values.astype(jnp.float32)
-    if fn == "count":
-        return jax.ops.segment_sum(w, gid, num_segments=n_groups)
-    sums = jax.ops.segment_sum(v * w, gid, num_segments=n_groups)
-    if fn == "sum":
-        return sums
-    if fn == "avg":
-        cnt = jax.ops.segment_sum(w, gid, num_segments=n_groups)
-        return sums / jnp.maximum(cnt, 1.0)
-    raise ValueError(f"unknown aggregate {fn!r}")
+    sums, counts = segment_sums_counts(values, gid, n_groups, weights)
+    return _finalize_aggregate(fn, sums, counts)
 
 
 # ---------------------------------------------------------------------------
@@ -177,32 +212,16 @@ def segment_aggregate(
 # ---------------------------------------------------------------------------
 
 
-def materialize_join(db: Database, q: Query) -> Tuple[ColumnTable, np.ndarray]:
+def materialize_join(
+    db: Database, q: Query, catalog: Optional[Catalog] = None
+) -> Tuple[ColumnTable, np.ndarray]:
     """Return the joined flat table and, per joined row, the fact-row index.
 
-    Fact rows with no partner are dropped (inner join).  Right-side columns
-    are prefixed with ``<right>.`` unless the name is free in the fact table.
+    The layout is built once per (fact, right, keys) in the catalog and
+    reused by every subsequent query over the same join spec.
     """
-    fact = db[q.table]
-    right = db[q.join.right]
-    lk = np.asarray(fact[q.join.left_key])
-    rk = np.asarray(right[q.join.right_key])
-    order = np.argsort(rk, kind="stable")
-    rk_sorted = rk[order]
-    pos = np.searchsorted(rk_sorted, lk)
-    pos_clip = np.minimum(pos, len(rk_sorted) - 1)
-    matched = rk_sorted[pos_clip] == lk
-    fact_idx = np.nonzero(matched)[0]
-    right_idx = order[pos_clip[fact_idx]]
-
-    cols: Dict[str, Array] = {}
-    for a in fact.schema:
-        cols[a] = jnp.asarray(np.asarray(fact[a])[fact_idx])
-    for a in right.schema:
-        name = a if a not in cols else f"{right.name}.{a}"
-        cols[name] = jnp.asarray(np.asarray(right[a])[right_idx])
-    joined = ColumnTable(f"{fact.name}_join_{right.name}", cols, fact.primary_key)
-    return joined, fact_idx
+    catalog = catalog or default_catalog()
+    return catalog.join(db[q.table], db[q.join.right], q.join.left_key, q.join.right_key)
 
 
 # ---------------------------------------------------------------------------
@@ -210,57 +229,78 @@ def materialize_join(db: Database, q: Query) -> Tuple[ColumnTable, np.ndarray]:
 # ---------------------------------------------------------------------------
 
 
-def _inner_block(db: Database, q: Query):
-    """Evaluate FROM/WHERE/GROUP BY/agg of the inner block.
+@dataclasses.dataclass
+class InnerBlock:
+    """Products of the FROM/WHERE/GROUP BY/agg inner block, computed once.
 
-    Returns (flat_table, fact_idx, gid, n_groups, group_values, agg_values,
-    where_mask).  ``fact_idx`` maps flat rows back to fact-table rows.
+    ``fact_idx`` maps flat rows back to fact-table rows (``None`` means the
+    identity — no join).  ``present[g]`` is True iff group ``g`` has at least
+    one row passing WHERE.
     """
+
+    flat: ColumnTable
+    fact_idx: Optional[np.ndarray]
+    gid: np.ndarray
+    n_groups: int
+    group_values: Dict[str, np.ndarray]
+    agg_np: np.ndarray
+    present: np.ndarray
+    where_np: np.ndarray
+
+
+def _inner_block(db: Database, q: Query, catalog: Optional[Catalog] = None) -> InnerBlock:
+    """Evaluate the inner block once; one fused segment pass yields both the
+    aggregate values and group presence."""
+    catalog = catalog or default_catalog()
     if q.join is not None:
-        flat, fact_idx = materialize_join(db, q)
+        flat, fact_idx = materialize_join(db, q, catalog)
     else:
-        flat = db[q.table]
-        fact_idx = np.arange(flat.num_rows)
+        flat, fact_idx = db[q.table], None
     where_mask = (
         q.where.mask(flat) if q.where is not None else jnp.ones(flat.num_rows, dtype=bool)
     )
-    gid, n_groups, group_values = encode_groups(flat, q.groupby)
-    gid_dev = jnp.asarray(gid)
+    enc = catalog.groups(flat, q.groupby)
     if q.agg.fn == "count":
         vals = jnp.ones(flat.num_rows, dtype=jnp.float32)
     else:
         vals = flat[q.agg.attr]
-    agg_values = segment_aggregate(vals, gid_dev, n_groups, q.agg.fn, weights=where_mask)
-    return flat, fact_idx, gid, n_groups, group_values, agg_values, where_mask
+    sums, counts = segment_sums_counts(vals, enc.gid_dev, enc.n_groups, weights=where_mask)
+    agg = _finalize_aggregate(q.agg.fn, sums, counts)
+    counts_np = np.asarray(counts)
+    return InnerBlock(
+        flat=flat,
+        fact_idx=fact_idx,
+        gid=enc.gid,
+        n_groups=enc.n_groups,
+        group_values=enc.group_values,
+        agg_np=np.asarray(agg),
+        # Groups whose every row fails the WHERE do not appear in the result.
+        present=counts_np > 0,
+        where_np=np.asarray(where_mask),
+    )
 
 
-def execute(q: Query, db: Database) -> QueryResult:
-    flat, fact_idx, gid, n_groups, group_values, agg_values, where_mask = _inner_block(db, q)
-    agg_np = np.asarray(agg_values)
-    # Groups that actually exist post-WHERE (a group whose every row fails the
-    # WHERE does not appear in the result).
-    present = np.asarray(
-        jax.ops.segment_sum(where_mask.astype(jnp.int32), jnp.asarray(gid), num_segments=n_groups)
-    ) > 0
+def _result_from_inner(q: Query, ib: InnerBlock) -> QueryResult:
+    agg_np = ib.agg_np
 
     if q.outer_groupby is None:
-        keep = present
+        keep = ib.present.copy()
         if q.having is not None:
-            keep &= np.asarray(q.having.mask(jnp.asarray(agg_np)))
+            keep &= np.asarray(q.having.mask(agg_np))
         idx = np.nonzero(keep)[0]
         return QueryResult(
-            group_values={a: v[idx] for a, v in group_values.items()},
+            group_values={a: v[idx] for a, v in ib.group_values.items()},
             values=agg_np[idx],
         )
 
     # Nested templates: inner HAVING filters inner groups, then the outer
     # block aggregates result1 over outer_groupby (subset of inner groupby).
-    inner_keep = present
+    inner_keep = ib.present.copy()
     if q.having is not None:
-        inner_keep &= np.asarray(q.having.mask(jnp.asarray(agg_np)))
+        inner_keep &= np.asarray(q.having.mask(agg_np))
     inner_idx = np.nonzero(inner_keep)[0]
     inner_vals = agg_np[inner_idx]
-    inner_gv = {a: v[inner_idx] for a, v in group_values.items()}
+    inner_gv = {a: v[inner_idx] for a, v in ib.group_values.items()}
 
     stacked = np.stack([inner_gv[a] for a in q.outer_groupby], axis=1)
     if stacked.shape[0] == 0:
@@ -276,7 +316,7 @@ def execute(q: Query, db: Database) -> QueryResult:
     outer_np = np.asarray(outer_vals)
     keep = np.ones(n_outer, dtype=bool)
     if q.outer_having is not None:
-        keep &= np.asarray(q.outer_having.mask(jnp.asarray(outer_np)))
+        keep &= np.asarray(q.outer_having.mask(outer_np))
     idx = np.nonzero(keep)[0]
     return QueryResult(
         group_values={a: uniq[:, i][idx] for i, a in enumerate(q.outer_groupby)},
@@ -284,24 +324,17 @@ def execute(q: Query, db: Database) -> QueryResult:
     )
 
 
-def provenance_mask(q: Query, db: Database) -> np.ndarray:
-    """Lineage P(Q, D) as a boolean mask over the *fact table* rows.
-
-    A fact row is in the provenance iff it contributes to some result tuple:
-    it satisfies WHERE, joins (for join templates), and its group survives the
-    HAVING chain.  This is the sufficiency-preserving lineage of Sec. 2.2.
-    """
-    flat, fact_idx, gid, n_groups, group_values, agg_values, where_mask = _inner_block(db, q)
-    agg_np = np.asarray(agg_values)
-    inner_keep = np.ones(n_groups, dtype=bool)
+def _provenance_from_inner(q: Query, ib: InnerBlock, n_fact_rows: int) -> np.ndarray:
+    agg_np = ib.agg_np
+    inner_keep = np.ones(ib.n_groups, dtype=bool)
     if q.having is not None:
-        inner_keep &= np.asarray(q.having.mask(jnp.asarray(agg_np)))
+        inner_keep &= np.asarray(q.having.mask(agg_np))
 
     if q.outer_groupby is not None:
         inner_idx = np.nonzero(inner_keep)[0]
         if inner_idx.shape[0]:
             stacked = np.stack(
-                [group_values[a][inner_idx] for a in q.outer_groupby], axis=1
+                [ib.group_values[a][inner_idx] for a in q.outer_groupby], axis=1
             )
             uniq, ogid = np.unique(stacked, axis=0, return_inverse=True)
             outer_vals = np.asarray(
@@ -314,14 +347,40 @@ def provenance_mask(q: Query, db: Database) -> np.ndarray:
             )
             outer_keep = np.ones(uniq.shape[0], dtype=bool)
             if q.outer_having is not None:
-                outer_keep &= np.asarray(q.outer_having.mask(jnp.asarray(outer_vals)))
-            surviving_inner = np.zeros(n_groups, dtype=bool)
+                outer_keep &= np.asarray(q.outer_having.mask(outer_vals))
+            surviving_inner = np.zeros(ib.n_groups, dtype=bool)
             surviving_inner[inner_idx] = outer_keep[ogid]
             inner_keep = surviving_inner
         else:
-            inner_keep = np.zeros(n_groups, dtype=bool)
+            inner_keep = np.zeros(ib.n_groups, dtype=bool)
 
-    row_keep = inner_keep[gid] & np.asarray(where_mask)
-    mask = np.zeros(db[q.table].num_rows, dtype=bool)
-    np.add.at(mask, fact_idx[row_keep], True)
+    row_keep = inner_keep[ib.gid] & ib.where_np
+    if ib.fact_idx is None:
+        return row_keep
+    mask = np.zeros(n_fact_rows, dtype=bool)
+    mask[ib.fact_idx[row_keep]] = True
     return mask
+
+
+def execute(q: Query, db: Database, catalog: Optional[Catalog] = None) -> QueryResult:
+    return _result_from_inner(q, _inner_block(db, q, catalog))
+
+
+def provenance_mask(q: Query, db: Database, catalog: Optional[Catalog] = None) -> np.ndarray:
+    """Lineage P(Q, D) as a boolean mask over the *fact table* rows.
+
+    A fact row is in the provenance iff it contributes to some result tuple:
+    it satisfies WHERE, joins (for join templates), and its group survives the
+    HAVING chain.  This is the sufficiency-preserving lineage of Sec. 2.2.
+    """
+    ib = _inner_block(db, q, catalog)
+    return _provenance_from_inner(q, ib, db[q.table].num_rows)
+
+
+def execute_and_provenance(
+    q: Query, db: Database, catalog: Optional[Catalog] = None
+) -> Tuple[QueryResult, np.ndarray]:
+    """Fused capture+execute path: one inner-block evaluation yields both the
+    query result and the provenance mask (the seed ran the block twice)."""
+    ib = _inner_block(db, q, catalog)
+    return _result_from_inner(q, ib), _provenance_from_inner(q, ib, db[q.table].num_rows)

@@ -42,8 +42,8 @@ class RangeSet:
         )
 
     def key(self) -> Tuple:
-        return (self.attr, self.n_ranges, float(self.bounds[0]) if len(self.bounds) else 0.0,
-                float(self.bounds[-1]) if len(self.bounds) else 0.0)
+        """Hashable identity of the partition (attr + exact bounds)."""
+        return (self.attr, self.n_ranges, self.bounds.tobytes())
 
 
 def equi_depth_ranges(

@@ -17,12 +17,10 @@ map to one value) and [32]'s safety argument needs value-aligned bounds.
 """
 from __future__ import annotations
 
-from typing import Tuple
+from typing import Optional, Tuple
 
-import numpy as np
-
+from repro.core.catalog import Catalog, default_catalog
 from repro.core.queries import Query
-from repro.core.ranges import distinct_count
 from repro.core.table import Database
 
 
@@ -35,7 +33,7 @@ def _having_upward_monotone(q: Query) -> bool:
     return True
 
 
-def _agg_monotone(q: Query, db: Database) -> bool:
+def _agg_monotone(q: Query, db: Database, catalog: Catalog) -> bool:
     aggs = [q.agg] + ([q.outer_agg] if q.outer_agg else [])
     for agg in aggs:
         if agg.fn == "count":
@@ -43,35 +41,46 @@ def _agg_monotone(q: Query, db: Database) -> bool:
         if agg.fn == "avg":
             return False  # partial AVG can move either way
         if agg.fn == "sum":
-            col = np.asarray(db[q.table][agg.attr]) if db[q.table].has(agg.attr) else None
-            if col is None or (col < 0).any():
+            if not db[q.table].has(agg.attr):
+                return False
+            if not catalog.column_nonnegative(db[q.table], agg.attr):
                 return False
     return True
 
 
-def safe_attributes(q: Query, db: Database) -> Tuple[str, ...]:
+def safe_attributes(
+    q: Query, db: Database, catalog: Optional[Catalog] = None
+) -> Tuple[str, ...]:
     """SAFE(Q) restricted to the sketched (fact) relation's schema."""
+    catalog = catalog or default_catalog()
     fact = db[q.table]
     gb_on_fact = tuple(a for a in q.groupby if fact.has(a))
-    if _having_upward_monotone(q) and _agg_monotone(q, db):
+    if _having_upward_monotone(q) and _agg_monotone(q, db, catalog):
         return tuple(sorted(fact.schema))
     return gb_on_fact
 
 
 def prefilter_candidates(
-    q: Query, db: Database, candidates: Tuple[str, ...], n_ranges: int
+    q: Query,
+    db: Database,
+    candidates: Tuple[str, ...],
+    n_ranges: int,
+    catalog: Optional[Catalog] = None,
 ) -> Tuple[str, ...]:
     """Drop candidates with fewer distinct values than ranges (Sec. 9).
 
     Group-by attributes are exempt: they are safe by the whole-group argument
     no matter how coarse the (deduplicated) partition ends up, and the paper's
     own experiments sketch low-cardinality GB attributes (e.g. ``district``).
+    Distinct counts are catalog-cached, so the pre-filter scans each column
+    once per table lifetime rather than once per query.
     """
+    catalog = catalog or default_catalog()
     fact = db[q.table]
     out = []
     for a in candidates:
         if not fact.has(a):
             continue
-        if a in q.groupby or distinct_count(fact, a) >= n_ranges:
+        if a in q.groupby or catalog.distinct_count(fact, a) >= n_ranges:
             out.append(a)
     return tuple(out)

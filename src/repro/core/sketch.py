@@ -3,8 +3,11 @@
 A sketch for query Q on range partition ``F_{R,a}`` is the bitvector over
 ranges whose fragments contain >= 1 provenance row.  Capture reduces to a
 segmented OR of the provenance mask by fragment id — the ``fragment_bitmap``
-Pallas kernel; application reduces to a bitmap gather — the ``sketch_filter``
-kernel.  Both have pure-jnp oracles in ``repro.kernels.ref``.
+Pallas kernel.  Application is a *scheduling* decision: on a fragment-major
+clustered table (``ColumnTable.cluster_by``) the sketch instance is the
+concatenation of the surviving contiguous slices; the ``sketch_filter``
+kernel is only the unsorted fallback.  Instances are cached per sketch in
+the catalog, so an index hit re-executes over an already-materialized D_P.
 """
 from __future__ import annotations
 
@@ -15,8 +18,15 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.queries import Query, QueryResult, execute, provenance_mask
-from repro.core.ranges import RangeSet, fragment_sizes
+from repro.core.catalog import Catalog, default_catalog
+from repro.core.queries import (
+    Query,
+    QueryResult,
+    execute,
+    execute_and_provenance,
+    provenance_mask,
+)
+from repro.core.ranges import RangeSet
 from repro.core.table import ColumnTable, Database
 
 Array = jax.Array
@@ -59,12 +69,14 @@ def capture_sketch(
     ranges: RangeSet,
     prov: Optional[np.ndarray] = None,
     use_kernel: bool = True,
+    catalog: Optional[Catalog] = None,
 ) -> ProvenanceSketch:
     """Build the accurate sketch R(Q, D, F) for ``q`` on partition ``ranges``."""
+    catalog = catalog or default_catalog()
     table = db[q.table]
     if prov is None:
-        prov = provenance_mask(q, db)
-    bucket = ranges.bucketize(table[ranges.attr])
+        prov = provenance_mask(q, db, catalog=catalog)
+    bucket = catalog.bucketize(table, ranges)
     if use_kernel:
         from repro.kernels import ops as kops
 
@@ -76,7 +88,7 @@ def capture_sketch(
             )
             > 0
         )
-    sizes = np.asarray(fragment_sizes(table, ranges))
+    sizes = catalog.fragment_sizes(table, ranges)
     size_rows = int(sizes[bits].sum())
     return ProvenanceSketch(
         table=q.table,
@@ -87,9 +99,15 @@ def capture_sketch(
     )
 
 
-def sketch_keep_mask(sketch: ProvenanceSketch, table: ColumnTable, use_kernel: bool = True) -> Array:
+def sketch_keep_mask(
+    sketch: ProvenanceSketch,
+    table: ColumnTable,
+    use_kernel: bool = True,
+    catalog: Optional[Catalog] = None,
+) -> Array:
     """Row keep-mask: True iff the row's fragment belongs to the sketch."""
-    bucket = sketch.ranges.bucketize(table[sketch.attr])
+    catalog = catalog or default_catalog()
+    bucket = catalog.bucketize(table, sketch.ranges)
     if use_kernel:
         from repro.kernels import ops as kops
 
@@ -97,20 +115,60 @@ def sketch_keep_mask(sketch: ProvenanceSketch, table: ColumnTable, use_kernel: b
     return jnp.asarray(sketch.bits)[bucket]
 
 
-def apply_sketch(sketch: ProvenanceSketch, db: Database) -> Database:
-    """D_P: replace the sketched relation with its sketch instance."""
+def _build_instance(
+    sketch: ProvenanceSketch, table: ColumnTable, catalog: Catalog
+) -> ColumnTable:
+    """Materialize the sketch instance R_P of one table.
+
+    Clustered tables on the sketch's own partition skip fragments by slicing;
+    everything else falls back to the per-row keep-mask kernel.
+    """
+    if table.layout is not None and table.layout.matches(sketch.ranges):
+        catalog.stats["instance_slices"] += 1
+        return table.take_fragments(np.nonzero(sketch.bits)[0])
+    catalog.stats["instance_mask"] += 1
+    mask = sketch_keep_mask(sketch, table, catalog=catalog)
+    return table.select(mask)
+
+
+def apply_sketch(
+    sketch: ProvenanceSketch, db: Database, catalog: Optional[Catalog] = None
+) -> Database:
+    """D_P: replace the sketched relation with its sketch instance.
+
+    Instances are cached per (sketch, table) in the catalog: repeated
+    applications of a reused sketch cost a dictionary lookup.
+    """
+    catalog = catalog or default_catalog()
     table = db[sketch.table]
-    mask = sketch_keep_mask(sketch, table)
-    return db.with_table(table.select(mask))
+    instance = catalog.get_instance(sketch, table)
+    if instance is None:
+        instance = _build_instance(sketch, table, catalog)
+        catalog.put_instance(sketch, table, instance)
+    return db.with_table(instance)
 
 
 def execute_with_sketch(
-    q: Query, db: Database, sketch: Optional[ProvenanceSketch]
+    q: Query,
+    db: Database,
+    sketch: Optional[ProvenanceSketch],
+    catalog: Optional[Catalog] = None,
 ) -> QueryResult:
     """Run ``q`` over ``D_P`` (or D when no sketch) — the instrumented query."""
     if sketch is None:
-        return execute(q, db)
-    return execute(q, apply_sketch(sketch, db))
+        return execute(q, db, catalog=catalog)
+    return execute(q, apply_sketch(sketch, db, catalog=catalog), catalog=catalog)
+
+
+def capture_and_execute(
+    q: Query, db: Database, ranges: RangeSet, catalog: Optional[Catalog] = None
+) -> Tuple[QueryResult, ProvenanceSketch]:
+    """Fused capture+execute: one inner-block pass feeds both the result and
+    the provenance-derived sketch (the seed evaluated the query twice)."""
+    catalog = catalog or default_catalog()
+    res, prov = execute_and_provenance(q, db, catalog=catalog)
+    sketch = capture_sketch(q, db, ranges, prov=prov, catalog=catalog)
+    return res, sketch
 
 
 def is_safe_sketch(q: Query, db: Database, sketch: ProvenanceSketch) -> bool:

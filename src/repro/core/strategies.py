@@ -18,8 +18,9 @@ from repro.aqp.size_estimation import (
     EstimationConfig,
     SizeEstimate,
     approximate_query_result,
-    estimate_size,
+    estimate_size_batched,
 )
+from repro.core.catalog import Catalog, default_catalog
 from repro.core.queries import Query
 from repro.core.ranges import RangeSet, equi_depth_ranges
 from repro.core.safety import prefilter_candidates, safe_attributes
@@ -40,10 +41,14 @@ class SelectionResult:
     topk: Tuple[str, ...] = ()  # ranking, best first (cost-based only)
 
 
-def candidate_pool(strategy: str, q: Query, db: Database, n_ranges: int) -> Tuple[str, ...]:
+def candidate_pool(
+    strategy: str, q: Query, db: Database, n_ranges: int,
+    catalog: Optional[Catalog] = None,
+) -> Tuple[str, ...]:
     """The strategy-specific candidate set, safety-checked and pre-filtered."""
+    catalog = catalog or default_catalog()
     fact = db[q.table]
-    safe = set(safe_attributes(q, db))
+    safe = set(safe_attributes(q, db, catalog=catalog))
     if strategy in ("RAND-ALL", "CB-OPT", "OPT"):
         pool = tuple(sorted(safe))
     elif strategy in ("RAND-REL-ALL", "CB-OPT-REL"):
@@ -56,7 +61,7 @@ def candidate_pool(strategy: str, q: Query, db: Database, n_ranges: int) -> Tupl
         pool = tuple([q.agg.attr] if q.agg.attr and q.agg.attr in safe else [])
     else:
         raise ValueError(f"unknown strategy {strategy!r}")
-    return prefilter_candidates(q, db, pool, n_ranges)
+    return prefilter_candidates(q, db, pool, n_ranges, catalog=catalog)
 
 
 def select_attribute(
@@ -70,8 +75,10 @@ def select_attribute(
     cfg: EstimationConfig = EstimationConfig(),
     ranges_for: Optional[Callable[[str], RangeSet]] = None,
     topk: int = 1,
+    catalog: Optional[Catalog] = None,
 ) -> SelectionResult:
-    cands = candidate_pool(strategy, q, db, n_ranges)
+    catalog = catalog or default_catalog()
+    cands = candidate_pool(strategy, q, db, n_ranges, catalog=catalog)
     if not cands:
         return SelectionResult(strategy, None, cands, {})
     ranges_for = ranges_for or (lambda a: equi_depth_ranges(db[q.table], a, n_ranges))
@@ -86,13 +93,15 @@ def select_attribute(
         ranking = tuple(sorted(sizes, key=sizes.get))
         return SelectionResult(strategy, best, cands, {}, topk=ranking[:topk])
 
-    # Cost-based: one shared AQR pass, per-candidate incidence (Sec. 8).
+    # Cost-based: one shared AQR pass, then all candidates' fragment
+    # incidence in a single vmapped device pass (Sec. 8).
     sample_cache = sample_cache or SampleCache()
     k_s, k_e = jax.random.split(key)
     samples = sample_cache.get_or_create(k_s, db[q.table], q.groupby_on_fact(db), theta)
     aqr = approximate_query_result(k_e, q, db, samples, cfg)
-    estimates: Dict[str, SizeEstimate] = {}
-    for a in cands:
-        estimates[a] = estimate_size(k_e, q, db, ranges_for(a), samples, cfg, aqr=aqr)
+    estimates: Dict[str, SizeEstimate] = estimate_size_batched(
+        k_e, q, db, {a: ranges_for(a) for a in cands}, samples, cfg,
+        aqr=aqr, catalog=catalog,
+    )
     ranking = tuple(sorted(estimates, key=lambda a: estimates[a].est_rows))
     return SelectionResult(strategy, ranking[0], cands, estimates, topk=ranking[:topk])

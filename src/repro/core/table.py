@@ -18,6 +18,29 @@ import numpy as np
 Array = jax.Array
 
 
+@dataclasses.dataclass(frozen=True, eq=False)
+class FragmentLayout:
+    """Physical fragment-major layout descriptor for a clustered table.
+
+    After ``cluster_by(ranges)`` every fragment of the range partition is a
+    contiguous row slice ``[offsets[f], offsets[f+1])``, so applying a sketch
+    on the same partition degenerates to concatenating the surviving slices —
+    no per-row filter scan.  Identity-hashed (``eq=False``) so it can ride in
+    pytree aux data.
+    """
+
+    attr: str
+    ranges_key: Tuple
+    offsets: np.ndarray  # (n_fragments + 1,) row offsets, offsets[0] == 0
+
+    @property
+    def n_fragments(self) -> int:
+        return int(self.offsets.shape[0]) - 1
+
+    def matches(self, ranges) -> bool:
+        return self.attr == ranges.attr and self.ranges_key == ranges.key()
+
+
 @jax.tree_util.register_pytree_node_class
 @dataclasses.dataclass(frozen=True)
 class ColumnTable:
@@ -27,23 +50,27 @@ class ColumnTable:
       name: relation name (static / aux data, not traced).
       columns: mapping attribute -> 1-D array; all columns share length.
       primary_key: attribute names forming the primary key (may be empty).
+      layout: fragment-major physical layout, set by ``cluster_by`` (row-
+        reordering operations drop it).
     """
 
     name: str
     columns: Dict[str, Array]
     primary_key: Tuple[str, ...] = ()
+    layout: Optional[FragmentLayout] = None
 
     # -- pytree protocol -----------------------------------------------------
     def tree_flatten(self):
         keys = tuple(sorted(self.columns))
         children = tuple(self.columns[k] for k in keys)
-        aux = (self.name, keys, self.primary_key)
+        aux = (self.name, keys, self.primary_key, self.layout)
         return children, aux
 
     @classmethod
     def tree_unflatten(cls, aux, children):
-        name, keys, pk = aux
-        return cls(name=name, columns=dict(zip(keys, children)), primary_key=pk)
+        name, keys, pk, layout = aux
+        return cls(name=name, columns=dict(zip(keys, children)), primary_key=pk,
+                   layout=layout)
 
     # -- basic accessors -----------------------------------------------------
     @property
@@ -66,7 +93,8 @@ class ColumnTable:
     def with_column(self, attr: str, values: Array) -> "ColumnTable":
         cols = dict(self.columns)
         cols[attr] = values
-        return ColumnTable(self.name, cols, self.primary_key)
+        # Row order is unchanged, so the physical layout survives.
+        return ColumnTable(self.name, cols, self.primary_key, self.layout)
 
     def select(self, mask: Array) -> "ColumnTable":
         """Keep rows where ``mask`` is True (host-side compaction)."""
@@ -81,10 +109,38 @@ class ColumnTable:
         )
 
     def sort_by(self, attrs: Sequence[str]) -> "ColumnTable":
-        """Physically order rows by ``attrs`` (fragment-major layout)."""
+        """Physically order rows by ``attrs``."""
         keys = [np.asarray(self.columns[a]) for a in reversed(list(attrs))]
         order = np.lexsort(keys)
         return self.gather(jnp.asarray(order))
+
+    def cluster_by(self, ranges) -> "ColumnTable":
+        """Fragment-major physical layout for a range partition.
+
+        Rows are stably reordered by fragment id so fragment ``f`` occupies
+        the contiguous slice ``[offsets[f], offsets[f+1])``; the resulting
+        ``FragmentLayout`` makes sketch application a concatenation of the
+        surviving slices (see ``repro.core.sketch.apply_sketch``).
+        """
+        bucket = np.asarray(ranges.bucketize(self[ranges.attr]))
+        order = np.argsort(bucket, kind="stable")
+        counts = np.bincount(bucket, minlength=ranges.n_ranges)
+        offsets = np.concatenate([[0], np.cumsum(counts)]).astype(np.int64)
+        clustered = self.gather(jnp.asarray(order))
+        layout = FragmentLayout(attr=ranges.attr, ranges_key=ranges.key(), offsets=offsets)
+        return ColumnTable(self.name, clustered.columns, self.primary_key, layout)
+
+    def take_fragments(self, frag_ids: np.ndarray) -> "ColumnTable":
+        """Concatenate the given fragments' contiguous slices (clustered only)."""
+        if self.layout is None:
+            raise ValueError(f"{self.name}: take_fragments needs a clustered table")
+        off = self.layout.offsets
+        frag_ids = np.asarray(frag_ids)
+        if frag_ids.size:
+            idx = np.concatenate([np.arange(off[f], off[f + 1]) for f in frag_ids])
+        else:
+            idx = np.empty(0, dtype=np.int64)
+        return self.gather(jnp.asarray(idx))
 
     def head(self, n: int) -> "ColumnTable":
         return ColumnTable(

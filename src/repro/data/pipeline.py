@@ -111,21 +111,32 @@ class SketchedDataPipeline:
             n_ranges=spec.n_ranges,
             theta=spec.theta,
             seed=seed,
+            # Fragment-major corpus layout: curation queries group by corpus
+            # attributes, so groups stay fragment-contained and selection is
+            # unaffected by the reorder; loading skips whole fragments.
+            cluster_tables=True,
         )
         q = spec.query()
         _, self.run_info = self.engine.run(q)
         sketch = self.engine.index.lookup(q)
         self.sketch = sketch
+        n_docs = metadata.num_rows
         if sketch is not None:
-            from repro.core.sketch import sketch_keep_mask
+            # Fragment-skipping load: the catalog-cached sketch instance is
+            # the surviving fragments' docs (slice concatenation when the
+            # engine clustered the corpus fragment-major).
+            from repro.core.sketch import apply_sketch
 
-            keep = np.asarray(sketch_keep_mask(sketch, metadata))
+            inst = apply_sketch(sketch, self.engine.db, catalog=self.engine.catalog)
+            self.selected_docs = np.sort(np.asarray(inst["corpus"]["doc_id"]))
         else:  # no viable sketch: fall back to exact predicate
             from repro.core.queries import provenance_mask
 
-            keep = provenance_mask(q, self.engine.db)
-        self.selected_docs = np.asarray(metadata["doc_id"])[keep]
-        self.skipped_fraction = 1.0 - keep.mean()
+            keep = provenance_mask(q, self.engine.db, catalog=self.engine.catalog)
+            self.selected_docs = np.sort(
+                np.asarray(self.engine.db["corpus"]["doc_id"])[keep]
+            )
+        self.skipped_fraction = 1.0 - len(self.selected_docs) / max(n_docs, 1)
         # Deterministic shuffle; strided rank sharding.
         rng = np.random.default_rng(seed + 17)
         self._order = rng.permutation(self.selected_docs)

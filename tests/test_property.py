@@ -13,6 +13,9 @@ import dataclasses
 import jax
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis", reason="property tests need hypothesis (pip install -r requirements-dev.txt)")
+
 from hypothesis import HealthCheck, given, settings
 from hypothesis import strategies as st
 
