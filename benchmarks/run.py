@@ -21,10 +21,14 @@ import traceback
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--scale", choices=["quick", "full"], default="quick")
+    ap.add_argument("--quick", action="store_true",
+                    help="alias for --scale quick (CI smoke job)")
     ap.add_argument("--only", default=None)
     ap.add_argument("--json", action="store_true",
-                    help="write BENCH_fig9.json next to the working directory")
+                    help="write BENCH_*.json next to the working directory")
     args = ap.parse_args()
+    if args.quick:
+        args.scale = "quick"
 
     from benchmarks import (
         bench_ablation,
@@ -32,6 +36,7 @@ def main() -> None:
         bench_fig7_strategies,
         bench_fig8_accuracy,
         bench_fig9_endtoend,
+        bench_maintenance,
         bench_table1,
     )
 
@@ -45,6 +50,10 @@ def main() -> None:
             json_path="BENCH_fig9.json" if args.json else None,
         ),
         "ablation": bench_ablation.run,
+        "maintenance": functools.partial(
+            bench_maintenance.run,
+            json_path="BENCH_maintenance.json" if args.json else None,
+        ),
     }
     failed = []
     for name, fn in benches.items():

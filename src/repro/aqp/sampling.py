@@ -120,13 +120,84 @@ def uniform_reservoir_sample(
     )
 
 
+def extend_sample_for_append(
+    key: jax.Array,
+    s: SampleSet,
+    batches: "Tuple[ColumnTable, ...]",
+    row_offsets: Tuple[int, ...],
+) -> SampleSet:
+    """Delta pass: fold appended batches into a cached sample.
+
+    Each new row is Bernoulli(theta)-included (new groups keep at least one
+    row, matching the stratified ``min_per_group=1`` floor), group sizes are
+    updated from *all* delta rows, and unseen group keys extend the
+    dictionary — so size estimation on an appended table reuses the existing
+    sample plus O(delta) work instead of resampling the whole relation.
+    The reservoir is approximate across extensions (old rows are never
+    displaced); estimators only need per-group uniformity, which Bernoulli
+    inclusion preserves.
+    """
+    from repro.core.catalog import extend_group_values, map_group_keys
+
+    indices = [s.indices]
+    sample_gid = [s.sample_gid]
+    group_sizes = s.group_sizes.copy()
+    sample_sizes = s.sample_sizes.copy()
+    group_values = {a: v.copy() for a, v in s.group_values.items()}
+    n_groups = s.n_groups
+    key_index: Dict[Tuple, int] = {}
+    if s.groupby:
+        cols = [group_values[a].tolist() for a in s.groupby]
+        key_index = {k: g for g, k in enumerate(zip(*cols))}
+
+    for batch, offset in zip(batches, row_offsets):
+        m = batch.num_rows
+        if m == 0:
+            continue
+        if s.groupby:
+            stacked = np.stack([np.asarray(batch[a]) for a in s.groupby], axis=1)
+            gid_b, new_keys, n_groups = map_group_keys(stacked, key_index, n_groups)
+            group_values = extend_group_values(group_values, s.groupby, new_keys)
+        else:
+            gid_b = np.zeros(m, dtype=np.int64)
+        if n_groups > group_sizes.shape[0]:
+            pad = n_groups - group_sizes.shape[0]
+            group_sizes = np.concatenate([group_sizes, np.zeros(pad, dtype=group_sizes.dtype)])
+            sample_sizes = np.concatenate([sample_sizes, np.zeros(pad, dtype=sample_sizes.dtype)])
+        np.add.at(group_sizes, gid_b, 1)
+        key, k_b = jax.random.split(key)
+        take = np.asarray(jax.random.uniform(k_b, (m,))) < s.theta
+        # Unsampled groups keep their first batch row (the stratified floor).
+        uniq_g, first_idx = np.unique(gid_b, return_index=True)
+        force = first_idx[sample_sizes[uniq_g] == 0]
+        take[force] = True
+        np.add.at(sample_sizes, gid_b[take], 1)
+        indices.append(np.nonzero(take)[0] + offset)
+        sample_gid.append(gid_b[take])
+
+    return SampleSet(
+        table=s.table, groupby=s.groupby, theta=s.theta,
+        indices=np.concatenate(indices),
+        sample_gid=np.concatenate(sample_gid).astype(s.sample_gid.dtype),
+        n_groups=n_groups, group_sizes=group_sizes, sample_sizes=sample_sizes,
+        group_values=group_values, stratified=s.stratified,
+    )
+
+
 class SampleCache:
-    """Sec. 7.1 reuse: cache stratified samples keyed by (table, group-by)."""
+    """Sec. 7.1 reuse: cache stratified samples keyed by (table, group-by).
+
+    Version-aware: entries remember the (uid, version) of the table they were
+    drawn from.  A hit on a *newer* version of the same relation extends the
+    sample with a delta pass when every intervening step is an append;
+    deletes (which invalidate row indices) and lineage changes resample.
+    """
 
     def __init__(self):
-        self._cache: Dict[Tuple[str, Tuple[str, ...], float], SampleSet] = {}
+        self._cache: Dict[Tuple[str, Tuple[str, ...], float], Tuple[SampleSet, "ColumnTable"]] = {}
         self.hits = 0
         self.misses = 0
+        self.extended = 0
 
     def get_or_create(
         self,
@@ -136,12 +207,34 @@ class SampleCache:
         theta: float,
     ) -> SampleSet:
         ck = (table.name, tuple(groupby), theta)
-        if ck in self._cache:
-            self.hits += 1
-            return self._cache[ck]
+        cached = self._cache.get(ck)
+        if cached is not None:
+            s, src = cached
+            if src is table:
+                self.hits += 1
+                return s
+            if src.uid == table.uid and src.version < table.version:
+                # Walk the delta chain back to the sampled version; extend if
+                # it is appends all the way down.
+                batches, offsets = [], []
+                t = table
+                ok = True
+                while t is not src and t.version > src.version:
+                    if t.delta is None or t.delta.kind != "append":
+                        ok = False
+                        break
+                    batches.append(t.delta.appended)
+                    offsets.append(t.delta.parent.num_rows)
+                    t = t.delta.parent
+                if ok and t is src:
+                    s2 = extend_sample_for_append(
+                        key, s, tuple(reversed(batches)), tuple(reversed(offsets)))
+                    self._cache[ck] = (s2, table)
+                    self.extended += 1
+                    return s2
         self.misses += 1
         s = stratified_reservoir_sample(key, table, groupby, theta)
-        self._cache[ck] = s
+        self._cache[ck] = (s, table)
         return s
 
     def invalidate(self, table_name: str) -> None:

@@ -144,8 +144,10 @@ def _sample_incidence(
     samples: SampleSet,
     ranges: "RangeSet",
     satisfied: np.ndarray,
+    catalog: "Optional[Catalog]" = None,
 ) -> Tuple[np.ndarray, np.ndarray]:
     """(frag_id, gid) incidence pairs from the *sample* rows of G'."""
+    catalog = _catalog(catalog)
     fact = db[q.table]
     if ranges.attr in samples.groupby:
         # CB-OPT-GB fast path: the group key pins the fragment — exact.
@@ -156,7 +158,15 @@ def _sample_incidence(
     row_sat = satisfied[samples.sample_gid]
     rows = samples.indices[row_sat]
     gids = samples.sample_gid[row_sat]
-    frag = np.asarray(ranges.bucketize(fact[ranges.attr][jnp.asarray(rows)]))
+    # Prefer the catalog's full bucket vector when it is already cached (or
+    # delta-refreshable from a cached ancestor — the appended-table path):
+    # gathering beats re-searchsorting the sampled values, and it is the
+    # vector capture/application use anyway.
+    bucket = catalog.cached_bucket(fact, ranges)
+    if bucket is not None:
+        frag = np.asarray(bucket)[rows]
+    else:
+        frag = np.asarray(ranges.bucketize(fact[ranges.attr][jnp.asarray(rows)]))
     pairs = np.unique(np.stack([frag, gids], axis=1), axis=0)
     return pairs[:, 0], pairs[:, 1]
 
@@ -203,7 +213,7 @@ def _candidate_incidence(
 ) -> Tuple[np.ndarray, np.ndarray]:
     if cfg.incidence == "full":
         return _full_incidence(q, db, samples, ranges, satisfied, catalog)
-    return _sample_incidence(q, db, samples, ranges, satisfied)
+    return _sample_incidence(q, db, samples, ranges, satisfied, catalog)
 
 
 def _incidence_pass(frag, valid, p_pair, sizes):
@@ -246,7 +256,10 @@ def estimate_size_batched(
     One shared AQR pass (the estimates are candidate-independent), then the
     per-fragment scatter math for every candidate runs as a single batched
     kernel over padded (frag, group) incidence pairs.  Fragment sizes and
-    full-table bucketizations come from the catalog's caches.
+    full-table bucketizations come from the catalog's caches; on an appended
+    table both delta-refresh (prior per-fragment counts plus a batch-sized
+    pass), so candidate selection after a mutation never re-bucketizes the
+    whole relation.
     """
     catalog = _catalog(catalog)
     if not ranges_by_attr:

@@ -2,7 +2,13 @@
 # selection machinery, implemented as a TPU-native columnar engine.
 from repro.core.catalog import Catalog, default_catalog
 from repro.core.engine import PBDSEngine, RunInfo
-from repro.core.index import SketchIndex, subsumes
+from repro.core.index import IndexEntry, SketchIndex, subsumes
+from repro.core.maintenance import (
+    MaintenanceError,
+    SketchMaintainer,
+    build_maintainer,
+    repair_sketch,
+)
 from repro.core.queries import (
     Aggregate,
     Having,
@@ -15,7 +21,7 @@ from repro.core.queries import (
     provenance_mask,
 )
 from repro.core.ranges import RangeSet, equi_depth_ranges, equi_width_ranges, fragment_sizes
-from repro.core.safety import prefilter_candidates, safe_attributes
+from repro.core.safety import monotone_safe, prefilter_candidates, safe_attributes
 from repro.core.sketch import (
     ProvenanceSketch,
     apply_sketch,
@@ -33,11 +39,20 @@ from repro.core.strategies import (
     candidate_pool,
     select_attribute,
 )
-from repro.core.table import ColumnTable, Database, FragmentLayout, encode_groups, from_numpy
+from repro.core.table import (
+    ColumnTable,
+    Database,
+    FragmentLayout,
+    TableDelta,
+    encode_groups,
+    from_numpy,
+)
 
 __all__ = [
     "Catalog", "default_catalog",
-    "PBDSEngine", "RunInfo", "SketchIndex", "subsumes",
+    "PBDSEngine", "RunInfo", "SketchIndex", "IndexEntry", "subsumes",
+    "MaintenanceError", "SketchMaintainer", "build_maintainer", "repair_sketch",
+    "monotone_safe", "TableDelta",
     "Aggregate", "Having", "JoinSpec", "Predicate", "Query", "QueryResult",
     "execute", "execute_and_provenance", "provenance_mask",
     "RangeSet", "equi_depth_ranges", "equi_width_ranges", "fragment_sizes",

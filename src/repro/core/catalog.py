@@ -19,11 +19,17 @@ whole relation.  The ``Catalog`` is the DBMS-style fix: per table it caches
   * cheap per-attribute statistics (distinct counts, non-negativity) used by
     the safety pre-filter.
 
-Tables are immutable, so entries are keyed by object identity with a strong
-reference held for validity — replacing a table (e.g. after ``cluster_by``)
-naturally invalidates its cached state.  ``stats`` counts cache misses (real
-work) and hits, which the tests use to assert that a repeated workload does
-zero host-side encode/argsort work.
+Tables are immutable *values*, but a relation evolves through versions:
+``ColumnTable.append`` / ``.delete`` produce a new object carrying a
+``TableDelta`` back-pointer.  Entries are keyed by object identity with a
+strong reference held for validity; a cache miss on a table that has a delta
+is *refreshed incrementally* from the parent's entry (bucketize the batch and
+concatenate, extend the group dictionary with the batch's keys, add/subtract
+per-fragment counts) instead of redoing the full-table host work.  The
+``*_delta`` stat counters separate that delta-sized work from full misses, so
+tests can assert the delta path never re-bucketizes a whole table.  ``stats``
+counts cache misses (real work) and hits, which the tests use to assert that
+a repeated workload does zero host-side encode/argsort work.
 """
 from __future__ import annotations
 
@@ -43,7 +49,7 @@ if TYPE_CHECKING:  # pragma: no cover - typing only
 Array = jax.Array
 
 
-@dataclasses.dataclass(frozen=True)
+@dataclasses.dataclass
 class GroupEncoding:
     """Cached dictionary encoding of one GROUP BY tuple on one table."""
 
@@ -51,6 +57,118 @@ class GroupEncoding:
     gid_dev: Array  # same, device-resident
     n_groups: int
     group_values: Dict[str, np.ndarray]  # per-group key values
+    _key_index: Optional[Dict[Tuple, int]] = None  # lazy key-tuple -> gid
+
+    def key_index(self, attrs: Tuple[str, ...]) -> Dict[Tuple, int]:
+        """key tuple -> gid, built lazily (delta refresh needs the lookup)."""
+        if self._key_index is None:
+            cols = [self.group_values[a].tolist() for a in attrs]
+            self._key_index = {key: g for g, key in enumerate(zip(*cols))} if cols else {(): 0}
+        return self._key_index
+
+
+def map_group_keys(
+    stacked: np.ndarray, key_index: Dict[Tuple, int], n_groups: int,
+    grow: bool = True,
+) -> Tuple[np.ndarray, np.ndarray, int]:
+    """Map a batch of stacked group-key rows through an existing dictionary.
+
+    Known keys take their existing gid; unseen ones get fresh ids appended
+    (``key_index`` is mutated in place) — or raise ``KeyError`` when
+    ``grow=False``.  The shared primitive behind catalog encoding refresh,
+    sketch maintainers and sample extension, so the stable-gid-numbering
+    invariant lives in exactly one place.  Returns ``(gid per batch row,
+    unseen unique key rows in assignment order, new group count)``; per-row
+    work is vectorized, the Python loop touches only *unique* batch keys.
+    """
+    uniq, inv = np.unique(stacked, axis=0, return_inverse=True)
+    mapped = np.empty(uniq.shape[0], dtype=np.int64)
+    new_rows = []
+    for i, row in enumerate(uniq):
+        key = tuple(row.tolist())
+        g = key_index.get(key)
+        if g is None:
+            if not grow:
+                raise KeyError(key)
+            g = n_groups
+            key_index[key] = g
+            n_groups += 1
+            new_rows.append(i)
+        mapped[i] = g
+    return mapped[inv], uniq[new_rows], n_groups
+
+
+def extend_group_values(
+    group_values: Dict[str, np.ndarray],
+    attrs: Tuple[str, ...],
+    new_keys: np.ndarray,
+) -> Dict[str, np.ndarray]:
+    """Append freshly assigned groups' key values (dtype-preserving).
+
+    Companion to ``map_group_keys``: ``new_keys`` is its unseen-unique-rows
+    output, column ``j`` holding attribute ``attrs[j]``.  Returns a new dict
+    (inputs are shared with live cache entries and must not mutate).
+    """
+    if not len(new_keys):
+        return group_values
+    return {
+        a: np.concatenate([group_values[a],
+                           new_keys[:, j].astype(group_values[a].dtype, copy=False)])
+        for j, a in enumerate(attrs)
+    }
+
+
+def extend_encoding(
+    parent: GroupEncoding, batch: ColumnTable, attrs: Tuple[str, ...]
+) -> GroupEncoding:
+    """Dictionary-encode ``batch`` against ``parent``'s group dictionary.
+
+    Known keys map to their existing gid; unseen keys get fresh ids appended,
+    so downstream per-group state (aggregates, incidence counters) stays
+    aligned and only grows.  Work is O(batch + new groups), never O(table).
+    """
+    if not attrs:
+        gid = np.concatenate([parent.gid, np.zeros(batch.num_rows, dtype=np.int32)])
+        return GroupEncoding(gid, jnp.asarray(gid), parent.n_groups, parent.group_values)
+    stacked = np.stack([np.asarray(batch[a]) for a in attrs], axis=1)
+    key_index = dict(parent.key_index(attrs))  # copy: parent entry stays valid
+    delta_gid, new_keys, n_groups = map_group_keys(stacked, key_index, parent.n_groups)
+    group_values = extend_group_values(parent.group_values, attrs, new_keys)
+    gid = np.concatenate([parent.gid, delta_gid]).astype(np.int32)
+    return GroupEncoding(gid, jnp.asarray(gid), n_groups, group_values, key_index)
+
+
+def join_rows(
+    fact_cols: Dict[str, np.ndarray],
+    right: ColumnTable,
+    left_key: str,
+    right_key: str,
+) -> Tuple[Dict[str, Array], np.ndarray, np.ndarray]:
+    """Inner equi-join of a column batch against ``right`` (right key unique).
+
+    Returns ``(joined columns, matched batch row ids, right row ids)`` with
+    the same column-naming rule the full catalog join uses, so a delta batch
+    joins byte-compatibly with its parent layout.
+    """
+    lk = np.asarray(fact_cols[left_key])
+    rk = np.asarray(right[right_key])
+    order = np.argsort(rk, kind="stable")
+    rk_sorted = rk[order]
+    pos = np.searchsorted(rk_sorted, lk)
+    pos_clip = np.minimum(pos, len(rk_sorted) - 1)
+    matched = rk_sorted[pos_clip] == lk
+    fact_idx = np.nonzero(matched)[0]
+    right_idx = order[pos_clip[fact_idx]]
+
+    cols: Dict[str, Array] = {}
+    fact_take = jnp.asarray(fact_idx)
+    right_take = jnp.asarray(right_idx)
+    for a in sorted(fact_cols):
+        cols[a] = jnp.take(jnp.asarray(fact_cols[a]), fact_take, axis=0)
+    for a in right.schema:
+        name = a if a not in cols else f"{right.name}.{a}"
+        cols[name] = jnp.take(right[a], right_take, axis=0)
+    return cols, fact_idx, right_idx
 
 
 class Catalog:
@@ -72,7 +190,7 @@ class Catalog:
         self._frag_sizes: Dict[Tuple[int, Tuple], Tuple[ColumnTable, np.ndarray]] = {}
         self._joins: Dict[Tuple[int, int, str, str], Tuple[ColumnTable, ColumnTable, ColumnTable, np.ndarray]] = {}
         self._instances: Dict[Tuple[int, int], Tuple[object, ColumnTable, ColumnTable]] = {}
-        self._distinct: Dict[Tuple[int, str], Tuple[ColumnTable, int]] = {}
+        self._distinct: Dict[Tuple[int, str], Tuple[ColumnTable, int, np.ndarray]] = {}
         self._nonneg: Dict[Tuple[int, str], Tuple[ColumnTable, bool]] = {}
 
     def clear(self) -> None:
@@ -105,6 +223,20 @@ class Catalog:
         if hit is not None and hit[0] is table:
             self.stats["encode_groups_hit"] += 1
             return hit[1]
+        d = table.delta
+        if d is not None and attrs:
+            parent = self.groups(d.parent, attrs)
+            if d.kind == "append":
+                enc = extend_encoding(parent, d.appended, tuple(attrs))
+            else:
+                gid = parent.gid[d.kept_idx].astype(np.int32)
+                # Group numbering survives a delete; emptied groups simply
+                # stop appearing (the executor's present-mask hides them).
+                enc = GroupEncoding(gid, jnp.asarray(gid), parent.n_groups,
+                                    parent.group_values, parent._key_index)
+            self.stats["encode_groups_delta"] += 1
+            self._put(self._groups, key, (table, enc))
+            return enc
         self.stats["encode_groups"] += 1
         gid, n_groups, group_values = encode_groups(table, attrs)
         enc = GroupEncoding(gid=gid, gid_dev=jnp.asarray(gid), n_groups=n_groups,
@@ -113,16 +245,51 @@ class Catalog:
         return enc
 
     # -- partition-attribute bucketizations ----------------------------------
+    @staticmethod
+    def _bucketize_raw(table: ColumnTable, ranges) -> Array:
+        """Bucketize one table under a single-attribute or composite partition."""
+        if hasattr(ranges, "parts"):  # CompositeRanges duck-type
+            return ranges.bucketize(table)
+        return ranges.bucketize(table[ranges.attr])
+
     def bucketize(self, table: ColumnTable, ranges: "RangeSet") -> Array:
         key = (id(table), ranges.key())
         hit = self._buckets.get(key)
         if hit is not None and hit[0] is table:
             self.stats["bucketize_hit"] += 1
             return hit[1]
+        d = table.delta
+        if d is not None:
+            parent_bucket = self.bucketize(d.parent, ranges)
+            if d.kind == "append":
+                bucket = jnp.concatenate(
+                    [parent_bucket, self._bucketize_raw(d.appended, ranges)])
+            else:
+                bucket = jnp.take(parent_bucket, jnp.asarray(d.kept_idx), axis=0)
+            self.stats["bucketize_delta"] += 1
+            self._put(self._buckets, key, (table, bucket))
+            return bucket
         self.stats["bucketize"] += 1
-        bucket = ranges.bucketize(table[ranges.attr])
+        bucket = self._bucketize_raw(table, ranges)
         self._put(self._buckets, key, (table, bucket))
         return bucket
+
+    def cached_bucket(self, table: ColumnTable, ranges: "RangeSet") -> Optional[Array]:
+        """The full bucket vector iff it is available without full-table work.
+
+        Returns the cached entry, or delta-refreshes it when every ancestor up
+        to a cached entry is reachable through deltas; returns ``None`` when
+        producing it would cost a full-table bucketize (callers then fall back
+        to bucketizing just the rows they touch).
+        """
+        t = table
+        while True:
+            hit = self._buckets.get((id(t), ranges.key()))
+            if hit is not None and hit[0] is t:
+                return self.bucketize(table, ranges)  # delta-refresh the chain
+            if t.delta is None:
+                return None
+            t = t.delta.parent
 
     def fragment_sizes(self, table: ColumnTable, ranges: "RangeSet") -> np.ndarray:
         key = (id(table), ranges.key())
@@ -130,6 +297,24 @@ class Catalog:
         if hit is not None and hit[0] is table:
             self.stats["fragment_sizes_hit"] += 1
             return hit[1]
+        d = table.delta
+        if d is not None:
+            parent_sizes = self.fragment_sizes(d.parent, ranges)
+            if d.kind == "append":
+                # Refresh the full bucket vector through the delta path: the
+                # batch-sized tail feeds the counts here and the cached vector
+                # is exactly what sketch application gathers from next.
+                delta_bucket = np.asarray(
+                    self.bucketize(table, ranges))[d.parent.num_rows:]
+                sign = 1
+            else:
+                delta_bucket = np.asarray(self.bucketize(d.parent, ranges))[d.deleted_idx]
+                sign = -1
+            counts = np.bincount(delta_bucket, minlength=ranges.n_ranges)
+            sizes = parent_sizes + sign * counts.astype(parent_sizes.dtype)
+            self.stats["fragment_sizes_delta"] += 1
+            self._put(self._frag_sizes, key, (table, sizes))
+            return sizes
         self.stats["fragment_sizes"] += 1
         bucket = self.bucketize(table, ranges)
         sizes = np.asarray(
@@ -155,25 +340,30 @@ class Catalog:
         if hit is not None and hit[0] is fact and hit[1] is right:
             self.stats["join_hit"] += 1
             return hit[2], hit[3]
+        d = fact.delta
+        if d is not None:
+            p_joined, p_fact_idx = self.join(d.parent, right, left_key, right_key)
+            if d.kind == "append":
+                batch_cols = {a: np.asarray(d.appended[a]) for a in d.appended.schema}
+                cols_new, b_idx, _ = join_rows(batch_cols, right, left_key, right_key)
+                # Build the new joined table *as an append of its parent*, so
+                # the joined relation carries its own delta chain and its
+                # group encodings delta-refresh just like base tables'.
+                joined = p_joined.append({a: cols_new[a] for a in p_joined.schema})
+                fact_idx = np.concatenate([p_fact_idx, b_idx + d.parent.num_rows])
+            else:
+                keep_row = np.zeros(d.parent.num_rows, dtype=bool)
+                keep_row[d.kept_idx] = True
+                old_to_new = np.cumsum(keep_row) - 1
+                joined_keep = keep_row[p_fact_idx]
+                joined = p_joined.delete(~joined_keep)
+                fact_idx = old_to_new[p_fact_idx[joined_keep]]
+            self.stats["join_delta"] += 1
+            self._put(self._joins, key, (fact, right, joined, fact_idx))
+            return joined, fact_idx
         self.stats["join_materialize"] += 1
-        lk = np.asarray(fact[left_key])
-        rk = np.asarray(right[right_key])
-        order = np.argsort(rk, kind="stable")
-        rk_sorted = rk[order]
-        pos = np.searchsorted(rk_sorted, lk)
-        pos_clip = np.minimum(pos, len(rk_sorted) - 1)
-        matched = rk_sorted[pos_clip] == lk
-        fact_idx = np.nonzero(matched)[0]
-        right_idx = order[pos_clip[fact_idx]]
-
-        cols: Dict[str, Array] = {}
-        fact_take = jnp.asarray(fact_idx)
-        right_take = jnp.asarray(right_idx)
-        for a in fact.schema:
-            cols[a] = jnp.take(fact[a], fact_take, axis=0)
-        for a in right.schema:
-            name = a if a not in cols else f"{right.name}.{a}"
-            cols[name] = jnp.take(right[a], right_take, axis=0)
+        cols, fact_idx, _ = join_rows(
+            {a: fact[a] for a in fact.schema}, right, left_key, right_key)
         joined = ColumnTable(f"{fact.name}_join_{right.name}", cols, fact.primary_key)
         self._put(self._joins, key, (fact, right, joined, fact_idx))
         return joined, fact_idx
@@ -197,16 +387,40 @@ class Catalog:
         hit = self._distinct.get(key)
         if hit is not None and hit[0] is table:
             return hit[1]
+        d = table.delta
+        if d is not None and d.kind == "append":
+            parent_hit = self._distinct.get((id(d.parent), attr))
+            if parent_hit is not None and parent_hit[0] is d.parent:
+                uniq = np.union1d(parent_hit[2], np.asarray(d.appended[attr]))
+                self.stats["distinct_count_delta"] += 1
+                self._put(self._distinct, key, (table, int(uniq.shape[0]), uniq))
+                return int(uniq.shape[0])
+        # Deletes may or may not remove a value's last occurrence, so they
+        # recompute; appends without a cached parent do too.
         self.stats["distinct_count"] += 1
-        n = int(np.unique(np.asarray(table[attr])).shape[0])
-        self._put(self._distinct, key, (table, n))
-        return n
+        uniq = np.unique(np.asarray(table[attr]))
+        self._put(self._distinct, key, (table, int(uniq.shape[0]), uniq))
+        return int(uniq.shape[0])
 
     def column_nonnegative(self, table: ColumnTable, attr: str) -> bool:
         key = (id(table), attr)
         hit = self._nonneg.get(key)
         if hit is not None and hit[0] is table:
             return hit[1]
+        d = table.delta
+        if d is not None:
+            parent_hit = self._nonneg.get((id(d.parent), attr))
+            if parent_hit is not None and parent_hit[0] is d.parent:
+                parent_ok = parent_hit[1]
+                if d.kind == "append":
+                    ok = parent_ok and not bool((np.asarray(d.appended[attr]) < 0).any())
+                    self.stats["column_stats_delta"] += 1
+                    self._put(self._nonneg, key, (table, ok))
+                    return ok
+                if parent_ok:  # removing rows cannot introduce negatives
+                    self.stats["column_stats_delta"] += 1
+                    self._put(self._nonneg, key, (table, True))
+                    return True
         self.stats["column_stats"] += 1
         ok = not bool((np.asarray(table[attr]) < 0).any())
         self._put(self._nonneg, key, (table, ok))

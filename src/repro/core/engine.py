@@ -21,17 +21,19 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Dict, Optional, Tuple
+from typing import Dict, Mapping, Optional, Tuple
 
 import jax
+import numpy as np
 
 from repro.aqp.sampling import SampleCache
 from repro.aqp.size_estimation import EstimationConfig
 from repro.core.catalog import Catalog
-from repro.core.index import SketchIndex
+from repro.core.index import IndexEntry, SketchIndex
+from repro.core.maintenance import build_maintainer, repair_sketch
 from repro.core.queries import Query, QueryResult, execute, execute_and_provenance
 from repro.core.ranges import RangeSet, equi_depth_ranges
-from repro.core.sketch import apply_sketch, capture_sketch, execute_with_sketch
+from repro.core.sketch import ProvenanceSketch, apply_sketch, capture_sketch, execute_with_sketch
 from repro.core.strategies import select_attribute
 from repro.core.table import Database
 
@@ -46,6 +48,10 @@ class RunInfo:
     t_select: float = 0.0
     t_capture: float = 0.0
     t_execute: float = 0.0
+    # Index hit on a mutated table: the sketch was brought current before use
+    # (incrementally maintained, or re-captured when maintenance refused —
+    # catalog.stats['sketch_maintained'/'sketch_recaptured'] tell them apart).
+    repaired: bool = False
 
     @property
     def t_total(self) -> float:
@@ -63,6 +69,7 @@ class PBDSEngine:
         seed: int = 0,
         min_selectivity_gain: float = 0.9,
         cluster_tables: bool = False,
+        max_delta_chain: int = 64,
     ):
         self.db = db
         self.strategy = strategy
@@ -75,6 +82,9 @@ class PBDSEngine:
         self.cluster_tables = cluster_tables
         self._key = jax.random.PRNGKey(seed)
         self._ranges_cache: Dict[Tuple[str, str], RangeSet] = {}
+        # Delta chains pin every prior version's columns; past this depth the
+        # engine advances all maintainers and collapses the history.
+        self.max_delta_chain = max_delta_chain
         # Sketches estimated to cover >= this fraction of the table are not
         # worth creating (problem definition (i) in Sec. 4.5).
         self.min_selectivity_gain = min_selectivity_gain
@@ -106,15 +116,70 @@ class PBDSEngine:
         self.catalog.invalidate_table(table)  # old object can never hit again
         self.catalog.stats["cluster"] += 1
 
+    # -- mutations -------------------------------------------------------------
+    def append_rows(self, table_name: str, rows: Mapping[str, np.ndarray]) -> None:
+        """Append a batch; sketches repair lazily on their next index hit."""
+        self.db = self.db.with_table(self.db[table_name].append(rows))
+        self.catalog.stats["table_append"] += 1
+        self._bound_history(table_name)
+
+    def delete_rows(self, table_name: str, mask: np.ndarray) -> None:
+        """Delete the masked rows; sketches repair lazily on their next hit."""
+        self.db = self.db.with_table(self.db[table_name].delete(mask))
+        self.catalog.stats["table_delete"] += 1
+        self._bound_history(table_name)
+
+    def _bound_history(self, table_name: str) -> None:
+        """Cap the delta chain: advance every maintainer to the current
+        version (delta-sized work), then drop the parent references so prior
+        versions' columns can be freed.  Caches keyed to old versions rebuild
+        once on next touch — O(table) once per ``max_delta_chain`` mutations,
+        amortized away."""
+        table = self.db[table_name]
+        if table.delta_depth() <= self.max_delta_chain:
+            return
+        from repro.core.maintenance import MaintenanceError
+
+        for e in self.index.entries():
+            if e.query.table != table_name or e.maintainer is None:
+                continue
+            try:
+                e.maintainer.apply(table, self.db)
+                e.sketch = e.maintainer.to_sketch(table, self.catalog)
+            except MaintenanceError:
+                e.maintainer = None  # next hit re-captures
+        self.db = self.db.with_table(table.collapse())
+        # Drop every chain version's catalog entries and cached samples: the
+        # id()-keyed entries hold strong refs, so without this the collapsed
+        # chain (every prior version's columns) would stay pinned anyway.
+        t = table
+        while t is not None:
+            self.catalog.invalidate_table(t)
+            t = t.delta.parent if t.delta is not None else None
+        self.samples.invalidate(table_name)
+        self.catalog.stats["history_collapse"] += 1
+
+    def _current_sketch(self, entry: IndexEntry) -> Tuple[ProvenanceSketch, bool]:
+        """The entry's sketch, transparently repaired if the table mutated."""
+        table = self.db[entry.query.table]
+        if entry.sketch.current_for(table):
+            return entry.sketch, False
+        result, maintainer = repair_sketch(
+            entry.query, self.db, entry.sketch, entry.maintainer, catalog=self.catalog)
+        entry.sketch = result.sketch
+        entry.maintainer = maintainer
+        return result.sketch, True
+
     def run(self, q: Query) -> Tuple[QueryResult, RunInfo]:
         t0 = time.perf_counter()
-        sketch = self.index.lookup(q) if self.strategy != "NO-PS" else None
-        if sketch is not None:
+        entry = self.index.lookup_entry(q) if self.strategy != "NO-PS" else None
+        if entry is not None:
+            sketch, repaired = self._current_sketch(entry)
             res = execute_with_sketch(q, self.db, sketch, catalog=self.catalog)
             t1 = time.perf_counter()
             return res, RunInfo(
                 reused=True, created=False, attr=sketch.attr, strategy=self.strategy,
-                selectivity=sketch.selectivity, t_execute=t1 - t0,
+                selectivity=sketch.selectivity, t_execute=t1 - t0, repaired=repaired,
             )
 
         if self.strategy == "NO-PS":
@@ -148,7 +213,11 @@ class PBDSEngine:
         res, prov = execute_and_provenance(q, self.db, catalog=self.catalog)
         t2 = time.perf_counter()
         sketch = capture_sketch(q, self.db, ranges, prov=prov, catalog=self.catalog)
-        self.index.insert(q, sketch)
+        # Maintenance state rides along from capture: the inner-block products
+        # it needs (group encoding, join layout, bucketization) are all catalog
+        # hits at this point, so the build costs one delta-free counting pass.
+        maintainer = build_maintainer(q, self.db, ranges, self.catalog)
+        self.index.insert(q, sketch, maintainer=maintainer)
         # Warm the reuse path now, while we are already paying capture cost:
         # materialize the sketch instance and run the instrumented query once
         # so its catalog entries (instance, group encoding, join layout) and

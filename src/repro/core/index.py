@@ -55,17 +55,29 @@ class IndexEntry:
     query: Query
     sketch: ProvenanceSketch
     uses: int = 0
+    last_hit: int = 0  # index clock at insert/last lookup hit (prune recency)
+    # Incremental-maintenance state for this sketch (a
+    # ``repro.core.maintenance.SketchMaintainer``); opaque to the index.
+    maintainer: Optional[object] = None
 
 
 class SketchIndex:
-    """In-memory sketch store with subsumption-based retrieval."""
+    """In-memory sketch store with subsumption-based retrieval.
+
+    The engine repairs a stale entry *in place* after table mutations
+    (``entry.sketch`` is replaced with the maintained sketch), so storage and
+    retrieval stay mutation-oblivious.
+    """
 
     def __init__(self):
         self._entries: Dict[Tuple, List[IndexEntry]] = {}
         self.hits = 0
         self.misses = 0
+        self._clock = 0
 
-    def lookup(self, q: Query) -> Optional[ProvenanceSketch]:
+    def lookup_entry(self, q: Query) -> Optional[IndexEntry]:
+        """The smallest stored sketch whose query subsumes ``q``, as an entry
+        (the engine needs the entry to repair/replace the sketch in place)."""
         best: Optional[IndexEntry] = None
         for e in self._entries.get(_pred_key(q), []):
             if subsumes(e.query, q):
@@ -75,26 +87,38 @@ class SketchIndex:
             self.misses += 1
             return None
         best.uses += 1
+        self._clock += 1
+        best.last_hit = self._clock
         self.hits += 1
-        return best.sketch
+        return best
 
-    def insert(self, q: Query, sketch: ProvenanceSketch) -> None:
-        self._entries.setdefault(_pred_key(q), []).append(IndexEntry(q, sketch))
+    def lookup(self, q: Query) -> Optional[ProvenanceSketch]:
+        e = self.lookup_entry(q)
+        return e.sketch if e is not None else None
+
+    def insert(self, q: Query, sketch: ProvenanceSketch,
+               maintainer: Optional[object] = None) -> None:
+        self._clock += 1
+        self._entries.setdefault(_pred_key(q), []).append(
+            IndexEntry(q, sketch, last_hit=self._clock, maintainer=maintainer))
 
     def entries(self) -> List[IndexEntry]:
         return [e for v in self._entries.values() for e in v]
 
     def prune(self, max_entries: int) -> int:
-        """Keep the ``max_entries`` most-used sketches; returns #evictions.
+        """Keep the ``max_entries`` most-recently-hit sketches; returns
+        #evictions (use count, then instance size, break recency ties).
 
-        Evicted sketches stop being served immediately.  Their materialized
+        Evicted sketches stop being served immediately; a later query that
+        needed one simply misses and re-captures.  Their materialized
         instances may survive in a ``Catalog`` until its bounded FIFO maps
         evict them (the catalog holds its own sketch references).
         """
         all_entries = self.entries()
         if len(all_entries) <= max_entries:
             return 0
-        all_entries.sort(key=lambda e: (e.uses, -e.sketch.size_rows), reverse=True)
+        all_entries.sort(key=lambda e: (e.last_hit, e.uses, -e.sketch.size_rows),
+                         reverse=True)
         keep = set(id(e) for e in all_entries[:max_entries])
         evicted = 0
         for k in list(self._entries):

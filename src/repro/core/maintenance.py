@@ -1,0 +1,369 @@
+"""Incremental maintenance of provenance sketches under appends/deletes.
+
+The engine's premise — a captured sketch keeps paying off across queries —
+breaks the moment a table mutates: without maintenance every insert or delete
+would silently invalidate every sketch, and the only recovery is a full
+re-capture (provenance recomputation over the whole table).  Following the
+counter-based scheme of "In-memory Incremental Maintenance of Provenance
+Sketches" (PAPERS.md), a ``SketchMaintainer`` keeps just enough per-sketch
+state to repair the bits with *delta-sized* work:
+
+  * the group dictionary of the captured query's GROUP BY (a private copy,
+    so catalog evictions cannot invalidate it),
+  * per-group aggregate state: float64 sums and int64 WHERE-passing counts,
+    updated from the delta rows alone,
+  * per-(group, fragment) incidence counters over WHERE-passing rows, and a
+    per-fragment provenance counter ``frag_prov`` — a bit is set iff its
+    counter is positive, so a delete clears a bit only when the count of
+    provenance rows in that fragment hits zero,
+  * the surviving-group vector, recomputed exactly from the maintained
+    aggregates via ``queries.provenance_group_keep`` — the *same* group-level
+    code a from-scratch capture runs, so maintained bits equal re-captured
+    bits whenever the aggregate arithmetic is exact (integer-valued columns
+    within float32 range; the differential tests pin this).
+
+Group flips (a group entering/leaving the HAVING-surviving set) touch only
+that group's incidence row.  For monotone-*unsafe* aggregates (AVG, or
+non-upward-monotone HAVING ops per ``safety.monotone_safe``) a flip to
+"not surviving" does NOT clear bits — the conservative keep-bit fallback —
+because a wrongly cleared bit would make the sketch unsafe, while a stale set
+bit merely skips less.  ``repair()`` re-derives ``frag_prov`` from the exact
+counters and restores bit-exactness.
+
+Join templates are maintained for mutations of the *fact* table (the delta
+batch is joined against the dimension table — delta-sized work); a mutated
+dimension table raises ``MaintenanceError`` and the engine falls back to
+re-capture.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.catalog import (
+    Catalog,
+    default_catalog,
+    extend_group_values,
+    join_rows,
+    map_group_keys,
+)
+from repro.core.queries import Query, provenance_group_keep
+from repro.core.ranges import RangeSet
+from repro.core.safety import monotone_safe
+from repro.core.sketch import ProvenanceSketch
+from repro.core.table import ColumnTable, Database, TableDelta
+
+
+class MaintenanceError(RuntimeError):
+    """Raised when a delta cannot be maintained; callers re-capture."""
+
+
+def _predicate_mask(q: Query, cols: Dict[str, np.ndarray], n: int) -> np.ndarray:
+    if q.where is None:
+        return np.ones(n, dtype=bool)
+    from repro.core.queries import _OPS
+
+    return np.asarray(_OPS[q.where.op](cols[q.where.attr], q.where.value))
+
+
+class SketchMaintainer:
+    """Delta-maintained state for one (query, range partition) sketch."""
+
+    def __init__(self, q: Query, db: Database, ranges: RangeSet,
+                 catalog: Optional[Catalog] = None):
+        if hasattr(ranges, "parts") or not hasattr(ranges, "attr"):
+            # Raised (not AttributeError'd later) so repair_sketch's re-capture
+            # fallback catches it.
+            raise MaintenanceError("only single-attribute RangeSet partitions "
+                                   "are maintainable; composite sketches re-capture")
+        catalog = catalog or default_catalog()
+        self.q = q
+        self.ranges = ranges
+        fact = db[q.table]
+        self.table_uid = fact.uid
+        self.version = fact.version
+        self.exact = monotone_safe(q, db, catalog)
+        self.conservative = False
+        self.right = db[q.join.right] if q.join is not None else None
+
+        if q.join is not None:
+            flat, fact_idx = catalog.join(fact, self.right, q.join.left_key,
+                                          q.join.right_key)
+        else:
+            flat, fact_idx = fact, None
+        enc = catalog.groups(flat, q.groupby)
+        bucket = np.asarray(catalog.bucketize(fact, ranges))
+        frag = bucket if fact_idx is None else bucket[fact_idx]
+        where = np.asarray(_predicate_mask(
+            q, {a: np.asarray(flat[a]) for a in ([q.where.attr] if q.where else [])},
+            flat.num_rows))
+        if q.agg.fn == "count":
+            values = np.ones(flat.num_rows, dtype=np.float64)
+            self._values_integral = True
+        else:
+            values = np.asarray(flat[q.agg.attr], dtype=np.float64)
+            self._values_integral = np.issubdtype(
+                np.dtype(flat[q.agg.attr].dtype), np.integer)
+
+        # Private copies: the maintainer must outlive catalog evictions.
+        self.n_groups = enc.n_groups
+        self.key_index: Dict[Tuple, int] = dict(enc.key_index(q.groupby))
+        self.group_values = {a: v.copy() for a, v in enc.group_values.items()}
+        self.sums = np.zeros(self.n_groups, dtype=np.float64)
+        np.add.at(self.sums, enc.gid[where], values[where])
+        self.counts = np.bincount(enc.gid[where], minlength=self.n_groups).astype(np.int64)
+        # incidence[g] = {fragment: count of WHERE-passing rows}.  Dict-of-dict
+        # so group flips touch one row; the build loop is over *deduped*
+        # (group, fragment) pairs, bounded by n_groups x n_fragments.
+        self.incidence: List[Dict[int, int]] = [dict() for _ in range(self.n_groups)]
+        pairs, cnts = np.unique(
+            np.stack([enc.gid[where], frag[where]], axis=1), axis=0, return_counts=True
+        ) if where.any() else (np.empty((0, 2), dtype=np.int64), np.empty(0, dtype=np.int64))
+        for (g, f), c in zip(pairs, cnts):
+            self.incidence[int(g)][int(f)] = int(c)
+        self.passing = provenance_group_keep(
+            q, self._agg_f32(), self.group_values, self.n_groups)
+        # counted[g]: g's incidence row is currently folded into frag_prov.
+        self.counted = self.passing.copy()
+        sel = self.counted[pairs[:, 0]] if len(pairs) else np.zeros(0, dtype=bool)
+        self.frag_prov = np.bincount(
+            pairs[sel, 1], weights=cnts[sel], minlength=ranges.n_ranges
+        ).astype(np.int64)
+
+    # -- group-aggregate bookkeeping ------------------------------------------
+    def _agg_f32(self) -> np.ndarray:
+        """Per-group aggregate values with the executor's float32 semantics."""
+        sums = self.sums.astype(np.float32)
+        counts = self.counts.astype(np.float32)
+        if self.q.agg.fn == "count":
+            return counts
+        if self.q.agg.fn == "sum":
+            return sums
+        return sums / np.maximum(counts, np.float32(1.0))
+
+    def _grow_groups(self, new_keys: np.ndarray, n_groups: int) -> None:
+        """Extend per-group state for freshly assigned gids (appends only)."""
+        n_new = n_groups - self.n_groups
+        if not n_new:
+            return
+        self.n_groups = n_groups
+        self.incidence.extend(dict() for _ in range(n_new))
+        self.sums = np.concatenate([self.sums, np.zeros(n_new)])
+        self.counts = np.concatenate([self.counts, np.zeros(n_new, dtype=np.int64)])
+        self.passing = np.concatenate([self.passing, np.zeros(n_new, dtype=bool)])
+        self.counted = np.concatenate([self.counted, np.zeros(n_new, dtype=bool)])
+        self.group_values = extend_group_values(self.group_values, self.q.groupby,
+                                                new_keys)
+
+    def _delta_products(
+        self, cols: Dict[str, np.ndarray], grow: bool
+    ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """(gid, where, values) for one delta batch's flat rows."""
+        n = len(next(iter(cols.values()))) if cols else 0
+        where = _predicate_mask(self.q, cols, n)
+        if self.q.agg.fn == "count":
+            values = np.ones(n, dtype=np.float64)
+        else:
+            values = np.asarray(cols[self.q.agg.attr], dtype=np.float64)
+        if not self.q.groupby:
+            return np.zeros(n, dtype=np.int64), where, values
+        stacked = np.stack([np.asarray(cols[a]) for a in self.q.groupby], axis=1)
+        try:
+            gid, new_keys, n_groups = map_group_keys(
+                stacked, self.key_index, self.n_groups, grow=grow)
+        except KeyError as e:  # pragma: no cover - state corruption guard
+            raise MaintenanceError(f"unknown group key in delta: {e}") from None
+        if grow:
+            self._grow_groups(new_keys, n_groups)
+        return gid, where, values
+
+    def _flat_delta_cols(self, batch: ColumnTable) -> Tuple[Dict[str, np.ndarray], np.ndarray]:
+        """Join-aware flat columns of a delta batch + its fact-side fragment ids.
+
+        Returns the flat (possibly joined) columns restricted to rows that
+        contribute (all rows without a join; matched rows with one) plus the
+        per-flat-row fragment id of the underlying *fact* row.
+        """
+        fact_frag = np.asarray(self.ranges.bucketize(np.asarray(batch[self.ranges.attr])))
+        if self.q.join is None:
+            return {a: np.asarray(batch[a]) for a in batch.schema}, fact_frag
+        cols, b_idx, _ = join_rows(
+            {a: np.asarray(batch[a]) for a in batch.schema},
+            self.right, self.q.join.left_key, self.q.join.right_key)
+        return {a: np.asarray(v) for a, v in cols.items()}, fact_frag[b_idx]
+
+    # -- delta application -----------------------------------------------------
+    def _update_rows(self, gid: np.ndarray, frag: np.ndarray, where: np.ndarray,
+                     values: np.ndarray, sign: int) -> None:
+        """Fold one batch of flat rows into the counters (sign=+1/-1)."""
+        g_w, f_w, v_w = gid[where], frag[where], values[where]
+        np.add.at(self.sums, g_w, sign * v_w)
+        np.add.at(self.counts, g_w, sign)
+        if g_w.size:
+            pairs, cnts = np.unique(np.stack([g_w, f_w], axis=1), axis=0,
+                                    return_counts=True)
+            for (g, f), c in zip(pairs, cnts):
+                g, f, c = int(g), int(f), int(c) * sign
+                row = self.incidence[g]
+                row[f] = row.get(f, 0) + c
+                if row[f] == 0:
+                    del row[f]
+                if self.counted[g]:
+                    self.frag_prov[f] += c
+
+    def _clears_trustworthy(self) -> bool:
+        """May a group flip to "not surviving" clear its fragments' bits?
+
+        Only when the maintained float64 aggregates provably reproduce the
+        executor's float32 kernel arithmetic bit-for-bit: monotone-safe query,
+        integer-valued aggregation column, and every sum the executor forms
+        staying under 2**24 (so each f32 partial sum of non-negative integers
+        is exactly representable).  Outside that envelope a clear could drop
+        rows of a group the executor still considers passing — an unsafe
+        subset sketch — so we keep bits instead (slack, never wrong).
+        """
+        if not (self.exact and self._values_integral):
+            return False
+        limit = 2.0 ** 24
+        if self.counts.size and float(self.counts.max()) >= limit:
+            return False
+        if self.q.agg.fn != "count" and self.sums.size \
+                and float(np.abs(self.sums).max()) >= limit:
+            return False
+        if self.q.outer_groupby is not None:
+            # Outer sums accumulate the inner values; bound their total.
+            inner_mag = self.counts if self.q.agg.fn == "count" else np.abs(self.sums)
+            if float(inner_mag.sum()) >= limit:
+                return False
+        return True
+
+    def _reconcile_passing(self) -> None:
+        """Recompute the surviving-group set and fold flips into frag_prov."""
+        passing = provenance_group_keep(
+            self.q, self._agg_f32(), self.group_values, self.n_groups)
+        trust_clears = self._clears_trustworthy()
+        for g in np.nonzero(passing != self.counted)[0]:
+            g = int(g)
+            if passing[g]:
+                for f, c in self.incidence[g].items():
+                    self.frag_prov[f] += c
+                self.counted[g] = True
+            elif trust_clears:
+                for f, c in self.incidence[g].items():
+                    self.frag_prov[f] -= c
+                self.counted[g] = False
+            else:
+                # Conservative keep-bit fallback: clearing on the word of a
+                # maintained (possibly rounding-divergent) aggregate could
+                # yield an unsafe subset sketch; a stale bit is merely slack.
+                self.conservative = True
+        self.passing = passing
+
+    def _apply_one(self, delta: TableDelta) -> None:
+        if delta.kind == "append":
+            cols, frag = self._flat_delta_cols(delta.appended)
+            gid, where, values = self._delta_products(cols, grow=True)
+            self._update_rows(gid, frag, where, values, +1)
+        else:
+            parent = delta.parent
+            idx = delta.deleted_idx
+            batch = ColumnTable(parent.name, {
+                a: np.asarray(parent[a])[idx] for a in parent.schema})
+            cols, frag = self._flat_delta_cols(batch)
+            gid, where, values = self._delta_products(cols, grow=False)
+            self._update_rows(gid, frag, where, values, -1)
+        self._reconcile_passing()
+
+    def apply(self, table: ColumnTable, db: Database) -> None:
+        """Advance the maintained state to ``table``'s version via its deltas."""
+        if table.uid != self.table_uid:
+            raise MaintenanceError(
+                f"table lineage changed (uid {table.uid} != {self.table_uid})")
+        if self.q.join is not None and db[self.q.join.right] is not self.right:
+            raise MaintenanceError("join dimension table mutated; re-capture")
+        chain: List[TableDelta] = []
+        t = table
+        while t.version > self.version:
+            if t.delta is None:
+                raise MaintenanceError(
+                    f"no delta chain from v{self.version} to v{t.version}")
+            chain.append(t.delta)
+            t = t.delta.parent
+        for delta in reversed(chain):
+            self._apply_one(delta)
+        self.version = table.version
+
+    # -- products --------------------------------------------------------------
+    def repair(self) -> None:
+        """Re-derive frag_prov exactly from the counters (drops conservatism)."""
+        for g in np.nonzero(self.counted & ~self.passing)[0]:
+            g = int(g)
+            for f, c in self.incidence[g].items():
+                self.frag_prov[f] -= c
+            self.counted[g] = False
+        self.conservative = False
+
+    def bits(self) -> np.ndarray:
+        return self.frag_prov > 0
+
+    def to_sketch(self, table: ColumnTable,
+                  catalog: Optional[Catalog] = None) -> ProvenanceSketch:
+        """Materialize the maintained state as a sketch for ``table``."""
+        if table.version != self.version or table.uid != self.table_uid:
+            raise MaintenanceError("maintainer not at the table's version")
+        catalog = catalog or default_catalog()
+        bits = self.bits()
+        sizes = catalog.fragment_sizes(table, self.ranges)
+        return ProvenanceSketch(
+            table=self.q.table, ranges=self.ranges, bits=bits,
+            size_rows=int(sizes[bits].sum()), total_rows=table.num_rows,
+            table_uid=table.uid, table_version=table.version,
+        )
+
+
+def build_maintainer(q: Query, db: Database, ranges: RangeSet,
+                     catalog: Optional[Catalog] = None) -> SketchMaintainer:
+    """Build maintenance state for a just-captured sketch (cached products)."""
+    return SketchMaintainer(q, db, ranges, catalog)
+
+
+@dataclasses.dataclass
+class RepairResult:
+    sketch: ProvenanceSketch
+    maintained: bool  # False => fell back to full re-capture
+
+
+def repair_sketch(
+    q: Query,
+    db: Database,
+    sketch: ProvenanceSketch,
+    maintainer: Optional[SketchMaintainer],
+    catalog: Optional[Catalog] = None,
+) -> Tuple[RepairResult, Optional[SketchMaintainer]]:
+    """Bring a stale sketch up to the current table version.
+
+    Tries delta maintenance first; on any ``MaintenanceError`` falls back to a
+    full re-capture (and rebuilds the maintainer so the *next* mutation is
+    cheap again).  ``q`` must be the query the sketch was captured for.
+    """
+    from repro.core.sketch import capture_sketch
+
+    catalog = catalog or default_catalog()
+    table = db[q.table]
+    try:
+        if maintainer is None:
+            raise MaintenanceError("no maintainer")
+        maintainer.apply(table, db)
+        sk = maintainer.to_sketch(table, catalog)
+        catalog.stats["sketch_maintained"] += 1
+        return RepairResult(sk, True), maintainer
+    except MaintenanceError:
+        sk = capture_sketch(q, db, sketch.ranges, catalog=catalog)
+        catalog.stats["sketch_recaptured"] += 1
+        try:
+            maintainer = build_maintainer(q, db, sketch.ranges, catalog)
+        except Exception:  # pragma: no cover - maintainer is best-effort
+            maintainer = None
+        return RepairResult(sk, False), maintainer

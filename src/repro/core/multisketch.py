@@ -23,6 +23,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.catalog import Catalog, default_catalog
 from repro.core.queries import Query, QueryResult, execute, provenance_mask
 from repro.core.ranges import RangeSet, equi_depth_ranges
 from repro.core.table import ColumnTable, Database
@@ -55,6 +56,10 @@ class CompositeRanges:
             bucket = b if bucket is None else bucket * r.n_ranges + b
         return bucket
 
+    def key(self) -> Tuple:
+        """Hashable identity, catalog-compatible with ``RangeSet.key``."""
+        return ("composite",) + tuple(r.key() for r in self.parts)
+
 
 @dataclasses.dataclass(frozen=True)
 class CompositeSketch:
@@ -81,37 +86,50 @@ def composite_ranges(
 def capture_composite(
     q: Query, db: Database, ranges: CompositeRanges,
     prov: Optional[np.ndarray] = None,
+    catalog: Optional[Catalog] = None,
 ) -> CompositeSketch:
+    """Capture over a composite partition, through the catalog's caches.
+
+    The composite bucketization and fragment sizes are cached exactly like
+    single-attribute ones (``CompositeRanges.key`` is catalog-compatible), so
+    repeated captures/applications over the same partition pay the
+    cross-product bucketize once — the fused-path parity the single-attribute
+    strategies already have.
+    """
+    catalog = catalog or default_catalog()
     table = db[q.table]
     if prov is None:
-        prov = provenance_mask(q, db)
-    bucket = ranges.bucketize(table)
+        prov = provenance_mask(q, db, catalog=catalog)
+    bucket = catalog.bucketize(table, ranges)
     hits = jax.ops.segment_max(
         jnp.asarray(prov).astype(jnp.int32), bucket, num_segments=ranges.n_ranges
     )
     bits = np.asarray(hits > 0)
-    # int32 explicitly: jnp.ones_like with int64 silently truncates to int32
-    # under the default x64-disabled config and warns; counts fit int32.
-    sizes = np.asarray(
-        jax.ops.segment_sum(
-            jnp.ones_like(bucket, dtype=jnp.int32), bucket, num_segments=ranges.n_ranges
-        )
-    )
+    sizes = catalog.fragment_sizes(table, ranges)
     return CompositeSketch(
         table=q.table, ranges=ranges, bits=bits,
         size_rows=int(sizes[bits].sum()), total_rows=table.num_rows,
     )
 
 
-def apply_composite(sketch: CompositeSketch, db: Database) -> Database:
+def apply_composite(
+    sketch: CompositeSketch, db: Database, catalog: Optional[Catalog] = None
+) -> Database:
+    catalog = catalog or default_catalog()
     table = db[sketch.table]
-    bucket = sketch.ranges.bucketize(table)
-    keep = jnp.asarray(sketch.bits)[bucket]
-    return db.with_table(table.select(keep))
+    instance = catalog.get_instance(sketch, table)
+    if instance is None:
+        bucket = catalog.bucketize(table, sketch.ranges)
+        keep = jnp.asarray(sketch.bits)[bucket]
+        instance = table.select(keep)
+        catalog.put_instance(sketch, table, instance)
+    return db.with_table(instance)
 
 
-def execute_with_composite(q: Query, db: Database, sk: CompositeSketch) -> QueryResult:
-    return execute(q, apply_composite(sk, db))
+def execute_with_composite(
+    q: Query, db: Database, sk: CompositeSketch, catalog: Optional[Catalog] = None
+) -> QueryResult:
+    return execute(q, apply_composite(sk, db, catalog=catalog), catalog=catalog)
 
 
 def select_composite_gb(
@@ -121,6 +139,7 @@ def select_composite_gb(
     n_ranges: int,
     theta: float = 0.05,
     max_pair_candidates: int = 3,
+    catalog: Optional[Catalog] = None,
 ) -> Tuple[Tuple[str, ...], "CompositeRanges", Dict[Tuple[str, ...], float]]:
     """CB-OPT-GB2: cost-based choice over GB singles and GB pairs.
 
@@ -132,6 +151,7 @@ def select_composite_gb(
     from repro.aqp.sampling import stratified_reservoir_sample
     from repro.aqp.size_estimation import approximate_query_result
 
+    catalog = catalog or default_catalog()
     fact = db[q.table]
     gb = [a for a in q.groupby if fact.has(a)]
     samples = stratified_reservoir_sample(key, fact, tuple(gb), theta)
@@ -151,7 +171,7 @@ def select_composite_gb(
             b = np.asarray(r.bucketize(jnp.asarray(gv)))
             frag = b if frag is None else frag * r.n_ranges + b
         sat_frags = np.unique(frag[np.nonzero(satisfied)[0]])
-        bucket = np.asarray(cr.bucketize(fact))
+        bucket = np.asarray(catalog.bucketize(fact, cr))
         sizes[attrs] = float(np.isin(bucket, sat_frags).sum()) / total
 
     best = min(sizes, key=sizes.get)

@@ -324,9 +324,23 @@ def _result_from_inner(q: Query, ib: InnerBlock) -> QueryResult:
     )
 
 
-def _provenance_from_inner(q: Query, ib: InnerBlock, n_fact_rows: int) -> np.ndarray:
-    agg_np = ib.agg_np
-    inner_keep = np.ones(ib.n_groups, dtype=bool)
+def provenance_group_keep(
+    q: Query,
+    agg_np: np.ndarray,
+    group_values: Dict[str, np.ndarray],
+    n_groups: int,
+) -> np.ndarray:
+    """Which (inner) groups survive the HAVING chain, per-group-state only.
+
+    This is the group-level half of provenance derivation, factored out so the
+    incremental maintenance path (``repro.core.maintenance``) can replay it
+    bit-for-bit from *maintained* per-group aggregates: given equal ``agg_np``
+    and group key values, the surviving-group set — and hence the sketch bits
+    — matches a from-scratch capture exactly.  Group *numbering* may differ
+    between callers; the outer block re-keys on group values, so the result
+    is numbering-covariant.
+    """
+    inner_keep = np.ones(n_groups, dtype=bool)
     if q.having is not None:
         inner_keep &= np.asarray(q.having.mask(agg_np))
 
@@ -334,7 +348,7 @@ def _provenance_from_inner(q: Query, ib: InnerBlock, n_fact_rows: int) -> np.nda
         inner_idx = np.nonzero(inner_keep)[0]
         if inner_idx.shape[0]:
             stacked = np.stack(
-                [ib.group_values[a][inner_idx] for a in q.outer_groupby], axis=1
+                [group_values[a][inner_idx] for a in q.outer_groupby], axis=1
             )
             uniq, ogid = np.unique(stacked, axis=0, return_inverse=True)
             outer_vals = np.asarray(
@@ -348,12 +362,16 @@ def _provenance_from_inner(q: Query, ib: InnerBlock, n_fact_rows: int) -> np.nda
             outer_keep = np.ones(uniq.shape[0], dtype=bool)
             if q.outer_having is not None:
                 outer_keep &= np.asarray(q.outer_having.mask(outer_vals))
-            surviving_inner = np.zeros(ib.n_groups, dtype=bool)
+            surviving_inner = np.zeros(n_groups, dtype=bool)
             surviving_inner[inner_idx] = outer_keep[ogid]
             inner_keep = surviving_inner
         else:
-            inner_keep = np.zeros(ib.n_groups, dtype=bool)
+            inner_keep = np.zeros(n_groups, dtype=bool)
+    return inner_keep
 
+
+def _provenance_from_inner(q: Query, ib: InnerBlock, n_fact_rows: int) -> np.ndarray:
+    inner_keep = provenance_group_keep(q, ib.agg_np, ib.group_values, ib.n_groups)
     row_keep = inner_keep[ib.gid] & ib.where_np
     if ib.fact_idx is None:
         return row_keep

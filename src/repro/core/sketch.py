@@ -34,13 +34,24 @@ Array = jax.Array
 
 @dataclasses.dataclass(frozen=True)
 class ProvenanceSketch:
-    """An accurate sketch: table + attribute + ranges + membership bits."""
+    """An accurate sketch: table + attribute + ranges + membership bits.
+
+    ``table_uid`` / ``table_version`` record which version of the relation the
+    bits describe; a mismatch against the live table is the engine's signal to
+    repair the sketch through ``repro.core.maintenance`` instead of trusting
+    (or re-capturing) it.
+    """
 
     table: str
     ranges: RangeSet
     bits: np.ndarray  # bool, shape (n_ranges,)
     size_rows: int  # |R_P| — rows covered by the sketch instance
     total_rows: int  # |R|
+    table_uid: int = 0
+    table_version: int = 0
+
+    def current_for(self, table: ColumnTable) -> bool:
+        return self.table_uid == table.uid and self.table_version == table.version
 
     @property
     def attr(self) -> str:
@@ -96,6 +107,8 @@ def capture_sketch(
         bits=bits.astype(bool),
         size_rows=size_rows,
         total_rows=table.num_rows,
+        table_uid=table.uid,
+        table_version=table.version,
     )
 
 
@@ -123,9 +136,23 @@ def _build_instance(
     Clustered tables on the sketch's own partition skip fragments by slicing;
     everything else falls back to the per-row keep-mask kernel.
     """
-    if table.layout is not None and table.layout.matches(sketch.ranges):
+    lay = table.layout
+    if lay is not None and lay.matches(sketch.ranges):
         catalog.stats["instance_slices"] += 1
-        return table.take_fragments(np.nonzero(sketch.bits)[0])
+        frag_ids = np.nonzero(sketch.bits)[0]
+        if lay.tail == 0:
+            return table.take_fragments(frag_ids)
+        # Appended rows live in the layout's unsorted tail: concatenate the
+        # surviving prefix slices, then filter just the tail rows by their
+        # (delta-refreshed) bucket ids — per-row work stays delta-sized.
+        n = table.num_rows
+        off = lay.offsets
+        head = [np.arange(off[f], off[f + 1]) for f in frag_ids]
+        tail_rows = np.arange(n - lay.tail, n)
+        tail_bucket = np.asarray(catalog.bucketize(table, sketch.ranges))[n - lay.tail:]
+        head.append(tail_rows[sketch.bits[tail_bucket]])
+        idx = np.concatenate(head) if head else np.empty(0, dtype=np.int64)
+        return table.gather(jnp.asarray(idx))
     catalog.stats["instance_mask"] += 1
     mask = sketch_keep_mask(sketch, table, catalog=catalog)
     return table.select(mask)

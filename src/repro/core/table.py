@@ -9,6 +9,7 @@ skipping maps to "do not issue the HBM->VMEM copy for this tile".
 from __future__ import annotations
 
 import dataclasses
+import itertools
 from typing import Dict, Iterable, Mapping, Optional, Sequence, Tuple
 
 import jax
@@ -16,6 +17,12 @@ import jax.numpy as jnp
 import numpy as np
 
 Array = jax.Array
+
+# Monotone lineage ids: every freshly created relation gets a new uid; append/
+# delete/cluster_by preserve it while bumping (or keeping) the version token,
+# so caches and sketch maintainers can tell "same relation, newer contents"
+# apart from "a different relation entirely".
+_TABLE_UIDS = itertools.count(1)
 
 
 @dataclasses.dataclass(frozen=True, eq=False)
@@ -27,11 +34,17 @@ class FragmentLayout:
     on the same partition degenerates to concatenating the surviving slices —
     no per-row filter scan.  Identity-hashed (``eq=False``) so it can ride in
     pytree aux data.
+
+    ``tail`` is the number of trailing rows *not* covered by ``offsets``:
+    appends land in an unsorted tail region so a batch insert does not force
+    a physical re-cluster.  Sketch application then concatenates the prefix
+    slices and filters only the tail rows (delta-sized work).
     """
 
     attr: str
     ranges_key: Tuple
     offsets: np.ndarray  # (n_fragments + 1,) row offsets, offsets[0] == 0
+    tail: int = 0
 
     @property
     def n_fragments(self) -> int:
@@ -39,6 +52,30 @@ class FragmentLayout:
 
     def matches(self, ranges) -> bool:
         return self.attr == ranges.attr and self.ranges_key == ranges.key()
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class TableDelta:
+    """One append/delete step linking a table version to its parent.
+
+    The delta is what makes incremental maintenance possible: catalog caches
+    refresh themselves from the parent entry plus the delta (no full-table
+    re-encode / re-bucketize), and ``repro.core.maintenance`` re-ORs sketch
+    bits only for touched fragments.  ``parent`` is a strong reference so
+    id()-keyed parent cache entries stay valid while the delta is reachable.
+    """
+
+    kind: str  # 'append' | 'delete'
+    parent: "ColumnTable"
+    appended: Optional["ColumnTable"] = None  # kind='append': the new rows
+    deleted_idx: Optional[np.ndarray] = None  # kind='delete': parent rows removed
+    kept_idx: Optional[np.ndarray] = None  # kind='delete': parent rows kept
+
+    @property
+    def n_delta(self) -> int:
+        if self.kind == "append":
+            return self.appended.num_rows
+        return int(self.deleted_idx.shape[0])
 
 
 @jax.tree_util.register_pytree_node_class
@@ -51,26 +88,39 @@ class ColumnTable:
       columns: mapping attribute -> 1-D array; all columns share length.
       primary_key: attribute names forming the primary key (may be empty).
       layout: fragment-major physical layout, set by ``cluster_by`` (row-
-        reordering operations drop it).
+        reordering operations drop it; appends push rows into its tail).
+      version: monotone per-lineage version token, bumped by append/delete.
+      uid: lineage identity — preserved by append/delete/cluster_by, fresh
+        for any other derived table (gather/select/head/...).
+      delta: the append/delete step that produced this version (None for a
+        root table); the hook for incremental catalog refresh + maintenance.
     """
 
     name: str
     columns: Dict[str, Array]
     primary_key: Tuple[str, ...] = ()
     layout: Optional[FragmentLayout] = None
+    version: int = 0
+    uid: int = 0
+    delta: Optional[TableDelta] = None
+
+    def __post_init__(self):
+        if self.uid == 0:
+            object.__setattr__(self, "uid", next(_TABLE_UIDS))
 
     # -- pytree protocol -----------------------------------------------------
     def tree_flatten(self):
         keys = tuple(sorted(self.columns))
         children = tuple(self.columns[k] for k in keys)
-        aux = (self.name, keys, self.primary_key, self.layout)
+        aux = (self.name, keys, self.primary_key, self.layout, self.version,
+               self.uid, self.delta)
         return children, aux
 
     @classmethod
     def tree_unflatten(cls, aux, children):
-        name, keys, pk, layout = aux
+        name, keys, pk, layout, version, uid, delta = aux
         return cls(name=name, columns=dict(zip(keys, children)), primary_key=pk,
-                   layout=layout)
+                   layout=layout, version=version, uid=uid, delta=delta)
 
     # -- basic accessors -----------------------------------------------------
     @property
@@ -128,12 +178,23 @@ class ColumnTable:
         offsets = np.concatenate([[0], np.cumsum(counts)]).astype(np.int64)
         clustered = self.gather(jnp.asarray(order))
         layout = FragmentLayout(attr=ranges.attr, ranges_key=ranges.key(), offsets=offsets)
-        return ColumnTable(self.name, clustered.columns, self.primary_key, layout)
+        # Same relation contents, physically permuted: lineage and version
+        # survive (sketch/maintainer state is permutation-invariant) but the
+        # delta chain does not — parent row positions no longer line up.
+        return ColumnTable(self.name, clustered.columns, self.primary_key, layout,
+                           version=self.version, uid=self.uid)
 
     def take_fragments(self, frag_ids: np.ndarray) -> "ColumnTable":
-        """Concatenate the given fragments' contiguous slices (clustered only)."""
+        """Concatenate the given fragments' contiguous slices (clustered only).
+
+        Tables with appended tail rows need the tail filtered by bucket id,
+        which requires a bucketization — see ``sketch._build_instance``.
+        """
         if self.layout is None:
             raise ValueError(f"{self.name}: take_fragments needs a clustered table")
+        if self.layout.tail:
+            raise ValueError(f"{self.name}: layout has an unsorted tail of "
+                             f"{self.layout.tail} appended rows")
         off = self.layout.offsets
         frag_ids = np.asarray(frag_ids)
         if frag_ids.size:
@@ -141,6 +202,96 @@ class ColumnTable:
         else:
             idx = np.empty(0, dtype=np.int64)
         return self.gather(jnp.asarray(idx))
+
+    # -- mutations (delta-aware) ----------------------------------------------
+    def delta_depth(self) -> int:
+        """Length of the delta chain behind this version."""
+        depth, t = 0, self
+        while t.delta is not None:
+            depth += 1
+            t = t.delta.parent
+        return depth
+
+    def collapse(self) -> "ColumnTable":
+        """Drop the delta history: same contents, version and lineage, no
+        parent references.  Bounds memory — every prior version's columns are
+        pinned by the chain — at the cost of one full-cache rebuild for
+        consumers that would have delta-refreshed (see
+        ``PBDSEngine.max_delta_chain``)."""
+        if self.delta is None:
+            return self
+        return ColumnTable(self.name, self.columns, self.primary_key, self.layout,
+                           version=self.version, uid=self.uid)
+
+    def append(self, rows: Mapping[str, np.ndarray]) -> "ColumnTable":
+        """Append a batch of rows, producing the next table version.
+
+        The new version carries a ``TableDelta`` so catalog entries and
+        provenance sketches refresh from the batch alone.  A fragment-major
+        layout survives: the batch lands in the layout's unsorted ``tail``
+        region rather than forcing a physical re-cluster.
+        """
+        if set(rows) != set(self.columns):
+            raise ValueError(
+                f"append schema mismatch: {sorted(rows)} vs {sorted(self.columns)}")
+        batch = {}
+        for k, v in rows.items():
+            src = np.asarray(v)
+            dst = src.astype(self.columns[k].dtype)
+            # Reject lossy coercion at the mutation boundary: silently
+            # truncated/wrapped values would flow through every maintained
+            # aggregate undetectably.
+            if not np.array_equal(dst.astype(np.float64), src.astype(np.float64),
+                                  equal_nan=True):
+                raise ValueError(
+                    f"append column {k!r}: lossy cast {src.dtype} -> "
+                    f"{self.columns[k].dtype}")
+            batch[k] = jnp.asarray(dst)
+        lengths = {int(v.shape[0]) for v in batch.values()}
+        if len(lengths) != 1:
+            raise ValueError(f"ragged append batch: { {k: int(v.shape[0]) for k, v in batch.items()} }")
+        n_new = lengths.pop()
+        appended = ColumnTable(self.name, batch, self.primary_key)
+        cols = {k: jnp.concatenate([self.columns[k], batch[k]]) for k in self.columns}
+        layout = (dataclasses.replace(self.layout, tail=self.layout.tail + n_new)
+                  if self.layout is not None else None)
+        return ColumnTable(
+            self.name, cols, self.primary_key, layout,
+            version=self.version + 1, uid=self.uid,
+            delta=TableDelta(kind="append", parent=self, appended=appended),
+        )
+
+    def delete(self, mask: np.ndarray) -> "ColumnTable":
+        """Delete the rows where ``mask`` is True, producing the next version.
+
+        Compaction preserves relative row order, so a fragment-major layout
+        survives with shrunk offsets (per-fragment deletion counts follow from
+        the offsets themselves — no re-bucketization).
+        """
+        mask = np.asarray(mask, dtype=bool)
+        if mask.shape[0] != self.num_rows:
+            raise ValueError(f"delete mask length {mask.shape[0]} != {self.num_rows} rows")
+        deleted_idx = np.nonzero(mask)[0]
+        kept_idx = np.nonzero(~mask)[0]
+        cols = {k: jnp.take(v, jnp.asarray(kept_idx), axis=0) for k, v in self.columns.items()}
+        layout = None
+        if self.layout is not None:
+            lay = self.layout
+            prefix_len = self.num_rows - lay.tail
+            del_prefix = deleted_idx[deleted_idx < prefix_len]
+            frag_of_deleted = np.searchsorted(lay.offsets, del_prefix, side="right") - 1
+            counts = np.diff(lay.offsets) - np.bincount(
+                frag_of_deleted, minlength=lay.n_fragments)
+            offsets = np.concatenate([[0], np.cumsum(counts)]).astype(np.int64)
+            tail = lay.tail - int((deleted_idx >= prefix_len).sum())
+            layout = FragmentLayout(attr=lay.attr, ranges_key=lay.ranges_key,
+                                    offsets=offsets, tail=tail)
+        return ColumnTable(
+            self.name, cols, self.primary_key, layout,
+            version=self.version + 1, uid=self.uid,
+            delta=TableDelta(kind="delete", parent=self,
+                             deleted_idx=deleted_idx, kept_idx=kept_idx),
+        )
 
     def head(self, n: int) -> "ColumnTable":
         return ColumnTable(

@@ -1,0 +1,106 @@
+"""SketchIndex storage policy: subsumption retrieval and recency pruning."""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    Aggregate,
+    Database,
+    Having,
+    Predicate,
+    Query,
+    RangeSet,
+    SketchIndex,
+    execute,
+    subsumes,
+)
+from repro.core.datasets import make_crimes
+from repro.core.engine import PBDSEngine
+from repro.core.sketch import ProvenanceSketch
+
+
+def _q(gb=("a",), tau=10.0, op=">", where=None):
+    return Query("t", gb, Aggregate("sum", "v"), having=Having(op, tau), where=where)
+
+
+def _sk(size_rows=10):
+    return ProvenanceSketch("t", RangeSet("a", np.array([1.0, 2.0])),
+                           bits=np.array([True, False, True]),
+                           size_rows=size_rows, total_rows=100)
+
+
+def test_subsumes_threshold_domination():
+    q1 = _q(tau=10.0)
+    assert subsumes(q1, _q(tau=10.0))
+    assert subsumes(q1, _q(tau=25.0))  # stricter HAVING => less provenance
+    assert not subsumes(q1, _q(tau=5.0))  # q2 needs rows q1's sketch may skip
+    # >= with the same threshold asks for at least as much provenance as >.
+    assert subsumes(_q(tau=10.0, op=">="), _q(tau=10.0))
+
+
+def test_subsumes_requires_matching_structure():
+    q1 = _q()
+    assert not subsumes(q1, _q(gb=("b",)))
+    assert not subsumes(q1, _q(where=Predicate("b", ">", 0.0)))
+    assert not subsumes(_q(where=Predicate("b", ">", 0.0)),
+                        _q(where=Predicate("b", ">", 1.0)))
+    # Non-monotone HAVING ops only subsume on exact equality.
+    assert subsumes(_q(op="<", tau=3.0), _q(op="<", tau=3.0))
+    assert not subsumes(_q(op="<", tau=3.0), _q(op="<", tau=4.0))
+
+
+def test_lookup_prefers_smallest_subsuming_sketch():
+    idx = SketchIndex()
+    idx.insert(_q(tau=10.0), _sk(size_rows=50))
+    idx.insert(_q(tau=12.0), _sk(size_rows=20))
+    e = idx.lookup_entry(_q(tau=30.0))
+    assert e is not None and e.sketch.size_rows == 20
+    assert idx.hits == 1 and idx.misses == 0
+
+
+def test_prune_keeps_most_recently_hit_entries():
+    idx = SketchIndex()
+    queries = [_q(gb=gb, tau=5.0) for gb in (("a",), ("b",), ("c",), ("d",))]
+    for q in queries:
+        idx.insert(q, _sk())
+    # Hit them in a known order: c, then a (a is most recent).
+    assert idx.lookup(queries[2]) is not None
+    assert idx.lookup(queries[0]) is not None
+    evicted = idx.prune(2)
+    assert evicted == 2 and len(idx) == 2
+    kept = {e.query.groupby for e in idx.entries()}
+    assert kept == {("a",), ("c",)}
+    # The never-hit entries are gone; lookups for them now miss.
+    assert idx.lookup(queries[1]) is None
+    assert idx.lookup(queries[3]) is None
+
+
+def test_prune_noop_under_capacity():
+    idx = SketchIndex()
+    idx.insert(_q(), _sk())
+    assert idx.prune(5) == 0 and len(idx) == 1
+
+
+def test_subsumed_query_reuses_wider_sketch_and_pruned_entry_recaptures():
+    """End-to-end: a subsumed query reuses the stored (wider) sketch; after a
+    prune evicts it, the next run re-captures cleanly and stays exact."""
+    db = Database({"crimes": make_crimes(15_000, seed=21)})
+    base = Query("crimes", ("district", "year"), Aggregate("sum", "records"))
+    sums = execute(base, db).values
+    q_wide = dataclasses.replace(base, having=Having(">", float(np.quantile(sums, 0.7))))
+    q_narrow = dataclasses.replace(base, having=Having(">", float(np.quantile(sums, 0.9))))
+
+    eng = PBDSEngine(db, strategy="CB-OPT-GB", n_ranges=50, theta=0.1, seed=0,
+                     min_selectivity_gain=2.0)
+    _, info = eng.run(q_wide)
+    assert info.created
+    res, info = eng.run(q_narrow)
+    assert info.reused  # subsumed by the wider sketch, never captured
+    assert res.canonical() == execute(q_narrow, db).canonical()
+    assert len(eng.index) == 1
+
+    assert eng.index.prune(0) == 1 and len(eng.index) == 0
+    res2, info2 = eng.run(q_narrow)
+    assert info2.created and not info2.reused
+    assert res2.canonical() == execute(q_narrow, db).canonical()

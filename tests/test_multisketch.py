@@ -1,9 +1,21 @@
 """Composite (multi-attribute) sketches — the beyond-paper extension."""
+import dataclasses
+
 import jax
 import numpy as np
 import pytest
 
-from repro.core import Aggregate, Database, Having, Query, capture_sketch, equi_depth_ranges, execute
+from repro.core import (
+    Aggregate,
+    Catalog,
+    Database,
+    Having,
+    Query,
+    capture_sketch,
+    equi_depth_ranges,
+    execute,
+    execute_with_sketch,
+)
 from repro.core.datasets import make_crimes
 from repro.core.multisketch import (
     CompositeRanges,
@@ -55,6 +67,50 @@ def test_composite_bucketize_is_cross_product(db):
     b0 = np.asarray(cr.parts[0].bucketize(db["crimes"]["district"]))
     b1 = np.asarray(cr.parts[1].bucketize(db["crimes"]["year"]))
     np.testing.assert_array_equal(b, b0 * cr.parts[1].n_ranges + b1)
+
+
+def test_composite_parity_with_single_attribute_path(db):
+    """On a 2-attribute workload every query answered through the composite
+    path matches both the single-attribute sketch path and NO-PS execution."""
+    base = Query("crimes", ("district", "year"), Aggregate("sum", "records"))
+    sums = execute(base, db).values
+    wl = [dataclasses.replace(base, having=Having(">", float(np.quantile(sums, qt))))
+          for qt in (0.5, 0.75, 0.9)]
+    wl.append(Query("crimes", ("district", "year"), Aggregate("count", None),
+                    having=Having(">", float(np.quantile(
+                        execute(Query("crimes", ("district", "year"),
+                                      Aggregate("count", None)), db).values, 0.8)))))
+    cat = Catalog()
+    cr = composite_ranges(db["crimes"], ("district", "year"), 100)
+    for q in wl:
+        want = execute(q, db).canonical()
+        comp = capture_composite(q, db, cr, catalog=cat)
+        assert execute_with_composite(q, db, comp, catalog=cat).canonical() == want
+        for attr in ("district", "year"):
+            single = capture_sketch(
+                q, db, equi_depth_ranges(db["crimes"], attr, 100), catalog=cat)
+            assert execute_with_sketch(q, db, single, catalog=cat).canonical() == want
+
+
+def test_composite_path_goes_through_catalog(db, q):
+    """Repeated composite capture/application over one partition reuses the
+    catalog's bucketization, fragment sizes, and sketch instance."""
+    cat = Catalog()
+    cr = composite_ranges(db["crimes"], ("district", "year"), 64)
+    sk = capture_composite(q, db, cr, catalog=cat)
+    execute_with_composite(q, db, sk, catalog=cat)
+    stats1 = dict(cat.stats)
+    assert stats1.get("bucketize", 0) >= 1  # composite bucket built once
+    sk2 = capture_composite(q, db, cr, catalog=cat)
+    execute_with_composite(q, db, sk2, catalog=cat)
+    execute_with_composite(q, db, sk, catalog=cat)
+    stats2 = dict(cat.stats)
+    # No new full bucketize / fragment-size passes; instances reused.
+    assert stats2.get("bucketize", 0) == stats1.get("bucketize", 0)
+    assert stats2.get("fragment_sizes", 0) == stats1.get("fragment_sizes", 0)
+    assert stats2.get("bucketize_hit", 0) > stats1.get("bucketize_hit", 0)
+    assert stats2.get("instance_hit", 0) > stats1.get("instance_hit", 0)
+    np.testing.assert_array_equal(sk.bits, sk2.bits)
 
 
 def test_cb_opt_gb2_selects_reasonably(db, q):

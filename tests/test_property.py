@@ -7,6 +7,10 @@
   3. Size estimation is bounded by the table size and the Frechet interval
      is ordered.
   4. Index subsumption never returns an unsafe sketch.
+  5. MAINTENANCE: across any append/delete sequence, maintained sketch bits
+     are a superset-or-equal of the re-capture oracle's; equal outright for
+     monotone-safe aggregates; and equal for every aggregate after
+     ``repair()``.  Shrinks on the (ops-sequence, attr) pair.
 """
 import dataclasses
 
@@ -22,8 +26,9 @@ from hypothesis import strategies as st
 from repro.aqp.sampling import stratified_reservoir_sample
 from repro.aqp.size_estimation import estimate_size
 from repro.core import (
-    Aggregate, Database, Having, Query, capture_sketch, equi_depth_ranges,
-    execute, execute_with_sketch, provenance_mask, subsumes,
+    Aggregate, Catalog, Database, Having, Query, build_maintainer,
+    capture_sketch, equi_depth_ranges, execute, execute_with_sketch,
+    monotone_safe, provenance_mask, subsumes,
 )
 from repro.core.table import from_numpy
 
@@ -96,6 +101,76 @@ def test_size_estimate_bounded(tq):
     assert 0.0 <= est.est_selectivity <= 1.0
     assert est.lo_rows <= est.hi_rows + 1e-6
     assert est.expected_rows <= est.hi_rows + 1e-6
+
+
+def _mut_table(rng, n, ncat):
+    return dict(
+        a=rng.integers(0, ncat, n).astype(np.int32),
+        b=rng.integers(0, ncat * 3, n).astype(np.int32),
+        v=rng.integers(0, 60, n).astype(np.int32),  # non-negative, f32-exact
+    )
+
+
+@st.composite
+def maintenance_scenario(draw):
+    """(initial table, query, sketch attr, ranges, ops) — shrinks on the
+    (ops-sequence, attr) pair."""
+    seed = draw(st.integers(min_value=0, max_value=2**31 - 1))
+    rng = np.random.default_rng(seed)
+    n = draw(st.integers(min_value=40, max_value=250))
+    ncat = draw(st.integers(min_value=2, max_value=10))
+    fn = draw(st.sampled_from(["sum", "count", "avg"]))
+    tau = draw(st.floats(min_value=1.0, max_value=400.0))
+    q = Query("t", ("a",), Aggregate(fn, None if fn == "count" else "v"),
+              having=Having(">", tau))
+    # AVG is only safe on group-by attributes; sum/count are safe everywhere
+    # here (non-negative v, upward-monotone HAVING).
+    attr = draw(st.sampled_from(["a"] if fn == "avg" else ["a", "b"]))
+    n_ranges = draw(st.integers(min_value=2, max_value=12))
+    ops = draw(st.lists(
+        st.one_of(
+            st.tuples(st.just("append"), st.integers(1, 80)),
+            st.tuples(st.just("delete"), st.integers(2, 9)),
+        ),
+        min_size=1, max_size=6))
+    return _mut_table(rng, n, ncat), q, attr, n_ranges, ops, seed, ncat
+
+
+@given(maintenance_scenario())
+@settings(**SETTINGS)
+def test_maintained_bits_superset_and_exact_after_repair(scenario):
+    cols, q, attr, n_ranges, ops, seed, ncat = scenario
+    rng = np.random.default_rng(seed + 1)
+    t = from_numpy("t", cols)
+    db = Database({"t": t})
+    ranges = equi_depth_ranges(t, attr, n_ranges)
+    cat = Catalog()
+    safe = monotone_safe(q, db, cat)
+    m = build_maintainer(q, db, ranges, cat)
+
+    for kind, arg in ops:
+        if kind == "append":
+            batch = _mut_table(rng, arg, ncat)
+            t = t.append(batch)
+            cols = {k: np.concatenate([cols[k], batch[k]]) for k in cols}
+        else:
+            mask = np.asarray(t["b"]) % arg == 0
+            if mask.all():
+                continue
+            t = t.delete(mask)
+            keep = ~(cols["b"] % arg == 0)
+            cols = {k: v[keep] for k, v in cols.items()}
+        db = Database({"t": t})
+        m.apply(t, db)
+
+        oracle = capture_sketch(q, Database({"t": from_numpy("t", cols)}), ranges,
+                                catalog=Catalog())
+        got = m.bits()
+        assert (got | oracle.bits == got).all(), "maintained bits lost coverage"
+        if safe:
+            np.testing.assert_array_equal(got, oracle.bits)
+        m.repair()
+        np.testing.assert_array_equal(m.bits(), oracle.bits)
 
 
 @given(table_and_query(), st.floats(min_value=0.0, max_value=300.0))
