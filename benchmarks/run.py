@@ -4,8 +4,9 @@
 
 Emits CSV per benchmark.  ``--json`` additionally writes ``BENCH_fig9.json``
 (per-strategy t_select/t_capture/t_execute + reused-exec means and the
-speedup over ``benchmarks/seed_fig9_baseline.json``) so successive PRs have
-a perf trajectory to compare against.  The dry-run/roofline artifacts are
+speedup over ``benchmarks/seed_fig9_baseline.json``), ``BENCH_maintenance.json``
+and ``BENCH_shard.json`` so successive PRs have a perf trajectory to compare
+against.  The dry-run/roofline artifacts are
 produced by ``repro.launch.dryrun`` + ``benchmarks.roofline`` (they need the
 512-device XLA flag and hence their own process).
 """
@@ -37,6 +38,7 @@ def main() -> None:
         bench_fig8_accuracy,
         bench_fig9_endtoend,
         bench_maintenance,
+        bench_shard,
         bench_table1,
     )
 
@@ -53,6 +55,10 @@ def main() -> None:
         "maintenance": functools.partial(
             bench_maintenance.run,
             json_path="BENCH_maintenance.json" if args.json else None,
+        ),
+        "shard": functools.partial(
+            bench_shard.run,
+            json_path="BENCH_shard.json" if args.json else None,
         ),
     }
     failed = []

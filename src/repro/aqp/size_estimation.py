@@ -146,13 +146,24 @@ def _sample_incidence(
     satisfied: np.ndarray,
     catalog: "Optional[Catalog]" = None,
 ) -> Tuple[np.ndarray, np.ndarray]:
-    """(frag_id, gid) incidence pairs from the *sample* rows of G'."""
+    """(frag_id, gid) incidence pairs from the *sample* rows of G'.
+
+    Handles single-attribute ``RangeSet`` and cross-product ``CompositeRanges``
+    partitions alike: when every partition attribute is a group-by attribute
+    the group key pins the (composite) fragment exactly — the CB-OPT-GB /
+    CB-OPT-GB2 fast path.
+    """
     catalog = _catalog(catalog)
     fact = db[q.table]
-    if ranges.attr in samples.groupby:
-        # CB-OPT-GB fast path: the group key pins the fragment — exact.
-        gvals = samples.group_values[ranges.attr]
-        frag_of_group = np.asarray(ranges.bucketize(jnp.asarray(gvals)))
+    parts = getattr(ranges, "parts", (ranges,))
+    if all(r.attr in samples.groupby for r in parts):
+        # GB fast path: the group key pins the fragment — exact.  For a
+        # composite partition the row-major cross-product id is assembled
+        # from the per-attribute group-value buckets.
+        frag_of_group = None
+        for r in parts:
+            b = np.asarray(r.bucketize(jnp.asarray(samples.group_values[r.attr])))
+            frag_of_group = b if frag_of_group is None else frag_of_group * r.n_ranges + b
         gids = np.nonzero(satisfied)[0]
         return frag_of_group[gids], gids
     row_sat = satisfied[samples.sample_gid]
@@ -166,7 +177,11 @@ def _sample_incidence(
     if bucket is not None:
         frag = np.asarray(bucket)[rows]
     else:
-        frag = np.asarray(ranges.bucketize(fact[ranges.attr][jnp.asarray(rows)]))
+        frag = None
+        take = jnp.asarray(rows)
+        for r in parts:
+            b = np.asarray(r.bucketize(fact[r.attr][take]))
+            frag = b if frag is None else frag * r.n_ranges + b
     pairs = np.unique(np.stack([frag, gids], axis=1), axis=0)
     return pairs[:, 0], pairs[:, 1]
 
@@ -260,6 +275,10 @@ def estimate_size_batched(
     table both delta-refresh (prior per-fragment counts plus a batch-sized
     pass), so candidate selection after a mutation never re-bucketizes the
     whole relation.
+
+    Candidates may mix single-attribute ``RangeSet``s and cross-product
+    ``CompositeRanges`` (CB-OPT-GB2's pair candidates); the mapping key is an
+    opaque label echoed back in the result dict.
     """
     catalog = _catalog(catalog)
     if not ranges_by_attr:
@@ -363,7 +382,7 @@ def estimate_size(
 
     total = max(db[q.table].num_rows, 1)
     return SizeEstimate(
-        attr=ranges.attr,
+        attr=getattr(ranges, "attr", None) or getattr(ranges, "attrs", None),
         est_rows=est_rows,
         est_selectivity=est_rows / total,
         expected_rows=expected,

@@ -47,6 +47,13 @@ from repro.core.table import (
     encode_groups,
     from_numpy,
 )
+from repro.core.shard import (
+    FragmentShard,
+    RouteInfo,
+    ShardPlan,
+    ShardedEngine,
+    plan_fragments,
+)
 
 __all__ = [
     "Catalog", "default_catalog",
@@ -62,4 +69,5 @@ __all__ = [
     "ALL_STRATEGIES", "COST_STRATEGIES", "RANDOM_STRATEGIES",
     "SelectionResult", "candidate_pool", "select_attribute",
     "ColumnTable", "Database", "FragmentLayout", "encode_groups", "from_numpy",
+    "FragmentShard", "RouteInfo", "ShardPlan", "ShardedEngine", "plan_fragments",
 ]

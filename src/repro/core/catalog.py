@@ -192,6 +192,7 @@ class Catalog:
         self._instances: Dict[Tuple[int, int], Tuple[object, ColumnTable, ColumnTable]] = {}
         self._distinct: Dict[Tuple[int, str], Tuple[ColumnTable, int, np.ndarray]] = {}
         self._nonneg: Dict[Tuple[int, str], Tuple[ColumnTable, bool]] = {}
+        self._wheres: Dict[Tuple[int, Tuple], Tuple[ColumnTable, Array]] = {}
 
     def clear(self) -> None:
         self.__init__(max_entries=self.max_entries)
@@ -208,13 +209,25 @@ class Catalog:
         again but would otherwise pin the old columns until evicted."""
         tid = id(table)
         for cache in (self._groups, self._buckets, self._frag_sizes,
-                      self._distinct, self._nonneg):
+                      self._distinct, self._nonneg, self._wheres):
             for k in [k for k in cache if k[0] == tid]:
                 del cache[k]
         for k in [k for k in self._joins if tid in (k[0], k[1])]:
             del self._joins[k]
         for k in [k for k in self._instances if k[1] == tid]:
             del self._instances[k]
+
+    def invalidate_chain(self, table: ColumnTable) -> None:
+        """Invalidate ``table`` and every ancestor on its delta chain.
+
+        The companion of ``ColumnTable.collapse``: id()-keyed entries hold
+        strong table references, so without this the collapsed chain (every
+        prior version's columns) would stay pinned until FIFO eviction.
+        """
+        t = table
+        while t is not None:
+            self.invalidate_table(t)
+            t = t.delta.parent if t.delta is not None else None
 
     # -- group-by dictionary encodings --------------------------------------
     def groups(self, table: ColumnTable, attrs: Tuple[str, ...]) -> GroupEncoding:
@@ -325,6 +338,38 @@ class Catalog:
         )
         self._put(self._frag_sizes, key, (table, sizes))
         return sizes
+
+    # -- predicate-pushdown WHERE masks --------------------------------------
+    def where_mask(self, table: ColumnTable, pred) -> Array:
+        """The row mask of ``pred`` over ``table``, cached per (table version,
+        predicate).
+
+        ``pred`` is a ``queries.Predicate`` (duck-typed here — importing it
+        would cycle).  Keys use object identity for the table (each version is
+        a distinct object) plus the predicate's value tuple, and a miss on a
+        delta-carrying version refreshes from the parent's mask: appends
+        evaluate the predicate on the batch alone, deletes gather the kept
+        rows — never a full-table re-evaluation.
+        """
+        key = (id(table), (pred.attr, pred.op, pred.value))
+        hit = self._wheres.get(key)
+        if hit is not None and hit[0] is table:
+            self.stats["where_mask_hit"] += 1
+            return hit[1]
+        d = table.delta
+        if d is not None:
+            parent_mask = self.where_mask(d.parent, pred)
+            if d.kind == "append":
+                mask = jnp.concatenate([parent_mask, pred.mask(d.appended)])
+            else:
+                mask = jnp.take(parent_mask, jnp.asarray(d.kept_idx), axis=0)
+            self.stats["where_mask_delta"] += 1
+            self._put(self._wheres, key, (table, mask))
+            return mask
+        self.stats["where_mask"] += 1
+        mask = pred.mask(table)
+        self._put(self._wheres, key, (table, mask))
+        return mask
 
     # -- join layouts ---------------------------------------------------------
     def join(

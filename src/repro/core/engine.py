@@ -52,6 +52,11 @@ class RunInfo:
     # (incrementally maintained, or re-captured when maintenance refused —
     # catalog.stats['sketch_maintained'/'sketch_recaptured'] tell them apart).
     repaired: bool = False
+    # Fragment-sharded serving (``repro.core.shard``): how many shards were
+    # sent work vs skipped because the sketch touched none of their
+    # fragments.  ``None`` for single-node execution.
+    shards_contacted: Optional[int] = None
+    shards_skipped: Optional[int] = None
 
     @property
     def t_total(self) -> float:
@@ -70,6 +75,7 @@ class PBDSEngine:
         min_selectivity_gain: float = 0.9,
         cluster_tables: bool = False,
         max_delta_chain: int = 64,
+        compact_tail_frac: Optional[float] = None,
     ):
         self.db = db
         self.strategy = strategy
@@ -88,6 +94,12 @@ class PBDSEngine:
         # Sketches estimated to cover >= this fraction of the table are not
         # worth creating (problem definition (i) in Sec. 4.5).
         self.min_selectivity_gain = min_selectivity_gain
+        # When set, a clustered table whose unsorted append tail exceeds this
+        # fraction of its rows is physically compacted (tail folded back into
+        # fragment-major order) so sketch application returns to pure slice
+        # concatenation.  Off by default: compaction is a full-table permute
+        # and drops row-position caches, the same trade as cluster_by.
+        self.compact_tail_frac = compact_tail_frac
 
     def _next_key(self) -> jax.Array:
         self._key, k = jax.random.split(self._key)
@@ -122,6 +134,34 @@ class PBDSEngine:
         self.db = self.db.with_table(self.db[table_name].append(rows))
         self.catalog.stats["table_append"] += 1
         self._bound_history(table_name)
+        self._maybe_compact(table_name)
+
+    def _maybe_compact(self, table_name: str) -> None:
+        """Fold an oversized unsorted tail back into fragment-major order.
+
+        Maintainer state is permutation-invariant so index entries survive,
+        but every maintainer must be advanced first: compaction drops the
+        delta chain, so a lagging maintainer could no longer catch up.
+        """
+        table = self.db[table_name]
+        lay = table.layout
+        if (self.compact_tail_frac is None or lay is None or
+                lay.tail <= self.compact_tail_frac * max(table.num_rows, 1)):
+            return
+        from repro.core.maintenance import MaintenanceError
+
+        for e in self.index.entries():
+            if e.query.table != table_name or e.maintainer is None:
+                continue
+            try:
+                e.maintainer.apply(table, self.db)
+                e.sketch = e.maintainer.to_sketch(table, self.catalog)
+            except MaintenanceError:
+                e.maintainer = None
+        self.db = self.db.with_table(table.compact())
+        self.catalog.invalidate_chain(table)
+        self.samples.invalidate(table_name)
+        self.catalog.stats["compact"] += 1
 
     def delete_rows(self, table_name: str, mask: np.ndarray) -> None:
         """Delete the masked rows; sketches repair lazily on their next hit."""
@@ -149,13 +189,9 @@ class PBDSEngine:
             except MaintenanceError:
                 e.maintainer = None  # next hit re-captures
         self.db = self.db.with_table(table.collapse())
-        # Drop every chain version's catalog entries and cached samples: the
-        # id()-keyed entries hold strong refs, so without this the collapsed
-        # chain (every prior version's columns) would stay pinned anyway.
-        t = table
-        while t is not None:
-            self.catalog.invalidate_table(t)
-            t = t.delta.parent if t.delta is not None else None
+        # Drop every chain version's catalog entries and cached samples so the
+        # collapsed chain's columns can actually be freed.
+        self.catalog.invalidate_chain(table)
         self.samples.invalidate(table_name)
         self.catalog.stats["history_collapse"] += 1
 

@@ -47,6 +47,11 @@ def subsumes(q1: Query, q2: Query) -> bool:
             return dataclasses.astuple(h1) == dataclasses.astuple(h2)
         if h2.value < h1.value:  # q2 asks for *more* provenance than q1 saw
             return False
+        # Equal thresholds with mixed ops: `agg >= tau` admits the boundary
+        # groups (agg == tau) that `agg > tau` excluded, so a `>`-captured
+        # sketch lacks their provenance — q2 must strictly dominate.
+        if h2.value == h1.value and h1.op == ">" and h2.op == ">=":
+            return False
     return True
 
 
@@ -104,6 +109,19 @@ class SketchIndex:
 
     def entries(self) -> List[IndexEntry]:
         return [e for v in self._entries.values() for e in v]
+
+    def remove(self, entry: IndexEntry) -> bool:
+        """Evict one entry by identity (e.g. its join dimension mutated and
+        the sketch can no longer be repaired); returns True when found."""
+        k = _pred_key(entry.query)
+        kept = [e for e in self._entries.get(k, []) if e is not entry]
+        if len(kept) == len(self._entries.get(k, [])):
+            return False
+        if kept:
+            self._entries[k] = kept
+        else:
+            self._entries.pop(k, None)
+        return True
 
     def prune(self, max_entries: int) -> int:
         """Keep the ``max_entries`` most-recently-hit sketches; returns

@@ -143,36 +143,34 @@ def select_composite_gb(
 ) -> Tuple[Tuple[str, ...], "CompositeRanges", Dict[Tuple[str, ...], float]]:
     """CB-OPT-GB2: cost-based choice over GB singles and GB pairs.
 
-    Uses the shared AQR pass (the estimates are candidate-independent) and
-    the GB fast path for incidence: for composite GB candidates the group
-    key pins the composite fragment exactly, so estimation stays exact given
-    the satisfied-group set.
+    One shared AQR pass, then every candidate — singles and composite pairs
+    alike — goes through ``estimate_size_batched``'s single vmapped
+    fragment-incidence pass.  For GB candidates the group key pins the
+    (composite) fragment exactly, so the estimated size equals the exact
+    per-candidate computation given the satisfied-group set — without the
+    per-candidate full-table membership scan the previous loop paid.
     """
     from repro.aqp.sampling import stratified_reservoir_sample
-    from repro.aqp.size_estimation import approximate_query_result
+    from repro.aqp.size_estimation import (
+        approximate_query_result,
+        estimate_size_batched,
+    )
 
     catalog = catalog or default_catalog()
     fact = db[q.table]
     gb = [a for a in q.groupby if fact.has(a)]
     samples = stratified_reservoir_sample(key, fact, tuple(gb), theta)
-    est, satisfied = approximate_query_result(key, q, db, samples)
-    sizes: Dict[Tuple[str, ...], float] = {}
+    aqr = approximate_query_result(key, q, db, samples)
 
     cands: List[Tuple[str, ...]] = [(a,) for a in gb]
     cands += [tuple(sorted(p)) for p in itertools.combinations(gb, 2)][:max_pair_candidates]
+    ranges_by = {attrs: composite_ranges(fact, attrs, n_ranges) for attrs in cands}
 
     total = max(fact.num_rows, 1)
-    for attrs in cands:
-        cr = composite_ranges(fact, attrs, n_ranges)
-        # GB fast path: satisfied groups' key values pin their fragment.
-        gvals = [np.asarray(samples.group_values[a]) for a in attrs]
-        frag = None
-        for r, gv in zip(cr.parts, gvals):
-            b = np.asarray(r.bucketize(jnp.asarray(gv)))
-            frag = b if frag is None else frag * r.n_ranges + b
-        sat_frags = np.unique(frag[np.nonzero(satisfied)[0]])
-        bucket = np.asarray(catalog.bucketize(fact, cr))
-        sizes[attrs] = float(np.isin(bucket, sat_frags).sum()) / total
+    ests = estimate_size_batched(key, q, db, ranges_by, samples,
+                                 aqr=aqr, catalog=catalog)
+    sizes: Dict[Tuple[str, ...], float] = {
+        attrs: ests[attrs].est_rows / total for attrs in cands}
 
     best = min(sizes, key=sizes.get)
     return best, composite_ranges(fact, best, n_ranges), sizes

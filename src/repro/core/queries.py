@@ -248,6 +248,33 @@ class InnerBlock:
     where_np: np.ndarray
 
 
+def inner_group_partials(
+    q: Query, flat: ColumnTable, catalog: Catalog
+):
+    """WHERE mask + group encoding + fused per-group sums/counts over one
+    (already joined) flat table.
+
+    The shared prefix of inner-block evaluation: single-node execution feeds
+    it the full flat table, the fragment-sharded path (``repro.core.shard``)
+    feeds it a shard-local sketch instance — keeping the aggregation
+    semantics (mask source, value selection, kernel dispatch) in one place is
+    what makes routed partials mergeable into bit-identical results.
+    Returns ``(enc, where_mask, sums, counts)``.
+    """
+    where_mask = (
+        catalog.where_mask(flat, q.where)
+        if q.where is not None
+        else jnp.ones(flat.num_rows, dtype=bool)
+    )
+    enc = catalog.groups(flat, q.groupby)
+    if q.agg.fn == "count":
+        vals = jnp.ones(flat.num_rows, dtype=jnp.float32)
+    else:
+        vals = flat[q.agg.attr]
+    sums, counts = segment_sums_counts(vals, enc.gid_dev, enc.n_groups, weights=where_mask)
+    return enc, where_mask, sums, counts
+
+
 def _inner_block(db: Database, q: Query, catalog: Optional[Catalog] = None) -> InnerBlock:
     """Evaluate the inner block once; one fused segment pass yields both the
     aggregate values and group presence."""
@@ -256,15 +283,7 @@ def _inner_block(db: Database, q: Query, catalog: Optional[Catalog] = None) -> I
         flat, fact_idx = materialize_join(db, q, catalog)
     else:
         flat, fact_idx = db[q.table], None
-    where_mask = (
-        q.where.mask(flat) if q.where is not None else jnp.ones(flat.num_rows, dtype=bool)
-    )
-    enc = catalog.groups(flat, q.groupby)
-    if q.agg.fn == "count":
-        vals = jnp.ones(flat.num_rows, dtype=jnp.float32)
-    else:
-        vals = flat[q.agg.attr]
-    sums, counts = segment_sums_counts(vals, enc.gid_dev, enc.n_groups, weights=where_mask)
+    enc, where_mask, sums, counts = inner_group_partials(q, flat, catalog)
     agg = _finalize_aggregate(q.agg.fn, sums, counts)
     counts_np = np.asarray(counts)
     return InnerBlock(
@@ -280,27 +299,37 @@ def _inner_block(db: Database, q: Query, catalog: Optional[Catalog] = None) -> I
     )
 
 
-def _result_from_inner(q: Query, ib: InnerBlock) -> QueryResult:
-    agg_np = ib.agg_np
+def result_from_group_state(
+    q: Query,
+    group_values: Dict[str, np.ndarray],
+    agg_np: np.ndarray,
+    present: np.ndarray,
+) -> QueryResult:
+    """Finish a query from per-group state alone (HAVING chain + outer block).
 
+    This is the group-level tail of the executor, factored out so the
+    fragment-sharded coordinator (``repro.core.shard``) can run it over
+    *merged* per-shard partial aggregates: given equal per-group values and
+    presence, the result matches single-node execution exactly.
+    """
     if q.outer_groupby is None:
-        keep = ib.present.copy()
+        keep = present.copy()
         if q.having is not None:
             keep &= np.asarray(q.having.mask(agg_np))
         idx = np.nonzero(keep)[0]
         return QueryResult(
-            group_values={a: v[idx] for a, v in ib.group_values.items()},
+            group_values={a: v[idx] for a, v in group_values.items()},
             values=agg_np[idx],
         )
 
     # Nested templates: inner HAVING filters inner groups, then the outer
     # block aggregates result1 over outer_groupby (subset of inner groupby).
-    inner_keep = ib.present.copy()
+    inner_keep = present.copy()
     if q.having is not None:
         inner_keep &= np.asarray(q.having.mask(agg_np))
     inner_idx = np.nonzero(inner_keep)[0]
     inner_vals = agg_np[inner_idx]
-    inner_gv = {a: v[inner_idx] for a, v in ib.group_values.items()}
+    inner_gv = {a: v[inner_idx] for a, v in group_values.items()}
 
     stacked = np.stack([inner_gv[a] for a in q.outer_groupby], axis=1)
     if stacked.shape[0] == 0:
@@ -322,6 +351,10 @@ def _result_from_inner(q: Query, ib: InnerBlock) -> QueryResult:
         group_values={a: uniq[:, i][idx] for i, a in enumerate(q.outer_groupby)},
         values=outer_np[idx],
     )
+
+
+def _result_from_inner(q: Query, ib: InnerBlock) -> QueryResult:
+    return result_from_group_state(q, ib.group_values, ib.agg_np, ib.present)
 
 
 def provenance_group_keep(

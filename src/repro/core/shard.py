@@ -1,0 +1,650 @@
+"""Fragment-sharded serving: place fragments across shards, route sketches.
+
+The paper's payoff is that a captured sketch makes subsequent queries nearly
+free by skipping non-provenance fragments.  Fragments are therefore the
+natural unit of horizontal scale-out: a clustered ``ColumnTable``'s fragments
+are placed across S shards (host-emulated shard objects by default, pinned to
+a ``jax`` device mesh when one exists — see ``repro.parallel.placement``), and
+a reused sketch is routed as a *fragment-id set* to only the shards owning set
+bits.  Each contacted shard evaluates the inner block over its local sketch
+instance and returns per-group partial aggregates (sums + WHERE-passing
+counts); the coordinator merges them by group key and finishes the query with
+the same group-level code single-node execution uses
+(``queries.result_from_group_state``), so routed results match single-node
+results exactly whenever the aggregate arithmetic is exact (integer-valued
+columns within float32 range — the same envelope the maintenance subsystem
+pins, see ``SketchMaintainer._clears_trustworthy``).
+
+Replication is delta-based, not state-based: ``append_rows``/``delete_rows``
+are coordinator operations that route each batch by fragment ownership and
+*ship* per-shard deltas into shard inboxes.  Shards advance independently —
+each applies its pending deltas and advances its per-sketch maintainers the
+next time it is read — and cross-shard reads gate on a minimum version
+watermark (every contacted shard must have drained up to the coordinator's
+mutation count) instead of a global lock.  Per-shard ``SketchMaintainer``s
+behind one logical index entry keep the sketch's bits current shard-locally
+whenever every group is shard-local (the placement attribute is part of the
+(outer) GROUP BY, so a group's rows share one fragment and one owner); the
+logical bits are then the OR of the shard bits.  For group-spanning queries
+the HAVING chain needs global aggregates, so the coordinator's own maintainer
+repairs the logical sketch (still delta-sized) and shards serve only the
+routed partial aggregation.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import time
+from typing import Deque, Dict, List, Mapping, Optional, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.catalog import Catalog
+from repro.core.engine import PBDSEngine, RunInfo
+from repro.core.index import IndexEntry
+from repro.core.maintenance import MaintenanceError, SketchMaintainer
+from repro.core.queries import (
+    Query,
+    QueryResult,
+    inner_group_partials,
+    result_from_group_state,
+)
+from repro.core.ranges import RangeSet, equi_depth_ranges
+from repro.core.table import ColumnTable, Database, FragmentLayout
+from repro.parallel.placement import place_table, shard_devices
+
+
+# ---------------------------------------------------------------------------
+# Placement
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardPlan:
+    """Fragment -> shard ownership map for one range partition."""
+
+    n_shards: int
+    owner: np.ndarray  # (n_fragments,) shard id per fragment
+
+    def fragments_of(self, shard_id: int) -> np.ndarray:
+        return np.nonzero(self.owner == shard_id)[0]
+
+    def shards_for(self, frag_ids: np.ndarray) -> np.ndarray:
+        """The distinct shards owning any of ``frag_ids`` — the route set."""
+        return np.unique(self.owner[np.asarray(frag_ids)])
+
+
+def plan_fragments(
+    sizes: np.ndarray, n_shards: int, policy: str = "contig"
+) -> ShardPlan:
+    """Place fragments on shards.
+
+    ``contig`` (default) cuts the fragment sequence into row-balanced
+    contiguous runs, preserving range locality — a selective sketch's bits
+    are usually clustered in value space, so contiguous ownership maximizes
+    fully-skipped shards.  ``spread`` round-robins fragments, trading
+    locality for uniform load under adversarial (striped) sketches.
+    """
+    sizes = np.asarray(sizes, dtype=np.float64)
+    n_frags = sizes.shape[0]
+    owner = np.zeros(n_frags, dtype=np.int64)
+    if policy == "spread":
+        owner = np.arange(n_frags, dtype=np.int64) % n_shards
+    elif policy == "contig":
+        per = sizes.sum() / max(n_shards, 1)
+        s, load = 0, 0.0
+        for f in range(n_frags):
+            if s < n_shards - 1 and load >= per:
+                s, load = s + 1, 0.0
+            owner[f] = s
+            load += sizes[f]
+    else:
+        raise ValueError(f"unknown placement policy {policy!r}")
+    return ShardPlan(n_shards=n_shards, owner=owner)
+
+
+# ---------------------------------------------------------------------------
+# One shard
+# ---------------------------------------------------------------------------
+
+
+class FragmentShard:
+    """One shard: its owned fragments' rows, catalog, and sketch maintainers.
+
+    The local table is clustered over the *owned* fragments (local fragment j
+    is the j-th owned global fragment, ascending), with appended rows landing
+    in the layout's unsorted tail exactly like a single-node clustered table.
+    Deltas arrive through ``ship`` into an inbox and are applied lazily by
+    ``catch_up`` — the emulation of asynchronous replication.
+    """
+
+    MAX_DELTA_CHAIN = 16
+
+    def __init__(
+        self,
+        shard_id: int,
+        plan: ShardPlan,
+        ranges: RangeSet,
+        clustered: ColumnTable,
+        dims: Mapping[str, ColumnTable],
+        device=None,
+    ):
+        if clustered.layout is None or clustered.layout.tail:
+            raise ValueError("shards are built from a tail-free clustered table")
+        self.shard_id = shard_id
+        self.ranges = ranges
+        self.owned = plan.fragments_of(shard_id)
+        # global fragment id -> local fragment position (-1 = not owned).
+        self._local_of_global = np.full(ranges.n_ranges, -1, dtype=np.int64)
+        self._local_of_global[self.owned] = np.arange(self.owned.shape[0])
+
+        off = clustered.layout.offsets
+        parts = [np.arange(off[f], off[f + 1]) for f in self.owned]
+        idx = np.concatenate(parts) if parts else np.empty(0, dtype=np.int64)
+        local = clustered.gather(jnp.asarray(idx))
+        local_sizes = np.array([off[f + 1] - off[f] for f in self.owned],
+                               dtype=np.int64)
+        layout = FragmentLayout(
+            attr=ranges.attr,
+            # Never collides with a RangeSet.key(): local fragment ids are a
+            # different coordinate system from the global partition's.
+            ranges_key=("shard", shard_id, ranges.key()),
+            offsets=np.concatenate([[0], np.cumsum(local_sizes)]).astype(np.int64),
+        )
+        self.device = device
+        self.table = place_table(
+            ColumnTable(local.name, local.columns, clustered.primary_key, layout),
+            device)
+        self.dims: Dict[str, ColumnTable] = {
+            k: place_table(v, device) for k, v in dims.items()}
+        self.catalog = Catalog()
+        self.maintainers: Dict[int, SketchMaintainer] = {}
+        self._inst: Dict[int, Tuple[Tuple, ColumnTable]] = {}
+        self._inbox: Deque[Tuple[str, object]] = collections.deque()
+
+    # -- replication -----------------------------------------------------------
+    @property
+    def version(self) -> int:
+        """Local watermark: how many fact-table deltas have been applied."""
+        return self.table.version
+
+    @property
+    def lag(self) -> int:
+        return len(self._inbox)
+
+    def ship(self, kind: str, payload) -> None:
+        """Enqueue one delta (``append`` row batch / ``delete`` local mask)."""
+        self._inbox.append((kind, payload))
+
+    def update_dim(self, table: ColumnTable) -> None:
+        """Replace a replicated dimension table (applied eagerly — dimension
+        mutations are rare and invalidate join maintainers wholesale)."""
+        old = self.dims.get(table.name)
+        if old is not None:
+            self.catalog.invalidate_table(old)
+        self.dims[table.name] = place_table(table, self.device)
+        for key in [k for k, m in self.maintainers.items()
+                    if m.q.join is not None and m.q.join.right == table.name]:
+            del self.maintainers[key]
+
+    def _db(self) -> Database:
+        tables = dict(self.dims)
+        tables[self.table.name] = self.table
+        return Database(tables)
+
+    def catch_up(self, watermark: int) -> int:
+        """Drain pending deltas up to ``watermark``; advance maintainers.
+
+        Returns the number of deltas applied.  Work is delta-sized: the
+        table grows/shrinks by the batch, maintainers re-count only the
+        batch rows, and catalog entries refresh through the delta chain.
+        A maintainer that cannot advance (e.g. its dimension table was
+        replaced mid-chain) is dropped; the coordinator re-registers it
+        from scratch on the next read that needs it.
+        """
+        applied = 0
+        while self.table.version < watermark and self._inbox:
+            kind, payload = self._inbox.popleft()
+            if kind == "append":
+                self.table = self.table.append(payload)
+            elif kind == "delete":
+                self.table = self.table.delete(payload)
+            else:  # pragma: no cover - defensive
+                raise ValueError(f"unknown delta kind {kind!r}")
+            applied += 1
+        if applied:
+            db = self._db()
+            for key, m in list(self.maintainers.items()):
+                try:
+                    m.apply(self.table, db)
+                except MaintenanceError:
+                    del self.maintainers[key]
+            self._inst.clear()
+        if self.table.delta_depth() > self.MAX_DELTA_CHAIN:
+            self.catalog.invalidate_chain(self.table)
+            self.table = self.table.collapse()
+        return applied
+
+    # -- sketch registration ---------------------------------------------------
+    def register(self, key: int, q: Query, ranges: RangeSet) -> None:
+        """Build this shard's maintainer for one logical index entry.
+
+        The shard must be at the coordinator's watermark (the maintainer
+        counts the *current* local rows).
+        """
+        self.maintainers[key] = SketchMaintainer(q, self._db(), ranges,
+                                                 self.catalog)
+
+    def unregister(self, key: int) -> None:
+        self.maintainers.pop(key, None)
+        self._inst.pop(key, None)
+
+    def bits_for(self, key: int) -> Optional[np.ndarray]:
+        """This shard's maintained sketch bits (global fragment ids), or
+        ``None`` when the maintainer was lost and needs re-registration."""
+        m = self.maintainers.get(key)
+        return m.bits() if m is not None else None
+
+    # -- query serving ---------------------------------------------------------
+    def _instance(self, key: int, ranges: RangeSet, bits: np.ndarray) -> ColumnTable:
+        """The local sketch instance: owned ∩ sketch fragments (+ tail filter).
+
+        When the sketch's partition is the serving partition this is pure
+        slice concatenation over the local fragment-major layout; any other
+        partition falls back to the per-row keep-mask over local rows.
+        """
+        token = (id(self.table), bits.tobytes())
+        cached = self._inst.get(key)
+        if cached is not None and cached[0] == token:
+            self.catalog.stats["instance_hit"] += 1
+            return cached[1]
+        lay = self.table.layout
+        if ranges.key() == self.ranges.key():
+            local_ids = np.nonzero(bits[self.owned])[0]
+            tail_bucket = None
+            if lay.tail:
+                gfrag = np.asarray(self.catalog.bucketize(self.table, self.ranges))
+                tail_bucket = self._local_of_global[
+                    gfrag[self.table.num_rows - lay.tail:]]
+                if tail_bucket.size and tail_bucket.min() < 0:
+                    # A tail row bucketized to a fragment this shard does not
+                    # own: routing and bucketization disagree — corruption.
+                    raise RuntimeError(
+                        f"shard {self.shard_id}: mis-routed tail rows "
+                        f"(fragments {np.unique(gfrag[self.table.num_rows - lay.tail:][tail_bucket < 0])})")
+            inst = self.table.take_fragments(local_ids, tail_bucket=tail_bucket)
+            self.catalog.stats["instance_slices"] += 1
+        else:
+            bucket = self.catalog.bucketize(self.table, ranges)
+            inst = self.table.select(jnp.asarray(bits)[bucket])
+            self.catalog.stats["instance_mask"] += 1
+        self._inst[key] = (token, inst)
+        return inst
+
+    def partial(
+        self, q: Query, key: int, ranges: RangeSet, bits: np.ndarray
+    ) -> Tuple[Dict[str, np.ndarray], np.ndarray, np.ndarray]:
+        """Per-group partial aggregates of the inner block over the local
+        sketch instance: ``(group key values, sums, WHERE-passing counts)``.
+
+        Group ids are shard-local; the coordinator re-keys on the group
+        *values* when merging, so numbering never has to be coordinated.
+        """
+        inst = self._instance(key, ranges, bits)
+        if q.join is not None:
+            flat, _ = self.catalog.join(
+                inst, self.dims[q.join.right], q.join.left_key, q.join.right_key)
+        else:
+            flat = inst
+        enc, _, sums, counts = inner_group_partials(q, flat, self.catalog)
+        return enc.group_values, np.asarray(sums), np.asarray(counts)
+
+
+# ---------------------------------------------------------------------------
+# Coordinator
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class _Registered:
+    """Routed-serving state for one logical index entry.
+
+    ``group_local`` selects the bits source: per-shard maintainers when every
+    group is shard-local, the coordinator's maintainer otherwise.  ``entry``
+    is a strong reference: registration state is keyed by ``id(entry)``, so
+    the entry must stay alive while registered or a recycled id could alias
+    a new entry onto stale shard state.
+    """
+
+    entry: IndexEntry
+    ranges: RangeSet
+    group_local: bool
+
+
+@dataclasses.dataclass
+class RouteInfo:
+    """Bookkeeping of one routed (reused-sketch) execution."""
+
+    contacted: int
+    skipped: int
+    watermark: int
+    deltas_applied: int
+    per_shard_s: Dict[int, float]
+    t_merge_s: float
+
+    @property
+    def t_critical_s(self) -> float:
+        """Emulated shard-parallel latency: slowest contacted shard + merge
+        (host-emulated shards run sequentially; real deployments overlap)."""
+        return (max(self.per_shard_s.values()) if self.per_shard_s else 0.0) \
+            + self.t_merge_s
+
+
+class ShardedEngine:
+    """Coordinator: a ``PBDSEngine`` for selection/capture plus S fragment
+    shards for serving.
+
+    The coordinator keeps the authoritative table (captures, candidate
+    selection, and NO-PS fallbacks run single-node over it); index *hits* are
+    served routed: per-shard maintained bits are OR-merged into the logical
+    sketch, only shards owning set bits are contacted, and their per-group
+    partials are merged into the final result.  Mutations ship per-shard
+    deltas and return immediately; shards drain on their next read.
+    """
+
+    def __init__(
+        self,
+        db: Database,
+        table: str,
+        attr: str,
+        n_shards: int,
+        n_ranges: int = 64,
+        strategy: str = "CB-OPT-GB",
+        policy: str = "contig",
+        use_devices: bool = True,
+        **engine_kwargs,
+    ):
+        for k in ("cluster_tables", "compact_tail_frac"):
+            if k in engine_kwargs:
+                # Physical re-permutes of the coordinator table would desync
+                # the global-row -> shard-row map that delete routing needs.
+                raise ValueError(f"{k} is coordinator-managed in ShardedEngine")
+        self.table_name = table
+        self.attr = attr
+        self.n_shards = n_shards
+        self.ranges = equi_depth_ranges(db[table], attr, n_ranges)
+        clustered = db[table].cluster_by(self.ranges)
+        self.engine = PBDSEngine(
+            db.with_table(clustered), strategy=strategy, n_ranges=n_ranges,
+            **engine_kwargs)
+        # The serving partition IS the engine's partition for ``attr``, so a
+        # sketch selected on it routes as fragment slices on every shard.
+        self.engine._ranges_cache[(table, attr)] = self.ranges
+        self.plan = plan_fragments(
+            np.diff(clustered.layout.offsets), n_shards, policy=policy)
+        dims = {k: v for k, v in self.engine.db.tables.items() if k != table}
+        devices = shard_devices(n_shards, use_devices)
+        self.shards: List[FragmentShard] = [
+            FragmentShard(s, self.plan, self.ranges, clustered, dims, devices[s])
+            for s in range(n_shards)
+        ]
+        # Global-row -> (shard, local-row) map, maintained across mutations so
+        # coordinator delete masks translate to shard-local masks.
+        n = clustered.num_rows
+        frag_of_row = np.searchsorted(
+            clustered.layout.offsets, np.arange(n), side="right") - 1
+        self._row_shard = self.plan.owner[frag_of_row]
+        self._row_local = np.empty(n, dtype=np.int64)
+        self._shard_rows = np.zeros(n_shards, dtype=np.int64)
+        for s in range(n_shards):
+            sel = self._row_shard == s
+            self._shard_rows[s] = int(sel.sum())
+            self._row_local[sel] = np.arange(self._shard_rows[s])
+        # Coordinator mutation count == the read watermark.
+        self.version = 0
+        # id(IndexEntry) -> routed-serving state for that logical entry.
+        self._registered: Dict[int, _Registered] = {}
+        self.last_route: Optional[RouteInfo] = None
+
+    # -- convenience -----------------------------------------------------------
+    @property
+    def db(self) -> Database:
+        return self.engine.db
+
+    @property
+    def index(self):
+        return self.engine.index
+
+    def min_watermark(self) -> int:
+        """The slowest shard's applied-delta count (monitoring hook)."""
+        return min((s.version for s in self.shards), default=self.version)
+
+    # -- mutations -------------------------------------------------------------
+    def append_rows(self, table_name: str, rows: Mapping[str, np.ndarray]) -> None:
+        """Route the batch by fragment ownership and ship per-shard deltas.
+
+        Every shard receives a delta (possibly empty) so shard versions stay
+        aligned with the coordinator's watermark; application is lazy.
+        """
+        if table_name != self.table_name:
+            self.engine.append_rows(table_name, rows)
+            self._replicate_dim(table_name)
+            return
+        rows_np = {k: np.asarray(v) for k, v in rows.items()}
+        # Route through RangeSet.bucketize itself so coordinator routing and
+        # shard-side re-bucketization agree bit-for-bit on boundary values.
+        bucket = np.asarray(self.ranges.bucketize(jnp.asarray(rows_np[self.attr])))
+        shard_of = self.plan.owner[bucket]
+        counts = np.bincount(shard_of, minlength=self.n_shards)
+        new_local = np.empty(shard_of.shape[0], dtype=np.int64)
+        for s, shard in enumerate(self.shards):
+            sel = shard_of == s
+            shard.ship("append", {k: v[sel] for k, v in rows_np.items()})
+            new_local[sel] = self._shard_rows[s] + np.arange(counts[s])
+        self._shard_rows += counts
+        self._row_shard = np.concatenate([self._row_shard, shard_of])
+        self._row_local = np.concatenate([self._row_local, new_local])
+        self.engine.append_rows(table_name, rows)
+        self.version += 1
+
+    def delete_rows(self, table_name: str, mask: np.ndarray) -> None:
+        """Translate the coordinator-row mask into per-shard local masks."""
+        if table_name != self.table_name:
+            self.engine.delete_rows(table_name, mask)
+            self._replicate_dim(table_name)
+            return
+        mask = np.asarray(mask, dtype=bool)
+        for s, shard in enumerate(self.shards):
+            local_mask = np.zeros(self._shard_rows[s], dtype=bool)
+            local_mask[self._row_local[mask & (self._row_shard == s)]] = True
+            shard.ship("delete", local_mask)
+        keep = ~mask
+        self._row_shard = self._row_shard[keep]
+        self._row_local = self._row_local[keep]
+        self._shard_rows = np.bincount(self._row_shard, minlength=self.n_shards)
+        for s in range(self.n_shards):
+            sel = self._row_shard == s
+            self._row_local[sel] = np.arange(self._shard_rows[s])
+        self.engine.delete_rows(table_name, mask)
+        self.version += 1
+
+    def _replicate_dim(self, table_name: str) -> None:
+        """Replicate a mutated dimension table and evict sketches it serves.
+
+        A join sketch's provenance depends on the dimension contents, but
+        sketches are versioned against the *fact* table only — serving one
+        across a dimension mutation could silently return a stale-join
+        result.  Eviction forces a fresh capture on the next miss.
+        """
+        for shard in self.shards:
+            shard.update_dim(self.engine.db[table_name])
+        for e in list(self.engine.index.entries()):
+            if e.query.join is not None and e.query.join.right == table_name:
+                self.engine.index.remove(e)
+                self._unregister(id(e))
+
+    # -- queries ---------------------------------------------------------------
+    def run(self, q: Query) -> Tuple[QueryResult, RunInfo]:
+        t0 = time.perf_counter()
+        entry = (self.engine.index.lookup_entry(q)
+                 if self.engine.strategy != "NO-PS" else None)
+        if entry is not None:
+            routed = self._run_routed(q, entry, t0)
+            if routed is not None:
+                return routed
+        # Miss (or unroutable hit): single-node path on the coordinator, then
+        # register any fresh capture with every shard.
+        res, info = self.engine.run(q)
+        if self.engine.strategy != "NO-PS":
+            for e in self.engine.index.entries():
+                if e.query.table == self.table_name and id(e) not in self._registered:
+                    self._register(e)
+        return res, info
+
+    def _group_local(self, q: Query) -> bool:
+        """May sketch bits be maintained shard-locally for ``q``?
+
+        A shard's maintainer evaluates the HAVING chain on *local* per-group
+        aggregates, which equals the global evaluation only when every group
+        (and, for nested templates, every outer group) lives entirely on one
+        shard — i.e. the placement attribute is part of the (outer) GROUP BY,
+        so a group's rows all share one fragment and hence one owner.
+        """
+        if self.attr not in q.groupby:
+            return False
+        if q.outer_groupby is not None and self.attr not in q.outer_groupby:
+            return False
+        return True
+
+    def _register(self, entry: IndexEntry) -> None:
+        ranges = entry.sketch.ranges
+        group_local = self._group_local(entry.query)
+        if group_local:
+            for shard in self.shards:
+                shard.catch_up(self.version)
+                shard.register(id(entry), entry.query, ranges)
+        self._registered[id(entry)] = _Registered(entry, ranges, group_local)
+
+    def _unregister(self, key: int) -> None:
+        for shard in self.shards:
+            shard.unregister(key)
+        self._registered.pop(key, None)
+
+    def _run_routed(
+        self, q: Query, entry: IndexEntry, t0: float
+    ) -> Optional[Tuple[QueryResult, RunInfo]]:
+        key = id(entry)
+        reg = self._registered.get(key)
+        if reg is None:
+            return None
+        ranges = reg.ranges
+        # Watermark gate: every shard must drain its inbox up to the
+        # coordinator's mutation count before serving — an un-contacted
+        # lagging shard could own fragments the mutations just made
+        # provenance-bearing (and its data must be current for partials).
+        applied = 0
+        for shard in self.shards:
+            applied += shard.catch_up(self.version)
+        if reg.group_local:
+            # Fully decentralized maintenance: every group is shard-local,
+            # so the logical bits are the OR of per-shard maintained bits.
+            bits_parts = []
+            for shard in self.shards:
+                b = shard.bits_for(key)
+                if b is None:  # maintainer lost (e.g. dimension replaced)
+                    self._unregister(key)
+                    return None
+                bits_parts.append(b)
+            bits = np.logical_or.reduce(bits_parts)
+        else:
+            # Groups span shards: the HAVING chain needs global aggregates,
+            # so the *coordinator's* maintainer repairs the logical sketch
+            # (delta-sized) and shards only serve the routed partials.
+            sketch, _ = self.engine._current_sketch(entry)
+            bits = sketch.bits
+
+        routable = ranges.key() == self.ranges.key()
+        per_shard_s: Dict[int, float] = {}
+        partials = []
+        for shard in self.shards:
+            if routable and not bits[shard.owned].any():
+                continue  # fragment-skip the whole shard
+            ts = time.perf_counter()
+            partials.append(shard.partial(q, key, ranges, bits))
+            per_shard_s[shard.shard_id] = time.perf_counter() - ts
+        tm = time.perf_counter()
+        res = _merge_partials(q, partials)
+        t1 = time.perf_counter()
+        self.last_route = RouteInfo(
+            contacted=len(per_shard_s),
+            skipped=self.n_shards - len(per_shard_s),
+            watermark=self.version,
+            deltas_applied=applied,
+            per_shard_s=per_shard_s,
+            t_merge_s=t1 - tm,
+        )
+        info = RunInfo(
+            reused=True, created=False, attr=ranges.attr,
+            strategy=self.engine.strategy, selectivity=entry.sketch.selectivity,
+            t_execute=t1 - t0, repaired=applied > 0,
+            shards_contacted=len(per_shard_s),
+            shards_skipped=self.n_shards - len(per_shard_s),
+        )
+        return res, info
+
+
+def _merge_partials(
+    q: Query,
+    partials: List[Tuple[Dict[str, np.ndarray], np.ndarray, np.ndarray]],
+) -> QueryResult:
+    """Merge per-shard per-group partials into the final result.
+
+    Partial sums/counts are re-keyed on group *values* (shard-local group
+    numbering is arbitrary) and accumulated in float64; under the integral
+    exactness envelope the float32 cast below reproduces the single-node
+    kernel's per-group values bit-for-bit, and the shared
+    ``result_from_group_state`` finishes HAVING chains and outer blocks
+    identically to single-node execution.
+    """
+    attrs = tuple(q.groupby)
+    if not attrs:
+        s = float(sum(p[1].sum() for p in partials))
+        c = float(sum(p[2].sum() for p in partials))
+        agg = _finalize(q.agg.fn, np.array([s], dtype=np.float64),
+                        np.array([c], dtype=np.float64))
+        return result_from_group_state(q, {}, agg, np.array([c > 0]))
+    keys, sums, counts = [], [], []
+    for gv, s, c in partials:
+        if s.shape[0] == 0:
+            continue
+        keys.append(np.stack([np.asarray(gv[a]) for a in attrs], axis=1))
+        sums.append(s.astype(np.float64))
+        counts.append(c.astype(np.float64))
+    if not keys:
+        return QueryResult(
+            group_values={a: np.empty(0) for a in
+                          (q.outer_groupby if q.outer_groupby else attrs)},
+            values=np.empty(0))
+    all_keys = np.concatenate(keys)
+    uniq, inv = np.unique(all_keys, axis=0, return_inverse=True)
+    sums_m = np.zeros(uniq.shape[0], dtype=np.float64)
+    counts_m = np.zeros(uniq.shape[0], dtype=np.float64)
+    np.add.at(sums_m, inv, np.concatenate(sums))
+    np.add.at(counts_m, inv, np.concatenate(counts))
+    agg = _finalize(q.agg.fn, sums_m, counts_m)
+    group_values = {a: uniq[:, i] for i, a in enumerate(attrs)}
+    return result_from_group_state(q, group_values, agg, counts_m > 0)
+
+
+def _finalize(fn: str, sums: np.ndarray, counts: np.ndarray) -> np.ndarray:
+    """float32 finalization mirroring the executor's kernel arithmetic."""
+    sums32 = sums.astype(np.float32)
+    counts32 = counts.astype(np.float32)
+    if fn == "count":
+        return counts32
+    if fn == "sum":
+        return sums32
+    if fn == "avg":
+        return sums32 / np.maximum(counts32, np.float32(1.0))
+    raise ValueError(f"unknown aggregate {fn!r}")

@@ -140,19 +140,15 @@ def _build_instance(
     if lay is not None and lay.matches(sketch.ranges):
         catalog.stats["instance_slices"] += 1
         frag_ids = np.nonzero(sketch.bits)[0]
-        if lay.tail == 0:
-            return table.take_fragments(frag_ids)
-        # Appended rows live in the layout's unsorted tail: concatenate the
-        # surviving prefix slices, then filter just the tail rows by their
-        # (delta-refreshed) bucket ids — per-row work stays delta-sized.
-        n = table.num_rows
-        off = lay.offsets
-        head = [np.arange(off[f], off[f + 1]) for f in frag_ids]
-        tail_rows = np.arange(n - lay.tail, n)
-        tail_bucket = np.asarray(catalog.bucketize(table, sketch.ranges))[n - lay.tail:]
-        head.append(tail_rows[sketch.bits[tail_bucket]])
-        idx = np.concatenate(head) if head else np.empty(0, dtype=np.int64)
-        return table.gather(jnp.asarray(idx))
+        # Appended rows live in the layout's unsorted tail; hand
+        # ``take_fragments`` the catalog's (delta-refreshed) bucket ids so
+        # the tail filter stays delta-sized and never re-searchsorts.
+        tail_bucket = None
+        if lay.tail:
+            n = table.num_rows
+            tail_bucket = np.asarray(
+                catalog.bucketize(table, sketch.ranges))[n - lay.tail:]
+        return table.take_fragments(frag_ids, tail_bucket=tail_bucket)
     catalog.stats["instance_mask"] += 1
     mask = sketch_keep_mask(sketch, table, catalog=catalog)
     return table.select(mask)

@@ -25,6 +25,16 @@ Array = jax.Array
 _TABLE_UIDS = itertools.count(1)
 
 
+def _bucketize_np(bounds: np.ndarray, values: np.ndarray) -> np.ndarray:
+    """Host-side fragment ids with ``RangeSet.bucketize``'s exact comparison
+    semantics: ``jnp.searchsorted`` compares in float32 when x64 is disabled,
+    so a float64 ``np.searchsorted`` could place boundary-adjacent values in
+    a different fragment than every cached bucketization and sketch bit in
+    the system.  All host-side tail bucketing must go through here."""
+    return np.searchsorted(bounds.astype(np.float32),
+                           np.asarray(values).astype(np.float32), side="right")
+
+
 @dataclasses.dataclass(frozen=True, eq=False)
 class FragmentLayout:
     """Physical fragment-major layout descriptor for a clustered table.
@@ -52,6 +62,19 @@ class FragmentLayout:
 
     def matches(self, ranges) -> bool:
         return self.attr == ranges.attr and self.ranges_key == ranges.key()
+
+    def bounds(self) -> np.ndarray:
+        """The partition's interior split points, recovered from the key.
+
+        ``ranges_key`` is ``RangeSet.key() == (attr, n_ranges, bounds bytes)``;
+        round-tripping the bytes lets layout-only consumers (tail bucketing in
+        ``take_fragments``, ``compact``) re-bucketize appended rows without
+        threading the original ``RangeSet`` through every call site.
+        """
+        bounds = np.frombuffer(self.ranges_key[2], dtype=np.float64)
+        if bounds.shape[0] != self.ranges_key[1] - 1:
+            raise ValueError("layout ranges_key does not hold float64 bounds")
+        return bounds
 
 
 @dataclasses.dataclass(frozen=True, eq=False)
@@ -184,24 +207,73 @@ class ColumnTable:
         return ColumnTable(self.name, clustered.columns, self.primary_key, layout,
                            version=self.version, uid=self.uid)
 
-    def take_fragments(self, frag_ids: np.ndarray) -> "ColumnTable":
+    def take_fragments(
+        self, frag_ids: np.ndarray, tail_bucket: Optional[np.ndarray] = None
+    ) -> "ColumnTable":
         """Concatenate the given fragments' contiguous slices (clustered only).
 
-        Tables with appended tail rows need the tail filtered by bucket id,
-        which requires a bucketization — see ``sketch._build_instance``.
+        Appended rows live in the layout's unsorted ``tail``; they are
+        bucket-filtered individually (delta-sized work) against ``frag_ids``
+        rather than invalidating the slice path.  ``tail_bucket`` — the tail
+        rows' fragment ids — may be passed in when the caller holds a cached
+        (delta-refreshed) bucketization; otherwise it is recomputed here from
+        the layout's own bounds.
         """
         if self.layout is None:
             raise ValueError(f"{self.name}: take_fragments needs a clustered table")
-        if self.layout.tail:
-            raise ValueError(f"{self.name}: layout has an unsorted tail of "
-                             f"{self.layout.tail} appended rows")
-        off = self.layout.offsets
+        lay = self.layout
         frag_ids = np.asarray(frag_ids)
-        if frag_ids.size:
-            idx = np.concatenate([np.arange(off[f], off[f + 1]) for f in frag_ids])
-        else:
-            idx = np.empty(0, dtype=np.int64)
+        off = lay.offsets
+        parts = [np.arange(off[f], off[f + 1]) for f in frag_ids]
+        if lay.tail:
+            n = self.num_rows
+            if tail_bucket is None:
+                tail_vals = np.asarray(self[lay.attr])[n - lay.tail:]
+                tail_bucket = _bucketize_np(lay.bounds(), tail_vals)
+            tail_bucket = np.asarray(tail_bucket)
+            if tail_bucket.shape[0] != lay.tail:
+                raise ValueError(
+                    f"tail_bucket has {tail_bucket.shape[0]} entries for a "
+                    f"{lay.tail}-row tail")
+            keep = np.zeros(lay.n_fragments, dtype=bool)
+            keep[frag_ids] = True
+            parts.append(np.arange(n - lay.tail, n)[keep[tail_bucket]])
+        idx = np.concatenate(parts) if parts else np.empty(0, dtype=np.int64)
         return self.gather(jnp.asarray(idx))
+
+    def compact(self) -> "ColumnTable":
+        """Fold the layout's unsorted tail back into fragment-major order.
+
+        Same contents, lineage and version (a physical permutation, like
+        ``cluster_by``), with ``tail == 0`` afterwards so sketch application
+        is pure slice concatenation again.  Row-position caches (samples,
+        bucketizations, instances) must be invalidated by the caller — the
+        delta chain is dropped for the same reason as in ``cluster_by``.
+        """
+        lay = self.layout
+        if lay is None or lay.tail == 0:
+            return self.collapse()
+        n = self.num_rows
+        tail_rows = np.arange(n - lay.tail, n)
+        tail_vals = np.asarray(self[lay.attr])[tail_rows]
+        tail_bucket = _bucketize_np(lay.bounds(), tail_vals)
+        order_t = np.argsort(tail_bucket, kind="stable")
+        # Merge each tail run into its fragment, after the existing rows
+        # (stable: prefix rows keep their relative order, tail rows append).
+        tail_counts = np.bincount(tail_bucket, minlength=lay.n_fragments)
+        new_offsets = np.concatenate(
+            [[0], np.cumsum(np.diff(lay.offsets) + tail_counts)]).astype(np.int64)
+        parts = []
+        t_off = np.concatenate([[0], np.cumsum(tail_counts)])
+        for f in range(lay.n_fragments):
+            parts.append(np.arange(lay.offsets[f], lay.offsets[f + 1]))
+            parts.append(tail_rows[order_t[t_off[f]:t_off[f + 1]]])
+        idx = np.concatenate(parts)
+        compacted = self.gather(jnp.asarray(idx))
+        layout = FragmentLayout(attr=lay.attr, ranges_key=lay.ranges_key,
+                                offsets=new_offsets)
+        return ColumnTable(self.name, compacted.columns, self.primary_key, layout,
+                           version=self.version, uid=self.uid)
 
     # -- mutations (delta-aware) ----------------------------------------------
     def delta_depth(self) -> int:

@@ -1,0 +1,39 @@
+"""Device placement for fragment shards (``repro.core.shard``).
+
+Shards are host-emulated processes by default: each ``FragmentShard`` is an
+in-process object with its own table, catalog, and maintainers.  When the
+runtime exposes more than one accelerator (a ``jax`` device mesh), each
+shard's columns are pinned to a device round-robin so per-shard partial
+aggregation runs on the shard's own accelerator — the same fragment-routing
+logic, different executor placement.  On a single-device host everything
+lands on the default device and placement is a no-op.
+"""
+from __future__ import annotations
+
+from typing import List, Optional
+
+import jax
+
+from repro.core.table import ColumnTable
+
+
+def shard_devices(n_shards: int, use_devices: bool = True) -> List[Optional[jax.Device]]:
+    """One device per shard, round-robin over the local devices.
+
+    Returns ``None`` entries (no pinning) when placement is disabled or only
+    one device exists — ``jax.device_put`` to the sole default device would
+    just add transfer bookkeeping for nothing.
+    """
+    devices = jax.local_devices()
+    if not use_devices or len(devices) <= 1:
+        return [None] * n_shards
+    return [devices[i % len(devices)] for i in range(n_shards)]
+
+
+def place_table(table: ColumnTable, device: Optional[jax.Device]) -> ColumnTable:
+    """Pin every column of ``table`` to ``device`` (identity when None)."""
+    if device is None:
+        return table
+    cols = {k: jax.device_put(v, device) for k, v in table.columns.items()}
+    return ColumnTable(table.name, cols, table.primary_key, table.layout,
+                       version=table.version, uid=table.uid)

@@ -120,6 +120,109 @@ def test_cluster_by_layout_offsets(tpch_db):
     assert clustered.with_column("x", clustered["l_suppkey"]).layout is layout
 
 
+def test_take_fragments_with_unsorted_tail(tpch_db):
+    """Regression: take_fragments on a clustered+appended table used to raise
+    ValueError; it must slice the covered prefix and bucket-filter the tail."""
+    table = tpch_db["lineitem"]
+    ranges = equi_depth_ranges(table, "l_suppkey", 16)
+    clustered = table.cluster_by(ranges)
+    batch = {a: np.asarray(table[a])[:500] for a in table.schema}
+    appended = clustered.append(batch)
+    assert appended.layout.tail == 500
+    frag_ids = np.array([1, 3, 7])
+    got = appended.take_fragments(frag_ids)
+    # Oracle: all rows (prefix + tail) whose bucket is one of frag_ids.
+    bucket = np.asarray(ranges.bucketize(appended["l_suppkey"]))
+    want = int(np.isin(bucket, frag_ids).sum())
+    assert got.num_rows == want
+    assert np.isin(np.asarray(ranges.bucketize(got["l_suppkey"])), frag_ids).all()
+    # Empty selection stays valid on a tailed table too.
+    assert appended.take_fragments(np.empty(0, dtype=np.int64)).num_rows == 0
+
+
+def test_index_hit_on_clustered_appended_table_serves(tpch_db):
+    """Regression: an index hit after cluster+append must serve, not crash."""
+    db = Database({"crimes": make_crimes(20_000, seed=11)})
+    base = Query("crimes", ("district", "year"), Aggregate("sum", "records"))
+    sums = execute(base, db).values
+    q = dataclasses.replace(base, having=Having(">", float(np.quantile(sums, 0.9))))
+    eng = PBDSEngine(db, strategy="CB-OPT-GB", n_ranges=50, theta=0.1, seed=0,
+                     cluster_tables=True)
+    _, info = eng.run(q)
+    assert info.created and eng.db["crimes"].layout is not None
+    fresh = make_crimes(2_000, seed=99)
+    eng.append_rows("crimes", {a: np.asarray(fresh[a]) for a in fresh.schema})
+    assert eng.db["crimes"].layout.tail == 2_000
+    res, info2 = eng.run(q)
+    assert info2.reused and info2.repaired
+    assert res.canonical() == execute(q, eng.db).canonical()
+
+
+def test_tail_bucket_fallback_matches_f32_bucketize_semantics():
+    """Host-side tail bucketing must compare in float32 like RangeSet.bucketize
+    (jnp.searchsorted under disabled x64): a boundary value inside the f32
+    rounding gap of a bound must land in the same fragment on both paths."""
+    from repro.core import RangeSet, from_numpy
+
+    t = from_numpy("t", {"a": np.array([1.0, 5.0, 9.0, 12.0]),
+                         "v": np.ones(4)})
+    ranges = RangeSet("a", np.array([10.0000001]))  # == 10.0 in float32
+    clustered = t.cluster_by(ranges)
+    # 10.0 is exact in f32; in f64 it is < the bound (fragment 0), in f32 it
+    # equals the cast bound and side='right' puts it in fragment 1.
+    appended = clustered.append({"a": np.array([10.0]), "v": np.array([1.0])})
+    # jnp/f32 semantics put the tail row in fragment 1; f64 would say 0.
+    assert np.asarray(ranges.bucketize(appended["a"]))[-1] == 1
+    assert appended.take_fragments(np.array([1])).num_rows == 2
+    assert appended.take_fragments(np.array([0])).num_rows == 3
+    # compact() uses the same comparison: the row merges into fragment 1.
+    compacted = appended.compact()
+    off = compacted.layout.offsets
+    assert off[1] == 3 and off[2] == 5
+
+
+def test_compact_folds_tail_into_fragments(tpch_db):
+    table = make_crimes(10_000, seed=13)
+    ranges = equi_depth_ranges(table, "district", 12)
+    clustered = table.cluster_by(ranges)
+    batch_t = make_crimes(1_500, seed=14)
+    appended = clustered.append({a: np.asarray(batch_t[a]) for a in batch_t.schema})
+    compacted = appended.compact()
+    assert compacted.layout is not None and compacted.layout.tail == 0
+    assert compacted.num_rows == appended.num_rows
+    assert compacted.uid == appended.uid and compacted.version == appended.version
+    # Every fragment slice is homogeneous in its bucket id again.
+    bucket = np.asarray(ranges.bucketize(compacted["district"]))
+    off = compacted.layout.offsets
+    for f in range(compacted.layout.n_fragments):
+        assert (bucket[off[f]:off[f + 1]] == f).all()
+    # Same multiset of rows: any grouped aggregate is unchanged.
+    q = Query("crimes", ("district", "year"), Aggregate("sum", "records"))
+    assert (execute(q, Database({"crimes": compacted})).canonical()
+            == execute(q, Database({"crimes": appended})).canonical())
+    # Compacting a tail-free table is a no-op permutation-wise.
+    assert clustered.compact().layout.tail == 0
+
+
+def test_engine_compacts_past_tail_threshold():
+    db = Database({"crimes": make_crimes(20_000, seed=15)})
+    base = Query("crimes", ("district", "year"), Aggregate("sum", "records"))
+    sums = execute(base, db).values
+    q = dataclasses.replace(base, having=Having(">", float(np.quantile(sums, 0.9))))
+    eng = PBDSEngine(db, strategy="CB-OPT-GB", n_ranges=50, theta=0.1, seed=0,
+                     cluster_tables=True, compact_tail_frac=0.1)
+    eng.run(q)
+    fresh = make_crimes(5_000, seed=77)
+    eng.append_rows("crimes", {a: np.asarray(fresh[a]) for a in fresh.schema})
+    # 5k tail on 25k rows > 10%: compacted back to pure fragment-major.
+    assert eng.db["crimes"].layout is not None
+    assert eng.db["crimes"].layout.tail == 0
+    assert eng.catalog.stats["compact"] == 1
+    res, info = eng.run(q)
+    assert info.reused
+    assert res.canonical() == execute(q, eng.db).canonical()
+
+
 @pytest.mark.parametrize("spec_name", ["crimes", "tpch_join"])
 def test_second_workload_pass_does_zero_host_encode_work(spec_name):
     """Catalog reuse: replaying a workload hits caches only (no np.unique /
@@ -170,6 +273,56 @@ def test_engine_clusters_fact_table_and_slices_on_reuse():
     res2, info2 = eng.run(q)
     assert info2.reused
     assert res2.canonical() == execute(q, db).canonical() == res.canonical()
+
+
+def test_where_mask_cache_hit_miss_and_delta_refresh():
+    """Repeated WHERE predicates evaluate once per table version; appends and
+    deletes refresh the cached mask from the delta, never a full re-eval."""
+    from repro.core import Predicate
+
+    t = make_crimes(8_000, seed=19)
+    cat = Catalog()
+    pred = Predicate("year", ">", 2015.0)
+    m1 = cat.where_mask(t, pred)
+    assert cat.stats["where_mask"] == 1 and cat.stats["where_mask_hit"] == 0
+    m2 = cat.where_mask(t, pred)
+    assert m2 is m1
+    assert cat.stats["where_mask_hit"] == 1
+    # A different predicate is a separate entry (same table).
+    cat.where_mask(t, Predicate("year", ">", 2018.0))
+    assert cat.stats["where_mask"] == 2
+
+    # Append: batch-sized refresh, prefix comes from the parent's mask.
+    batch_t = make_crimes(1_000, seed=20)
+    t2 = t.append({a: np.asarray(batch_t[a]) for a in batch_t.schema})
+    m3 = cat.where_mask(t2, pred)
+    assert cat.stats["where_mask_delta"] == 1
+    assert cat.stats["where_mask"] == 2  # no new full evaluation
+    np.testing.assert_array_equal(np.asarray(m3), np.asarray(pred.mask(t2)))
+
+    # Delete: gather of the kept rows.
+    mask = np.zeros(t2.num_rows, dtype=bool)
+    mask[::7] = True
+    t3 = t2.delete(mask)
+    m4 = cat.where_mask(t3, pred)
+    assert cat.stats["where_mask_delta"] == 2
+    assert cat.stats["where_mask"] == 2
+    np.testing.assert_array_equal(np.asarray(m4), np.asarray(pred.mask(t3)))
+
+
+def test_executor_uses_where_cache():
+    """Replaying a WHERE query re-uses the cached mask (no re-evaluation)."""
+    from repro.core import Predicate
+
+    db = Database({"crimes": make_crimes(8_000, seed=23)})
+    q = Query("crimes", ("district",), Aggregate("sum", "records"),
+              where=Predicate("year", ">", 2015.0))
+    cat = Catalog()
+    want = execute(q, db, catalog=cat).canonical()
+    assert cat.stats["where_mask"] == 1
+    assert execute(q, db, catalog=cat).canonical() == want
+    assert cat.stats["where_mask"] == 1
+    assert cat.stats["where_mask_hit"] == 1
 
 
 def test_catalog_group_encoding_identity():

@@ -39,6 +39,35 @@ def test_subsumes_threshold_domination():
     assert subsumes(_q(tau=10.0, op=">="), _q(tau=10.0))
 
 
+def test_subsumes_mixed_ops_at_equal_threshold():
+    """Regression: a `>`-captured sketch must NOT serve `>=` at the same tau —
+    groups with agg == tau are in q2's provenance but not in the sketch."""
+    assert not subsumes(_q(tau=10.0, op=">"), _q(tau=10.0, op=">="))
+    # The safe direction: `>=`-captured provenance is a superset of `>`'s.
+    assert subsumes(_q(tau=10.0, op=">="), _q(tau=10.0, op=">"))
+    assert subsumes(_q(tau=10.0, op=">="), _q(tau=10.0, op=">="))
+    assert subsumes(_q(tau=10.0, op=">"), _q(tau=10.0, op=">"))
+    # Strict domination restores subsumption for the mixed pair.
+    assert subsumes(_q(tau=10.0, op=">"), _q(tau=10.0 + 1e-6, op=">="))
+    # Same rule on the *outer* HAVING of nested templates.
+    def _nested(op, tau):
+        q = _q(tau=0.0)
+        return dataclasses.replace(
+            q, outer_groupby=("a",), outer_agg=Aggregate("sum", None),
+            outer_having=Having(op, tau))
+    assert not subsumes(_nested(">", 7.0), _nested(">=", 7.0))
+    assert subsumes(_nested(">=", 7.0), _nested(">", 7.0))
+
+
+def test_equal_threshold_mixed_op_lookup_misses_index():
+    """End-to-end: the index refuses the unsafe `>` -> `>=` equal-tau hit."""
+    idx = SketchIndex()
+    idx.insert(_q(tau=10.0, op=">"), _sk())
+    assert idx.lookup(_q(tau=10.0, op=">=")) is None
+    assert idx.misses == 1
+    assert idx.lookup(_q(tau=10.0, op=">")) is not None
+
+
 def test_subsumes_requires_matching_structure():
     q1 = _q()
     assert not subsumes(q1, _q(gb=("b",)))

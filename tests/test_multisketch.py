@@ -113,6 +113,63 @@ def test_composite_path_goes_through_catalog(db, q):
     np.testing.assert_array_equal(sk.bits, sk2.bits)
 
 
+def test_composite_batched_estimation_matches_per_candidate_loop(db, q):
+    """Composite candidates routed through estimate_size_batched's vmapped
+    incidence pass agree with the single-candidate reference loop."""
+    from repro.aqp.sampling import stratified_reservoir_sample
+    from repro.aqp.size_estimation import (
+        approximate_query_result,
+        estimate_size,
+        estimate_size_batched,
+    )
+
+    key = jax.random.PRNGKey(3)
+    fact = db["crimes"]
+    samples = stratified_reservoir_sample(key, fact, ("district", "year"), 0.1)
+    aqr = approximate_query_result(key, q, db, samples)
+    cands = {
+        ("district",): composite_ranges(fact, ("district",), 64),
+        ("year",): composite_ranges(fact, ("year",), 64),
+        ("district", "year"): composite_ranges(fact, ("district", "year"), 64),
+        # A non-GB attribute exercises the sample-row (slow) composite path.
+        ("beat", "district"): composite_ranges(fact, ("beat", "district"), 64),
+    }
+    batched = estimate_size_batched(key, q, db, cands, samples, aqr=aqr)
+    for attrs, cr in cands.items():
+        ref = estimate_size(key, q, db, cr, samples, aqr=aqr)
+        got = batched[attrs]
+        np.testing.assert_array_equal(got.est_bits, ref.est_bits)
+        assert got.est_rows == pytest.approx(ref.est_rows, rel=1e-5)
+        assert got.expected_rows == pytest.approx(ref.expected_rows, rel=1e-4)
+        assert got.lo_rows == pytest.approx(ref.lo_rows, rel=1e-4)
+        assert got.hi_rows == pytest.approx(ref.hi_rows, rel=1e-4)
+
+
+def test_cb_opt_gb2_sizes_match_exact_membership(db, q):
+    """The batched GB fast path reproduces the old exact full-scan loop:
+    size == #rows whose composite fragment is hit by a satisfied group."""
+    from repro.aqp.sampling import stratified_reservoir_sample
+    from repro.aqp.size_estimation import approximate_query_result
+
+    key = jax.random.PRNGKey(0)
+    fact = db["crimes"]
+    gb = ("district", "year")
+    samples = stratified_reservoir_sample(key, fact, gb, 0.1)
+    _, satisfied = approximate_query_result(key, q, db, samples)
+    best, cr_best, sizes = select_composite_gb(key, q, db, 100, theta=0.1)
+    total = fact.num_rows
+    for attrs in [("district",), ("year",), ("district", "year")]:
+        cr = composite_ranges(fact, attrs, 100)
+        frag = None
+        for r in cr.parts:
+            b = np.asarray(r.bucketize(np.asarray(samples.group_values[r.attr])))
+            frag = b if frag is None else frag * r.n_ranges + b
+        sat_frags = np.unique(frag[np.nonzero(satisfied)[0]])
+        bucket = np.asarray(cr.bucketize(fact))
+        exact = float(np.isin(bucket, sat_frags).sum()) / total
+        assert sizes[attrs] == pytest.approx(exact, rel=1e-6)
+
+
 def test_cb_opt_gb2_selects_reasonably(db, q):
     key = jax.random.PRNGKey(0)
     best, cr, sizes = select_composite_gb(key, q, db, 100, theta=0.1)

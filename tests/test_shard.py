@@ -1,0 +1,233 @@
+"""Fragment-sharded serving: routed execution must equal single-node exactly.
+
+Differential contract (the acceptance criterion of the sharding PR): for every
+workload template, the ShardedEngine's routed result equals single-node
+execution over the coordinator's authoritative table bit-for-bit — including
+across interleaved appends/deletes that advance shard watermarks lazily — and
+reused-sketch queries contact only the shards owning sketch fragments.
+
+The exactness tests aggregate integer-valued columns (records, l_quantity):
+within that envelope per-shard float32 partial sums are exact integers, so
+merged-partial results reproduce the single-node kernel arithmetic exactly —
+the same envelope the maintenance differential harness pins.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    Aggregate,
+    Database,
+    Having,
+    JoinSpec,
+    Query,
+    ShardedEngine,
+    execute,
+    plan_fragments,
+)
+from repro.core.datasets import make_crimes, make_tpch
+
+N_ROWS = 30_000
+
+
+def _threshold(q, db, quantile):
+    vals = execute(dataclasses.replace(q, having=None, outer_having=None), db).values
+    return float(np.quantile(vals, quantile))
+
+
+def _tpch_templates(db):
+    """One query per template, aggregating integer-valued columns only."""
+    agh = Query("lineitem", ("l_suppkey",), Aggregate("sum", "l_quantity"))
+    agh = dataclasses.replace(agh, having=Having(">", _threshold(agh, db, 0.8)))
+
+    ajgh = Query(
+        "lineitem", ("l_suppkey",), Aggregate("sum", "l_quantity"),
+        join=JoinSpec("orders", "l_orderkey", "o_orderkey"),
+    )
+    ajgh = dataclasses.replace(ajgh, having=Having(">", _threshold(ajgh, db, 0.8)))
+
+    aagh = Query(
+        "lineitem", ("l_partkey", "l_suppkey"), Aggregate("sum", "l_quantity"),
+        having=Having(">", 0.0),
+        outer_groupby=("l_suppkey",), outer_agg=Aggregate("sum", None),
+    )
+    aagh = dataclasses.replace(
+        aagh, outer_having=Having(">", _threshold(aagh, db, 0.8)))
+
+    aajgh = Query(
+        "lineitem", ("l_partkey", "l_suppkey"), Aggregate("count", None),
+        join=JoinSpec("orders", "l_orderkey", "o_orderkey"),
+        having=Having(">", 0.0),
+        outer_groupby=("l_suppkey",), outer_agg=Aggregate("sum", None),
+    )
+    aajgh = dataclasses.replace(
+        aajgh, outer_having=Having(">", _threshold(aajgh, db, 0.8)))
+    return [agh, ajgh, aagh, aajgh]
+
+
+def test_plan_fragments_policies():
+    sizes = np.array([10, 10, 10, 10, 40, 10, 10, 10])
+    contig = plan_fragments(sizes, 3, policy="contig")
+    assert contig.owner.shape == (8,)
+    # Contiguous runs, all shards used, ownership non-decreasing.
+    assert (np.diff(contig.owner) >= 0).all()
+    assert set(contig.owner.tolist()) == {0, 1, 2}
+    spread = plan_fragments(sizes, 3, policy="spread")
+    np.testing.assert_array_equal(spread.owner, np.arange(8) % 3)
+    np.testing.assert_array_equal(contig.shards_for(np.array([0, 1])),
+                                  np.unique(contig.owner[[0, 1]]))
+    with pytest.raises(ValueError):
+        plan_fragments(sizes, 2, policy="nope")
+
+
+@pytest.mark.parametrize("n_shards", [1, 3])
+def test_routed_equals_single_node_all_templates(n_shards):
+    db = make_tpch(N_ROWS, seed=7)
+    se = ShardedEngine(db, "lineitem", "l_suppkey", n_shards=n_shards,
+                       n_ranges=32, theta=0.1, seed=0, min_selectivity_gain=2.0)
+    for q in _tpch_templates(db):
+        res_cold, info_cold = se.run(q)
+        want = execute(q, se.db).canonical()
+        assert res_cold.canonical() == want, q.template
+        res_warm, info_warm = se.run(q)
+        assert info_warm.reused, q.template
+        assert info_warm.shards_contacted is not None
+        assert (info_warm.shards_contacted + info_warm.shards_skipped
+                == n_shards)
+        assert res_warm.canonical() == want, q.template
+
+
+def test_selective_sketch_skips_shards():
+    """A sketch on the serving partition routes to a strict shard subset."""
+    db = Database({"crimes": make_crimes(20_000, seed=3)})
+    base = Query("crimes", ("district",), Aggregate("sum", "records"))
+    sums = execute(base, db).values
+    q = dataclasses.replace(base, having=Having(">", float(np.quantile(sums, 0.9))))
+    se = ShardedEngine(db, "crimes", "district", n_shards=4, n_ranges=25,
+                       theta=0.1, seed=0, min_selectivity_gain=2.0)
+    se.run(q)
+    res, info = se.run(q)
+    assert info.reused and info.shards_skipped > 0
+    assert res.canonical() == execute(q, se.db).canonical()
+    assert se.last_route.contacted == info.shards_contacted
+    assert se.last_route.t_critical_s > 0
+
+
+def test_non_matching_partition_routes_all_shards_exactly():
+    """A sketch on a different attribute than the placement partition cannot
+    fragment-skip shards, but routed execution stays exact (keep-mask path)."""
+    db = Database({"crimes": make_crimes(20_000, seed=5)})
+    base = Query("crimes", ("year",), Aggregate("sum", "records"))
+    sums = execute(base, db).values
+    q = dataclasses.replace(base, having=Having(">", float(np.quantile(sums, 0.8))))
+    # Placement on district; the only GB candidate is year -> mismatch.
+    se = ShardedEngine(db, "crimes", "district", n_shards=3, n_ranges=25,
+                       theta=0.1, seed=0, min_selectivity_gain=2.0)
+    se.run(q)
+    res, info = se.run(q)
+    assert info.reused
+    assert info.shards_contacted == 3 and info.shards_skipped == 0
+    assert res.canonical() == execute(q, se.db).canonical()
+
+
+def test_interleaved_mutations_watermark_and_exactness():
+    """Randomized append/delete/query interleavings: shards lag until read,
+    reads gate on the watermark, and every routed result is exact."""
+    rng = np.random.default_rng(11)
+    db = Database({"crimes": make_crimes(20_000, seed=9)})
+    base = Query("crimes", ("district", "year"), Aggregate("sum", "records"))
+    sums = execute(base, db).values
+    queries = [
+        dataclasses.replace(base, having=Having(">", float(np.quantile(sums, qt))))
+        for qt in (0.7, 0.9)
+    ]
+    se = ShardedEngine(db, "crimes", "district", n_shards=4, n_ranges=25,
+                       theta=0.1, seed=0, min_selectivity_gain=2.0)
+    for q in queries:
+        se.run(q)
+
+    n_routed = 0
+    for step in range(30):
+        op = rng.choice(["append", "delete", "query"], p=[0.35, 0.25, 0.4])
+        if op == "append":
+            batch = make_crimes(int(rng.integers(200, 800)),
+                                seed=int(rng.integers(1 << 30)))
+            se.append_rows("crimes", {a: np.asarray(batch[a]) for a in batch.schema})
+            # Replication is lazy: shipped but not yet applied anywhere.
+            assert se.min_watermark() < se.version
+        elif op == "delete":
+            n = se.db["crimes"].num_rows
+            mask = rng.random(n) < 0.02
+            se.delete_rows("crimes", mask)
+            assert se.min_watermark() < se.version
+        else:
+            q = queries[int(rng.integers(len(queries)))]
+            res, info = se.run(q)
+            assert info.reused
+            n_routed += 1
+            # The watermark gate drained every shard before serving.
+            assert se.min_watermark() == se.version
+            assert all(s.lag == 0 for s in se.shards)
+            assert res.canonical() == execute(q, se.db).canonical(), step
+    assert n_routed > 3
+
+
+def test_dimension_mutation_evicts_and_recaptures():
+    db = make_tpch(N_ROWS, seed=13)
+    q = Query("lineitem", ("l_suppkey",), Aggregate("sum", "l_quantity"),
+              join=JoinSpec("orders", "l_orderkey", "o_orderkey"))
+    q = dataclasses.replace(q, having=Having(">", _threshold(q, db, 0.8)))
+    se = ShardedEngine(db, "lineitem", "l_suppkey", n_shards=2, n_ranges=32,
+                       theta=0.1, seed=0, min_selectivity_gain=2.0)
+    se.run(q)
+    _, info = se.run(q)
+    assert info.reused
+    # Mutate the dimension table: the join sketch is no longer trustworthy.
+    orders = se.db["orders"]
+    new_keys = np.arange(orders.num_rows + 1, orders.num_rows + 101, dtype=np.int64)
+    se.append_rows("orders", {
+        "o_orderkey": new_keys,
+        "o_custkey": np.ones(100, dtype=np.int64),
+        "o_totalprice": np.full(100, 1000.0, dtype=np.float32),
+        "o_orderdate": np.full(100, 9000, dtype=np.int32),
+        "o_shippriority": np.zeros(100, dtype=np.int32),
+    })
+    res, info2 = se.run(q)
+    assert info2.created and not info2.reused  # evicted -> fresh capture
+    assert res.canonical() == execute(q, se.db).canonical()
+    res3, info3 = se.run(q)
+    assert info3.reused
+    assert res3.canonical() == execute(q, se.db).canonical()
+
+
+def test_single_shard_degenerates_to_full_routing():
+    db = Database({"crimes": make_crimes(10_000, seed=17)})
+    base = Query("crimes", ("district",), Aggregate("count", None))
+    counts = execute(base, db).values
+    q = dataclasses.replace(base, having=Having(">", float(np.quantile(counts, 0.6))))
+    se = ShardedEngine(db, "crimes", "district", n_shards=1, n_ranges=16,
+                       theta=0.1, seed=0, min_selectivity_gain=2.0)
+    se.run(q)
+    res, info = se.run(q)
+    assert info.reused and info.shards_contacted == 1 and info.shards_skipped == 0
+    assert res.canonical() == execute(q, se.db).canonical()
+
+
+def test_placement_glue_single_device():
+    from repro.parallel.placement import place_table, shard_devices
+
+    devs = shard_devices(3)
+    assert len(devs) == 3  # one slot per shard, None = no pinning needed
+    t = make_crimes(100, seed=0)
+    assert place_table(t, None) is t
+    devs_forced = shard_devices(3, use_devices=False)
+    assert devs_forced == [None, None, None]
+
+
+def test_sharded_engine_rejects_coordinator_permuting_kwargs():
+    db = Database({"crimes": make_crimes(2_000, seed=1)})
+    with pytest.raises(ValueError):
+        ShardedEngine(db, "crimes", "district", n_shards=2, cluster_tables=True)
+    with pytest.raises(ValueError):
+        ShardedEngine(db, "crimes", "district", n_shards=2, compact_tail_frac=0.5)

@@ -1,0 +1,159 @@
+"""Adversarial subsumption: ``subsumes(q1, q2)`` must imply provenance
+containment bit-for-bit against the capture oracle.
+
+The index's reuse rule is only safe when every fragment holding q2-provenance
+rows is marked in the sketch captured for q1.  This suite randomizes
+``(op, tau)`` pairs — with thresholds drawn from the *actual* group-aggregate
+values so exact-boundary equality (agg == tau) occurs constantly — and checks
+the implication ``subsumes(q1, q2)  =>  frag(P(q2)) subset-of bits(q1)``
+against ``capture_sketch``/``provenance_mask``.  Includes the `>`/`>=`
+equal-threshold boundary (the PR's wrong-result-reuse regression) and mixed
+outer/inner HAVING chains on the nested templates.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    Aggregate,
+    Database,
+    Having,
+    Query,
+    RangeSet,
+    capture_sketch,
+    equi_depth_ranges,
+    execute,
+    provenance_mask,
+    subsumes,
+)
+from repro.core.datasets import make_crimes
+from repro.core.table import from_numpy
+
+
+@pytest.fixture(scope="module")
+def db():
+    return Database({"crimes": make_crimes(8_000, seed=41)})
+
+
+def _prov_frag_bits(q, db, ranges) -> np.ndarray:
+    """The oracle: which fragments hold >= 1 provenance row of ``q``."""
+    prov = provenance_mask(q, db)
+    bucket = np.asarray(ranges.bucketize(db[q.table][ranges.attr]))
+    bits = np.zeros(ranges.n_ranges, dtype=bool)
+    bits[bucket[prov]] = True
+    return bits
+
+
+def _check_pair(q1, q2, db, ranges):
+    """If the index would reuse q1's sketch for q2, containment must hold."""
+    if not subsumes(q1, q2):
+        return False
+    sk = capture_sketch(q1, db, ranges)
+    p2 = _prov_frag_bits(q2, db, ranges)
+    missing = p2 & ~sk.bits
+    assert not missing.any(), (
+        f"unsafe reuse: {q1.having}/{q1.outer_having} claimed to subsume "
+        f"{q2.having}/{q2.outer_having} but fragments {np.nonzero(missing)[0]} "
+        f"hold q2 provenance outside the stored sketch")
+    return True
+
+
+def test_randomized_agh_pairs_containment(db):
+    rng = np.random.default_rng(7)
+    base = Query("crimes", ("district", "year"), Aggregate("sum", "records"))
+    agg_vals = np.unique(execute(base, db).values)
+    ranges = equi_depth_ranges(db["crimes"], "district", 20)
+    ops = [">", ">=", "<", "<=", "="]
+    n_subsumed = 0
+    for _ in range(250):
+        # Draw taus from the actual aggregate values (boundary equality is
+        # the adversarial case) or a perturbation of one.
+        taus = []
+        for _k in range(2):
+            v = float(rng.choice(agg_vals))
+            if rng.random() < 0.4:
+                v += float(rng.choice([-1.0, 1.0]))
+            taus.append(v)
+        # Bias toward the monotone ops so the reuse path is hit often; the
+        # occasional <, <=, = pairs cover the exact-equality-only rule.
+        pool = ops if rng.random() < 0.3 else [">", ">="]
+        op1, op2 = rng.choice(pool, size=2)
+        q1 = dataclasses.replace(base, having=Having(str(op1), taus[0]))
+        q2 = dataclasses.replace(base, having=Having(str(op2), taus[1]))
+        n_subsumed += _check_pair(q1, q2, db, ranges)
+    # The suite must actually exercise the reuse path, not vacuously pass.
+    assert n_subsumed > 30
+
+
+def test_randomized_nested_pairs_mixed_inner_outer(db):
+    """Nested templates: inner and outer HAVING both vary independently."""
+    rng = np.random.default_rng(19)
+    base = Query(
+        "crimes", ("district", "year"), Aggregate("sum", "records"),
+        outer_groupby=("district",), outer_agg=Aggregate("sum", None),
+    )
+    inner_vals = np.unique(execute(
+        dataclasses.replace(base, outer_groupby=None, outer_agg=None), db).values)
+    outer_vals = np.unique(execute(base, db).values)
+    ranges = equi_depth_ranges(db["crimes"], "district", 20)
+    n_subsumed = 0
+    for _ in range(120):
+        def _tau(vals):
+            v = float(rng.choice(vals))
+            return v + (float(rng.choice([-1.0, 1.0])) if rng.random() < 0.4 else 0.0)
+        op_i1, op_i2, op_o1, op_o2 = rng.choice([">", ">="], size=4)
+        q1 = dataclasses.replace(base, having=Having(str(op_i1), _tau(inner_vals)),
+                                 outer_having=Having(str(op_o1), _tau(outer_vals)))
+        q2 = dataclasses.replace(base, having=Having(str(op_i2), _tau(inner_vals)),
+                                 outer_having=Having(str(op_o2), _tau(outer_vals)))
+        n_subsumed += _check_pair(q1, q2, db, ranges)
+    assert n_subsumed > 10
+
+
+def test_boundary_violation_is_real_not_theoretical():
+    """Constructed dataset where the pre-fix rule (`>` serves `>=` at equal
+    tau) returns a provably unsafe sketch: the boundary group's fragment is
+    missing from the stored bits but holds q2 provenance."""
+    table = from_numpy("t", {
+        "g": np.array([0, 0, 1, 1, 2, 2], dtype=np.int32),
+        "v": np.array([5, 5, 10, 10, 3, 2], dtype=np.int32),
+    })
+    db = Database({"t": table})
+    # Per-group sums: g0 -> 10, g1 -> 20, g2 -> 5.  One fragment per group.
+    ranges = RangeSet("g", np.array([0.5, 1.5]))
+    q1 = Query("t", ("g",), Aggregate("sum", "v"), having=Having(">", 10.0))
+    q2 = Query("t", ("g",), Aggregate("sum", "v"), having=Having(">=", 10.0))
+    sk1 = capture_sketch(q1, db, ranges)
+    p2 = _prov_frag_bits(q2, db, ranges)
+    # q2's provenance needs g0's fragment; q1's sketch does not contain it.
+    assert (p2 & ~sk1.bits).any()
+    assert not subsumes(q1, q2)  # the fix: equal-tau mixed ops must miss
+    # And the safe direction still reuses: g1-only provenance is contained.
+    assert subsumes(q2, q1)
+    p1 = _prov_frag_bits(q1, db, ranges)
+    sk2 = capture_sketch(q2, db, ranges)
+    assert not (p1 & ~sk2.bits).any()
+
+
+def test_subsumption_implies_safe_result_end_to_end(db):
+    """Beyond containment: serving q2 from q1's sketch instance returns the
+    exact q2 result whenever subsumes says yes (spot-check on real data)."""
+    from repro.core import apply_sketch
+
+    base = Query("crimes", ("district", "year"), Aggregate("sum", "records"))
+    agg_vals = execute(base, db).values
+    tau = float(np.quantile(agg_vals, 0.8))
+    ranges = equi_depth_ranges(db["crimes"], "district", 20)
+    rng = np.random.default_rng(3)
+    q1 = dataclasses.replace(base, having=Having(">", tau))
+    sk = capture_sketch(q1, db, ranges)
+    for _ in range(20):
+        op = str(rng.choice([">", ">="]))
+        tau2 = float(rng.choice([tau, tau + 1.0, tau * 1.2,
+                                 float(rng.choice(agg_vals))]))
+        q2 = dataclasses.replace(base, having=Having(op, tau2))
+        if not subsumes(q1, q2):
+            continue
+        got = execute(q2, apply_sketch(sk, db)).canonical()
+        assert got == execute(q2, db).canonical(), (op, tau2)
