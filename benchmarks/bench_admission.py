@@ -1,0 +1,136 @@
+"""Batched vs sequential admission on the fig9 workload shape.
+
+BENCH_fig9 showed the engine's cost is entirely on the miss path: per-miss
+candidate selection plus capture+warmup dwarf reused execution.  This
+benchmark drives a B-query cold miss batch (same inner-block signature,
+thresholds spread over the selective quantiles — the fig9 repeated-template
+regime) through ``PBDSEngine.run_batch`` and through sequential
+``PBDSEngine.run``, and compares the per-query miss-path cost
+(t_select + t_capture).  At quick scale the batched pipeline must be
+>= ``MIN_SPEEDUP``x cheaper per query at B=16, and its results, index
+contents and sketch bits must be bit-identical to sequential admission.
+
+``--json`` (via ``benchmarks.run``) writes ``BENCH_admission.json``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import time
+
+import numpy as np
+
+from benchmarks.common import bench_databases, emit
+from repro.core import Aggregate, Having, Query, execute
+from repro.core.engine import PBDSEngine
+
+BATCH_SIZES = (4, 16)
+MIN_SPEEDUP = 3.0  # enforced at quick scale, batch size 16
+
+# One inner-block signature per dataset, thresholds drawn from the selective
+# tail (quantile ranges chosen so the cost-based selector actually admits —
+# the fig9 repeated-template regime where sketches pay off).
+BASE_QUERIES = {
+    "crimes": (Query("crimes", ("district", "year"), Aggregate("sum", "records")),
+               (0.99, 0.85)),
+    "stars": (Query("stars", ("field", "run"), Aggregate("sum", "mag_g")),
+              (0.999, 0.99)),
+}
+
+
+def _miss_batch(db, base: Query, n: int, q_range):
+    """n same-signature queries, descending thresholds (no subsumption)."""
+    vals = execute(base, db).values
+    taus = np.quantile(vals, np.linspace(q_range[0], q_range[1], n))
+    return [dataclasses.replace(base, having=Having(">", float(t))) for t in taus]
+
+
+def _index_bits(eng):
+    return sorted(
+        (repr(e.query.signature()), e.sketch.bits.tobytes(), e.sketch.size_rows)
+        for e in eng.index.entries()
+    )
+
+
+def _engine(db):
+    return PBDSEngine(db, strategy="CB-OPT-GB", n_ranges=100, theta=0.05,
+                      seed=9, min_selectivity_gain=0.95)
+
+
+def run(scale: str = "quick", json_path: str | None = None):
+    rows, results = [], []
+    for ds, (base, q_range) in BASE_QUERIES.items():
+        db = bench_databases(scale)[ds]
+        for b in BATCH_SIZES:
+            qs = _miss_batch(db, base, b, q_range)
+
+            # Warm the process-wide XLA caches for BOTH paths on throwaway
+            # engines: the bench compares steady-state per-miss cost, not
+            # one-time kernel compilation (which either serving process pays
+            # exactly once per shape class).
+            warm = _engine(db)
+            for q in qs:
+                warm.run(q)
+            _engine(db).run_batch(qs)
+
+            eng_seq = _engine(db)
+            t0 = time.perf_counter()
+            seq = [eng_seq.run(q) for q in qs]
+            t_seq_wall = time.perf_counter() - t0
+            seq_miss = sum(i.t_select + i.t_capture for _, i in seq) / b
+
+            eng_bat = _engine(db)
+            t0 = time.perf_counter()
+            bat = eng_bat.run_batch(qs)
+            t_bat_wall = time.perf_counter() - t0
+            bat_miss = sum(i.t_select + i.t_capture for _, i in bat) / b
+
+            # Bit-identical admission: results, index contents, sketch bits.
+            for (rs, _), (rb, _) in zip(seq, bat):
+                assert rs.canonical() == rb.canonical(), "batched result diverged"
+            assert _index_bits(eng_seq) == _index_bits(eng_bat), (
+                "batched admission built a different index")
+
+            n_created = sum(1 for _, i in bat if i.created)
+            speedup = seq_miss / max(bat_miss, 1e-9)
+            if scale == "quick" and b == max(BATCH_SIZES):
+                assert speedup >= MIN_SPEEDUP, (
+                    f"{ds}: batched admission only {speedup:.2f}x cheaper per "
+                    f"query at B={b} (need >= {MIN_SPEEDUP}x)")
+            results.append(dict(
+                dataset=ds,
+                batch_size=b,
+                n_created=n_created,
+                seq_miss_per_query_s=round(seq_miss, 6),
+                bat_miss_per_query_s=round(bat_miss, 6),
+                seq_wall_s=round(t_seq_wall, 4),
+                bat_wall_s=round(t_bat_wall, 4),
+                speedup=round(speedup, 2),
+                wall_speedup=round(t_seq_wall / max(t_bat_wall, 1e-9), 2),
+            ))
+            rows.append(("admission", ds, b, n_created,
+                         f"{seq_miss*1e3:.2f}", f"{bat_miss*1e3:.2f}",
+                         f"{speedup:.2f}",
+                         f"{t_seq_wall:.3f}", f"{t_bat_wall:.3f}"))
+
+    emit(rows, ("bench", "dataset", "batch", "created", "seq_miss_ms_per_q",
+                "bat_miss_ms_per_q", "speedup", "seq_wall_s", "bat_wall_s"))
+    if json_path:
+        with open(json_path, "w") as f:
+            json.dump({"bench": "admission", "scale": scale,
+                       "min_speedup_required": MIN_SPEEDUP,
+                       "results": results}, f, indent=2)
+        print(f"# wrote {json_path}")
+    return rows
+
+
+if __name__ == "__main__":
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--scale", choices=["quick", "full"], default="quick")
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--json", action="store_true")
+    args = ap.parse_args()
+    run("quick" if args.quick else args.scale,
+        json_path="BENCH_admission.json" if args.json else None)

@@ -40,7 +40,8 @@ def run(scale: str = "quick", n_unique: int = 8, n_repeat: int = 5, json_path: s
             eng = PBDSEngine(db, strategy=strat, n_ranges=100, theta=0.05, seed=9)
             cum = 0.0
             marks = []
-            phase = {"t_select": 0.0, "t_capture": 0.0, "t_execute": 0.0}
+            phase = {"t_select": 0.0, "t_capture": 0.0, "t_execute": 0.0,
+                     "t_probe": 0.0, "t_repair": 0.0}
             reused_exec = []
             for i, q in enumerate(workload):
                 t0 = time.perf_counter()
@@ -49,7 +50,11 @@ def run(scale: str = "quick", n_unique: int = 8, n_repeat: int = 5, json_path: s
                 phase["t_select"] += info.t_select
                 phase["t_capture"] += info.t_capture
                 phase["t_execute"] += info.t_execute
+                phase["t_probe"] += info.t_probe
+                phase["t_repair"] += info.t_repair
                 if info.reused:
+                    # Pure execution: probe/repair are reported separately
+                    # now instead of silently inflating the reuse numbers.
                     reused_exec.append(info.t_execute)
                 if (i + 1) % 10 == 0:
                     marks.append(round(cum, 3))
@@ -61,6 +66,8 @@ def run(scale: str = "quick", n_unique: int = 8, n_repeat: int = 5, json_path: s
                 t_select_s=round(phase["t_select"], 4),
                 t_capture_s=round(phase["t_capture"], 4),
                 t_execute_s=round(phase["t_execute"], 4),
+                t_probe_s=round(phase["t_probe"], 6),
+                t_repair_s=round(phase["t_repair"], 6),
                 reused_exec_mean_s=round(reused_mean, 6) if reused_mean is not None else None,
                 reused_exec_count=len(reused_exec),
                 idx_hits=eng.index.hits,
@@ -69,11 +76,12 @@ def run(scale: str = "quick", n_unique: int = 8, n_repeat: int = 5, json_path: s
             rows.append(("fig9", ds, strat, f"{cum:.3f}",
                          f"{phase['t_select']:.3f}", f"{phase['t_capture']:.3f}",
                          f"{phase['t_execute']:.3f}",
+                         f"{phase['t_probe']:.4f}", f"{phase['t_repair']:.4f}",
                          f"{reused_mean:.5f}" if reused_mean is not None else "",
                          eng.index.hits, eng.index.misses, " ".join(map(str, marks))))
     emit(rows, ("bench", "dataset", "strategy", "cum_s", "t_select_s", "t_capture_s",
-                "t_execute_s", "reused_exec_mean_s", "idx_hits", "idx_misses",
-                "cum_marks_every10"))
+                "t_execute_s", "t_probe_s", "t_repair_s", "reused_exec_mean_s",
+                "idx_hits", "idx_misses", "cum_marks_every10"))
     if json_path:
         payload = {
             "bench": "fig9",

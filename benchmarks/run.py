@@ -3,10 +3,11 @@
   PYTHONPATH=src python -m benchmarks.run [--scale quick|full] [--only NAME] [--json]
 
 Emits CSV per benchmark.  ``--json`` additionally writes ``BENCH_fig9.json``
-(per-strategy t_select/t_capture/t_execute + reused-exec means and the
-speedup over ``benchmarks/seed_fig9_baseline.json``), ``BENCH_maintenance.json``
-and ``BENCH_shard.json`` so successive PRs have a perf trajectory to compare
-against.  The dry-run/roofline artifacts are
+(per-strategy t_select/t_capture/t_execute/t_probe/t_repair + reused-exec
+means and the speedup over ``benchmarks/seed_fig9_baseline.json``),
+``BENCH_maintenance.json``, ``BENCH_shard.json`` and ``BENCH_admission.json``
+(batched vs sequential admission, >= 3x per-query miss-path floor enforced at
+quick scale) so successive PRs have a perf trajectory to compare against.  The dry-run/roofline artifacts are
 produced by ``repro.launch.dryrun`` + ``benchmarks.roofline`` (they need the
 512-device XLA flag and hence their own process).
 """
@@ -33,6 +34,7 @@ def main() -> None:
 
     from benchmarks import (
         bench_ablation,
+        bench_admission,
         bench_fig4_bootstrap,
         bench_fig7_strategies,
         bench_fig8_accuracy,
@@ -59,6 +61,10 @@ def main() -> None:
         "shard": functools.partial(
             bench_shard.run,
             json_path="BENCH_shard.json" if args.json else None,
+        ),
+        "admission": functools.partial(
+            bench_admission.run,
+            json_path="BENCH_admission.json" if args.json else None,
         ),
     }
     failed = []

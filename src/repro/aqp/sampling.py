@@ -242,3 +242,67 @@ class SampleCache:
         sample indices refer to row positions, which a re-cluster permutes)."""
         for ck in [ck for ck in self._cache if ck[0] == table_name]:
             del self._cache[ck]
+
+
+def aqr_cache_key(q: "Query", table: "ColumnTable", theta: float) -> Tuple:
+    """Cross-query AQR identity: everything ``aqr_estimates`` consumes.
+
+    ``Query.inner_signature()`` deliberately excludes the HAVING chain —
+    per-group aggregate estimates do not depend on it — so a batch of
+    concurrent queries differing only in thresholds maps to ONE cache slot.
+    Versioned on the table lineage token: a mutation invalidates by key
+    mismatch, no eviction protocol needed.
+    """
+    return (table.uid, table.version, theta) + q.inner_signature()
+
+
+class AQRCache:
+    """Sec. 7.1 reuse, one level up: cache *AQR estimate passes* per
+    (table version, inner-block signature, theta).
+
+    The stratified sample is already shared across same-group-by queries via
+    ``SampleCache``; this shares the per-group estimate math built on top of
+    it, which is candidate- and threshold-independent (Alg. 1's estimates
+    feed every HAVING through ``satisfied_groups`` at group-level cost).
+    Entries also pin the per-group ever-sampled mask so that a later
+    re-sample of the same table version (e.g. after ``cluster_by``
+    invalidated row indices) cannot shift the satisfied set of queries that
+    already share this pass.
+    """
+
+    def __init__(self, max_entries: int = 256):
+        self._cache: Dict[Tuple, Tuple[object, np.ndarray]] = {}
+        self.max_entries = max_entries
+        self.hits = 0
+        self.misses = 0
+
+    def get_or_compute(
+        self,
+        key: jax.Array,
+        q: "Query",
+        db: "Database",
+        samples: SampleSet,
+        theta: float,
+        cfg,
+    ) -> Tuple[object, np.ndarray]:
+        """(GroupEstimates, per-group sampled mask) for ``q``'s inner block."""
+        from repro.aqp.size_estimation import aqr_estimates
+
+        ck = aqr_cache_key(q, db[q.table], theta)
+        hit = self._cache.get(ck)
+        if hit is not None:
+            self.hits += 1
+            return hit
+        self.misses += 1
+        est = aqr_estimates(key, q, db, samples, cfg)
+        entry = (est, samples.sample_sizes > 0)
+        if len(self._cache) >= self.max_entries:
+            self._cache.pop(next(iter(self._cache)))
+        self._cache[ck] = entry
+        return entry
+
+    def invalidate(self, table_name: str) -> None:
+        # Key layout: (uid, version, theta) + inner_signature, whose first
+        # element is the table name.
+        for ck in [ck for ck in self._cache if ck[3] == table_name]:
+            del self._cache[ck]

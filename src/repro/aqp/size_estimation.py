@@ -14,8 +14,9 @@ incidence pairs from the sample.
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
-from typing import TYPE_CHECKING, Dict, Mapping, Optional, Tuple
+from typing import TYPE_CHECKING, Dict, List, Mapping, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -60,15 +61,21 @@ class EstimationConfig:
     use_bootstrap: bool = True
 
 
-def approximate_query_result(
+def aqr_estimates(
     key: jax.Array,
     q: "Query",
     db: "Database",
     samples: SampleSet,
     cfg: EstimationConfig = EstimationConfig(),
     join_index: Optional[JoinIndex] = None,
-) -> Tuple[GroupEstimates, np.ndarray]:
-    """Algorithm 1 (AQR): per-group estimates + satisfied-group mask G'."""
+) -> GroupEstimates:
+    """Algorithm 1's estimation half: per-group aggregate estimates.
+
+    Depends only on the query's FROM/WHERE/GROUP BY/aggregate — not on the
+    HAVING chain — so concurrent queries differing only in thresholds share
+    one pass (the batched admission pipeline's AQR cache keys on exactly the
+    inputs consumed here).
+    """
     fact = db[q.table]
     sample_rows = fact.gather(jnp.asarray(samples.indices))
     kb, kw = jax.random.split(key)
@@ -126,16 +133,37 @@ def approximate_query_result(
             half_width=cfg.z * np.maximum(est.sigma, boot_sigma),
             n_samples=est.n_samples,
         )
+    return est
 
+
+def satisfied_groups(q: "Query", est: GroupEstimates, sampled: np.ndarray) -> np.ndarray:
+    """HAVING over the estimates -> the satisfied-group mask G'.
+
+    ``sampled`` is the per-group ever-sampled mask (``sample_sizes > 0``);
+    group-level work only, so every query sharing an estimate pass applies its
+    own threshold for free.
+    """
     if q.having is not None:
         from repro.core.queries import _OPS
 
         satisfied = np.asarray(_OPS[q.having.op](est.estimate, q.having.value))
     else:
-        satisfied = np.ones(samples.n_groups, dtype=bool)
+        satisfied = np.ones(est.estimate.shape[0], dtype=bool)
     # Groups never sampled under the predicate contribute nothing.
-    satisfied &= samples.sample_sizes > 0
-    return est, satisfied
+    return satisfied & sampled
+
+
+def approximate_query_result(
+    key: jax.Array,
+    q: "Query",
+    db: "Database",
+    samples: SampleSet,
+    cfg: EstimationConfig = EstimationConfig(),
+    join_index: Optional[JoinIndex] = None,
+) -> Tuple[GroupEstimates, np.ndarray]:
+    """Algorithm 1 (AQR): per-group estimates + satisfied-group mask G'."""
+    est = aqr_estimates(key, q, db, samples, cfg, join_index)
+    return est, satisfied_groups(q, est, samples.sample_sizes > 0)
 
 
 def _sample_incidence(
@@ -157,13 +185,12 @@ def _sample_incidence(
     fact = db[q.table]
     parts = getattr(ranges, "parts", (ranges,))
     if all(r.attr in samples.groupby for r in parts):
-        # GB fast path: the group key pins the fragment — exact.  For a
-        # composite partition the row-major cross-product id is assembled
-        # from the per-attribute group-value buckets.
-        frag_of_group = None
-        for r in parts:
-            b = np.asarray(r.bucketize(jnp.asarray(samples.group_values[r.attr])))
-            frag_of_group = b if frag_of_group is None else frag_of_group * r.n_ranges + b
+        # GB fast path: the group key pins the fragment — exact.  The
+        # fragment-of-group vector is a catalog cache per (table version,
+        # group-by, partition), so repeated estimates stop re-bucketizing
+        # the group values.
+        frag_of_group = catalog.frag_of_group(
+            fact, ranges, samples.groupby, samples.group_values)
         gids = np.nonzero(satisfied)[0]
         return frag_of_group[gids], gids
     row_sat = satisfied[samples.sample_gid]
@@ -231,12 +258,19 @@ def _candidate_incidence(
     return _sample_incidence(q, db, samples, ranges, satisfied, catalog)
 
 
+# Retrace telemetry: the counter bumps at *trace* time only, so tests can
+# assert that pow2 padding keeps differently-shaped candidate sets inside one
+# compiled size class (a steady workload must not retrace the selection math).
+TRACE_COUNTS: collections.Counter = collections.Counter()
+
+
 def _incidence_pass(frag, valid, p_pair, sizes):
     """Alg. 2 + Def. 9 for one candidate from deduped (frag, group) pairs.
 
     frag (P,) int32, valid (P,) bool padding mask, p_pair (P,) f32 pass
     probabilities, sizes (R,) f32 fragment sizes.  Vmapped over candidates.
     """
+    TRACE_COUNTS["incidence_pass"] += 1
     n_r = sizes.shape[0]
     vf = valid.astype(jnp.float32)
     hits = jnp.zeros(n_r, jnp.float32).at[frag].max(vf)
@@ -256,6 +290,98 @@ def _incidence_pass(frag, valid, p_pair, sizes):
 _incidence_pass_batch = jax.jit(jax.vmap(_incidence_pass))
 
 
+def _next_pow2(n: int) -> int:
+    return 1 << max(0, (n - 1)).bit_length()
+
+
+@dataclasses.dataclass(frozen=True)
+class EstimationSpec:
+    """One query's candidate-estimation request inside a multi-query batch."""
+
+    q: "Query"
+    samples: SampleSet
+    ranges_by_attr: Mapping[str, "RangeSet"]
+    aqr: Tuple[GroupEstimates, np.ndarray]  # (estimates, satisfied mask)
+
+
+def estimate_size_multi(
+    db: "Database",
+    specs: Sequence[EstimationSpec],
+    cfg: EstimationConfig = EstimationConfig(),
+    catalog: "Optional[Catalog]" = None,
+) -> List[Dict[str, SizeEstimate]]:
+    """Algorithm 2 + Def. 9 for a whole *batch of queries* in one device pass.
+
+    Flattens every (query, candidate) pair into one padded incidence matrix —
+    rows to pow2 pairs, columns to pow2 fragment counts, and the leading
+    (query x candidate) dimension to pow2 — so the entire batch's selection
+    math is a single ``_incidence_pass_batch`` launch that stays inside a
+    small set of compiled size classes.  The per-candidate loop only
+    assembles host-side (frag, group) incidence pairs; fragment sizes and
+    bucketizations come from the catalog's (delta-refreshed) caches.
+
+    Candidates may mix single-attribute ``RangeSet``s and cross-product
+    ``CompositeRanges``; the mapping key is an opaque label echoed back in
+    the per-spec result dict.
+    """
+    catalog = _catalog(catalog)
+    rows = []  # (spec_idx, attr, ranges, frag, gids, p_g)
+    for si, spec in enumerate(specs):
+        if not spec.ranges_by_attr:
+            continue
+        est, satisfied = spec.aqr
+        p_g = _pass_probabilities(spec.q, est)
+        for a, ranges in spec.ranges_by_attr.items():
+            frag, gids = _candidate_incidence(
+                spec.q, db, spec.samples, ranges, satisfied, cfg, catalog)
+            rows.append((si, a, ranges, frag, gids, p_g))
+    out: List[Dict[str, SizeEstimate]] = [{} for _ in specs]
+    if not rows:
+        return out
+
+    n_rows = len(rows)
+    n_rows_p = _next_pow2(n_rows)
+    max_pairs = _next_pow2(max(1, max(len(r[3]) for r in rows)))
+    # Pad the fragment axis to pow2 too: candidate sets whose n_ranges differ
+    # (equi-depth bound dedupe, mixed composites) land in one size class.
+    max_r = _next_pow2(max(r[2].n_ranges for r in rows))
+
+    frag_mat = np.zeros((n_rows_p, max_pairs), dtype=np.int32)
+    valid_mat = np.zeros((n_rows_p, max_pairs), dtype=bool)
+    p_mat = np.zeros((n_rows_p, max_pairs), dtype=np.float32)
+    sizes_mat = np.zeros((n_rows_p, max_r), dtype=np.float32)
+    for i, (si, a, ranges, frag, gids, p_g) in enumerate(rows):
+        k = len(frag)
+        frag_mat[i, :k] = frag
+        valid_mat[i, :k] = True
+        p_mat[i, :k] = p_g[gids]
+        sizes_mat[i, : ranges.n_ranges] = catalog.fragment_sizes(
+            db[specs[si].q.table], ranges)
+
+    bits_b, est_b, exp_b, lo_b, hi_b = _incidence_pass_batch(
+        jnp.asarray(frag_mat), jnp.asarray(valid_mat), jnp.asarray(p_mat),
+        jnp.asarray(sizes_mat),
+    )
+    bits_b = np.asarray(bits_b)
+    est_b, exp_b = np.asarray(est_b), np.asarray(exp_b)
+    lo_b, hi_b = np.asarray(lo_b), np.asarray(hi_b)
+
+    for i, (si, a, ranges, frag, gids, p_g) in enumerate(rows):
+        spec = specs[si]
+        total = max(db[spec.q.table].num_rows, 1)
+        out[si][a] = SizeEstimate(
+            attr=a,
+            est_rows=float(est_b[i]),
+            est_selectivity=float(est_b[i]) / total,
+            expected_rows=float(exp_b[i]),
+            lo_rows=float(lo_b[i]),
+            hi_rows=float(hi_b[i]),
+            est_bits=bits_b[i, : ranges.n_ranges],
+            n_satisfied_groups=int(spec.aqr[1].sum()),
+        )
+    return out
+
+
 def estimate_size_batched(
     key: jax.Array,
     q: "Query",
@@ -266,74 +392,19 @@ def estimate_size_batched(
     aqr: Optional[Tuple[GroupEstimates, np.ndarray]] = None,
     catalog: "Optional[Catalog]" = None,
 ) -> Dict[str, SizeEstimate]:
-    """Algorithm 2 + Def. 9 for *all* candidates in one vmapped device pass.
+    """Algorithm 2 + Def. 9 for *all* candidates of one query in one pass.
 
     One shared AQR pass (the estimates are candidate-independent), then the
-    per-fragment scatter math for every candidate runs as a single batched
-    kernel over padded (frag, group) incidence pairs.  Fragment sizes and
-    full-table bucketizations come from the catalog's caches; on an appended
-    table both delta-refresh (prior per-fragment counts plus a batch-sized
-    pass), so candidate selection after a mutation never re-bucketizes the
-    whole relation.
-
-    Candidates may mix single-attribute ``RangeSet``s and cross-product
-    ``CompositeRanges`` (CB-OPT-GB2's pair candidates); the mapping key is an
-    opaque label echoed back in the result dict.
+    per-fragment scatter math for every candidate runs through the same
+    padded batch launch ``estimate_size_multi`` uses for whole query batches.
     """
     catalog = _catalog(catalog)
     if not ranges_by_attr:
         return {}
-    est, satisfied = aqr if aqr is not None else approximate_query_result(key, q, db, samples, cfg)
-    p_g = _pass_probabilities(q, est)
-    fact = db[q.table]
-    total = max(fact.num_rows, 1)
-    n_sat = int(satisfied.sum())
-
-    attrs = list(ranges_by_attr)
-    incid = []
-    for a in attrs:
-        ranges = ranges_by_attr[a]
-        frag, gids = _candidate_incidence(q, db, samples, ranges, satisfied, cfg, catalog)
-        incid.append((ranges, frag, gids))
-
-    n_cands = len(attrs)
-    max_pairs = max(1, max(len(f) for _, f, _ in incid))
-    max_pairs = 1 << (max_pairs - 1).bit_length()  # quantize: fewer recompiles
-    max_r = max(r.n_ranges for r, _, _ in incid)
-
-    frag_mat = np.zeros((n_cands, max_pairs), dtype=np.int32)
-    valid_mat = np.zeros((n_cands, max_pairs), dtype=bool)
-    p_mat = np.zeros((n_cands, max_pairs), dtype=np.float32)
-    sizes_mat = np.zeros((n_cands, max_r), dtype=np.float32)
-    for i, (ranges, frag, gids) in enumerate(incid):
-        k = len(frag)
-        frag_mat[i, :k] = frag
-        valid_mat[i, :k] = True
-        p_mat[i, :k] = p_g[gids]
-        sizes_mat[i, : ranges.n_ranges] = catalog.fragment_sizes(fact, ranges)
-
-    bits_b, est_b, exp_b, lo_b, hi_b = _incidence_pass_batch(
-        jnp.asarray(frag_mat), jnp.asarray(valid_mat), jnp.asarray(p_mat),
-        jnp.asarray(sizes_mat),
-    )
-    bits_b = np.asarray(bits_b)
-    est_b, exp_b = np.asarray(est_b), np.asarray(exp_b)
-    lo_b, hi_b = np.asarray(lo_b), np.asarray(hi_b)
-
-    out: Dict[str, SizeEstimate] = {}
-    for i, a in enumerate(attrs):
-        ranges = ranges_by_attr[a]
-        out[a] = SizeEstimate(
-            attr=a,
-            est_rows=float(est_b[i]),
-            est_selectivity=float(est_b[i]) / total,
-            expected_rows=float(exp_b[i]),
-            lo_rows=float(lo_b[i]),
-            hi_rows=float(hi_b[i]),
-            est_bits=bits_b[i, : ranges.n_ranges],
-            n_satisfied_groups=n_sat,
-        )
-    return out
+    if aqr is None:
+        aqr = approximate_query_result(key, q, db, samples, cfg)
+    spec = EstimationSpec(q=q, samples=samples, ranges_by_attr=ranges_by_attr, aqr=aqr)
+    return estimate_size_multi(db, [spec], cfg, catalog)[0]
 
 
 def estimate_size(

@@ -27,6 +27,7 @@ from repro.core.sketch import (
     apply_sketch,
     capture_and_execute,
     capture_sketch,
+    capture_sketches_batch,
     execute_with_sketch,
     is_safe_sketch,
     sketch_keep_mask,
@@ -65,7 +66,8 @@ __all__ = [
     "RangeSet", "equi_depth_ranges", "equi_width_ranges", "fragment_sizes",
     "prefilter_candidates", "safe_attributes",
     "ProvenanceSketch", "apply_sketch", "capture_and_execute", "capture_sketch",
-    "execute_with_sketch", "is_safe_sketch", "sketch_keep_mask",
+    "capture_sketches_batch", "execute_with_sketch", "is_safe_sketch",
+    "sketch_keep_mask",
     "ALL_STRATEGIES", "COST_STRATEGIES", "RANDOM_STRATEGIES",
     "SelectionResult", "candidate_pool", "select_attribute",
     "ColumnTable", "Database", "FragmentLayout", "encode_groups", "from_numpy",

@@ -1,0 +1,279 @@
+"""Batched admission pipeline: the miss path of ``PBDSEngine.run_batch``.
+
+``PBDSEngine.run`` admits exactly one query at a time, so a burst of N cold
+queries pays N stratified samples, N AQR estimate passes, N full-table
+capture scans and N maintainer builds — even when the queries differ only in
+their HAVING thresholds.  Everything on that list is shareable (Sec. 7.1
+sampling reuse; Alg. 1's estimates are candidate- and threshold-independent;
+provenance for the whole group derives from one inner-block evaluation), so
+batched admission restructures the miss path around *signature groups*:
+
+  wave planning   queries whose sketch an earlier batch member would create
+                  are deferred a wave and served as plain index hits, exactly
+                  as sequential execution would serve them;
+  selection       misses are grouped by inner-block signature
+                  (table, GROUP BY, aggregate, WHERE, join); each group
+                  shares ONE stratified sample and ONE AQR estimate pass,
+                  each member applies its own HAVING at group-level cost, and
+                  the fragment-incidence math for every (query, candidate)
+                  pair in the whole wave runs as ONE padded vmapped launch
+                  (``estimate_size_multi``);
+  execution       each signature group evaluates the shared inner block ONCE;
+                  every member's result and provenance mask are group-level
+                  tails of it (bit-exact — the same code sequential execution
+                  runs per query);
+  capture         admitted sketches grouped by (table, partition) capture
+                  from stacked provenance masks in ONE batched bitmap kernel
+                  launch (``capture_sketches_batch``), and maintainers clone
+                  their threshold-independent counting state from one build
+                  per (signature, partition).
+
+Bit-for-bit parity with sequential ``run`` is a design invariant (the
+differential suite in ``tests/test_admission.py`` pins results, index
+contents and sketch bits): selection randomness is content-derived
+(``PBDSEngine._select_key``), estimate ranking compares exact integral f32
+sums, and every shared product is the same object sequential execution would
+have pulled from the caches.  The one carve-out is documented on
+``PBDSEngine.run_batch``: under ``cluster_tables=True`` the mid-batch
+re-cluster invalidates samples, so sample-position-dependent candidate
+incidence (non-group-by candidates) may select differently than a
+sequential replay that re-sampled the permuted rows.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import TYPE_CHECKING, Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+from repro.aqp.size_estimation import (
+    EstimationSpec,
+    SizeEstimate,
+    estimate_size_multi,
+    satisfied_groups,
+)
+from repro.core.index import subsumes
+from repro.core.queries import (
+    Query,
+    QueryResult,
+    execute,
+    inner_block,
+    provenance_from_inner,
+    result_from_group_state,
+)
+from repro.core.sketch import apply_sketch, capture_sketches_batch
+from repro.core.strategies import (
+    RANDOM_STRATEGIES,
+    SelectionResult,
+    candidate_pool,
+    select_attribute,
+)
+
+if TYPE_CHECKING:  # pragma: no cover - typing only
+    from repro.core.engine import PBDSEngine, RunInfo
+
+Miss = Tuple[int, Query, float]  # (batch position, query, probe seconds)
+
+
+def exec_group_key(q: Query) -> Tuple:
+    """Inner-block signature: queries with equal keys share FROM/WHERE/GROUP
+    BY/aggregate products (sample, AQR estimates, inner-block evaluation,
+    maintainer counting state) — only their HAVING chains differ."""
+    return q.inner_signature()
+
+
+def plan_wave(misses: List[Miss]) -> Tuple[List[Miss], List[Miss]]:
+    """Split one wave's misses into (admit now, defer to the next wave).
+
+    A miss is deferred when an earlier miss in the same wave subsumes it: in
+    sequential execution the earlier query's sketch would exist by the time
+    the later one runs, so the later query must be served as an index hit
+    against it — not admitted as a duplicate capture.  Deferred queries
+    re-probe after the wave lands; if the subsuming query declined to create
+    a sketch they are admitted next wave with identical (content-derived)
+    randomness, so the outcome still matches sequential order.
+    """
+    wave: List[Miss] = []
+    deferred: List[Miss] = []
+    for m in misses:
+        if any(subsumes(w[1], m[1]) for w in wave):
+            deferred.append(m)
+        else:
+            wave.append(m)
+    return wave, deferred
+
+
+def _select_wave(
+    engine: "PBDSEngine", wave: List[Miss]
+) -> Dict[int, SelectionResult]:
+    """Candidate selection for the whole wave.
+
+    Cost-based strategies share per-signature-group samples + AQR passes and
+    run every (query, candidate) incidence row through one padded device
+    launch; random/oracle strategies fall back to per-query selection with
+    their content-derived keys (no shareable math).
+    """
+    db, strategy = engine.db, engine.strategy
+    out: Dict[int, SelectionResult] = {}
+    if strategy == "NO-PS":
+        return {pos: SelectionResult("NO-PS", None, (), {}) for pos, _, _ in wave}
+    if strategy in RANDOM_STRATEGIES or strategy == "OPT":
+        for pos, q, _ in wave:
+            out[pos] = select_attribute(
+                strategy, engine._select_key(q), q, db, engine.n_ranges,
+                sample_cache=engine.samples, theta=engine.theta, cfg=engine.cfg,
+                ranges_for=lambda a, t=q.table: engine.ranges_for(t, a),
+                catalog=engine.catalog, aqr_cache=engine.aqr,
+            )
+        return out
+
+    specs: List[EstimationSpec] = []
+    spec_pos: List[int] = []
+    groups: Dict[Tuple, List[Tuple[int, Query]]] = {}
+    for pos, q, _ in wave:
+        groups.setdefault(exec_group_key(q), []).append((pos, q))
+    for members in groups.values():
+        pools = {pos: candidate_pool(strategy, q, db, engine.n_ranges,
+                                     catalog=engine.catalog)
+                 for pos, q in members}
+        for pos, q in members:
+            if not pools[pos]:
+                out[pos] = SelectionResult(strategy, None, pools[pos], {})
+        with_cands = [(pos, q) for pos, q in members if pools[pos]]
+        if not with_cands:
+            continue
+        # The sample/AQR key is the first member that actually reaches the
+        # sampling code — sequential ``run`` skips it for empty pools, so the
+        # first *viable* query's key is what the shared pass must use.
+        q0 = with_cands[0][1]
+        k_s, k_e = jax.random.split(engine._select_key(q0))
+        samples = engine.samples.get_or_create(
+            k_s, db[q0.table], q0.groupby_on_fact(db), engine.theta)
+        est, sampled = engine.aqr.get_or_compute(
+            k_e, q0, db, samples, engine.theta, engine.cfg)
+        for pos, q in with_cands:
+            specs.append(EstimationSpec(
+                q=q, samples=samples,
+                ranges_by_attr={a: engine.ranges_for(q.table, a)
+                                for a in pools[pos]},
+                aqr=(est, satisfied_groups(q, est, sampled)),
+            ))
+            spec_pos.append(pos)
+    if specs:
+        all_estimates = estimate_size_multi(db, specs, engine.cfg, engine.catalog)
+        for spec, pos, estimates in zip(specs, spec_pos, all_estimates):
+            ranking = tuple(sorted(estimates, key=lambda a: estimates[a].est_rows))
+            out[pos] = SelectionResult(
+                strategy, ranking[0], tuple(spec.ranges_by_attr), estimates,
+                topk=ranking[:1])
+    return out
+
+
+def admit_wave(
+    engine: "PBDSEngine", wave: List[Miss]
+) -> Dict[int, Tuple[QueryResult, "RunInfo"]]:
+    """Run one wave of misses through the shared pipeline; returns per-batch-
+    position ``(result, info)`` exactly like ``PBDSEngine.run`` would."""
+    from repro.core.engine import RunInfo
+    from repro.core.maintenance import SketchMaintainer
+
+    catalog = engine.catalog
+    out: Dict[int, Tuple[QueryResult, RunInfo]] = {}
+    probe_s = {pos: tp for pos, _, tp in wave}
+
+    t0 = time.perf_counter()
+    sels = _select_wave(engine, wave)
+    t_select_each = (time.perf_counter() - t0) / max(len(wave), 1)
+
+    # Worth-it partition (problem definition (i), same rule as ``run``).
+    admitted: Dict[int, object] = {}  # pos -> RangeSet of the chosen attr
+    for pos, q, _ in wave:
+        sel = sels[pos]
+        est: Optional[SizeEstimate] = (
+            sel.estimates.get(sel.attr) if sel.estimates else None)
+        if sel.attr is not None and (
+                est is None or est.est_selectivity < engine.min_selectivity_gain):
+            admitted[pos] = engine.ranges_for(q.table, sel.attr)
+
+    # Physical re-layout happens before the shared scans, mirroring the
+    # sequential order (select -> cluster -> capture).
+    for pos, q, _ in wave:
+        if pos in admitted:
+            engine._maybe_cluster(q.table, admitted[pos])
+    db = engine.db  # clustering may have replaced tables
+
+    # One inner-block evaluation per signature group feeds every member's
+    # result and, for admitted members, the provenance its sketch captures.
+    exec_groups: Dict[Tuple, List[Tuple[int, Query]]] = {}
+    for pos, q, _ in wave:
+        exec_groups.setdefault(exec_group_key(q), []).append((pos, q))
+    results: Dict[int, QueryResult] = {}
+    provs: Dict[int, np.ndarray] = {}
+    t_exec: Dict[int, float] = {}
+    for members in exec_groups.values():
+        te0 = time.perf_counter()
+        ib = inner_block(db, members[0][1], catalog)
+        ib_share = (time.perf_counter() - te0) / len(members)
+        n_fact = db[members[0][1].table].num_rows
+        for pos, q in members:
+            tq0 = time.perf_counter()
+            results[pos] = result_from_group_state(
+                q, ib.group_values, ib.agg_np, ib.present)
+            if pos in admitted:
+                provs[pos] = provenance_from_inner(q, ib, n_fact)
+            t_exec[pos] = ib_share + (time.perf_counter() - tq0)
+
+    # Fused capture: one bucketize + one batched bitmap launch per partition.
+    adm_pos = [pos for pos, _, _ in wave if pos in admitted]
+    t_capture: Dict[int, float] = {pos: 0.0 for pos in adm_pos}
+    sketches: Dict[int, object] = {}
+    if adm_pos:
+        q_of = {pos: q for pos, q, _ in wave}
+        tc0 = time.perf_counter()
+        sk_list = capture_sketches_batch(
+            [q_of[pos] for pos in adm_pos], db,
+            [admitted[pos] for pos in adm_pos],
+            [provs[pos] for pos in adm_pos], catalog=catalog)
+        cap_share = (time.perf_counter() - tc0) / len(adm_pos)
+        sketches = dict(zip(adm_pos, sk_list))
+
+        # Maintainer counting state is HAVING-independent: build once per
+        # (signature group, partition), clone for the rest of the group.
+        bases: Dict[Tuple, SketchMaintainer] = {}
+        for pos in adm_pos:
+            q, ranges, sketch = q_of[pos], admitted[pos], sketches[pos]
+            tm0 = time.perf_counter()
+            bk = (exec_group_key(q), ranges.key())
+            base = bases.get(bk)
+            if base is None:
+                maintainer = SketchMaintainer(q, db, ranges, catalog)
+                bases[bk] = maintainer
+            else:
+                maintainer = base.clone_for(q, db, catalog)
+            engine.index.insert(q, sketch, maintainer=maintainer)
+            # Warm the reuse path while we are already paying capture cost
+            # (instance materialization + compiled shapes), same as ``run``.
+            execute(q, apply_sketch(sketch, db, catalog=catalog), catalog=catalog)
+            t_capture[pos] = cap_share + (time.perf_counter() - tm0)
+
+    for pos, q, _ in wave:
+        sel = sels[pos]
+        if pos in sketches:
+            sketch = sketches[pos]
+            info = RunInfo(
+                reused=False, created=True, attr=sel.attr,
+                strategy=engine.strategy, selectivity=sketch.selectivity,
+                t_probe=probe_s[pos], t_select=t_select_each,
+                t_capture=t_capture[pos], t_execute=t_exec[pos],
+            )
+        else:
+            info = RunInfo(
+                reused=False, created=False, attr=None,
+                strategy=engine.strategy, selectivity=None,
+                t_probe=probe_s[pos], t_select=t_select_each,
+                t_execute=t_exec[pos],
+            )
+        out[pos] = (results[pos], info)
+    return out

@@ -193,6 +193,15 @@ class Catalog:
         self._distinct: Dict[Tuple[int, str], Tuple[ColumnTable, int, np.ndarray]] = {}
         self._nonneg: Dict[Tuple[int, str], Tuple[ColumnTable, bool]] = {}
         self._wheres: Dict[Tuple[int, Tuple], Tuple[ColumnTable, Array]] = {}
+        # GB fast-path fragment-of-group vectors, keyed by (uid, version,
+        # group-by, partition) — *value* keys, not id(): the vector is a pure
+        # function of the group dictionary (deterministic per table version)
+        # and the partition bounds, so it survives re-samples and re-clusters.
+        self._frag_groups: Dict[Tuple, np.ndarray] = {}
+        # Instance -> (base table, base-row index per instance row): lets
+        # ``groups``/``where_mask`` on a sketch instance gather from the base
+        # table's cached products instead of fresh full host passes.
+        self._instance_rows: Dict[int, Tuple[ColumnTable, ColumnTable, np.ndarray]] = {}
 
     def clear(self) -> None:
         self.__init__(max_entries=self.max_entries)
@@ -216,6 +225,9 @@ class Catalog:
             del self._joins[k]
         for k in [k for k in self._instances if k[1] == tid]:
             del self._instances[k]
+        for k in [k for k, v in self._instance_rows.items()
+                  if k == tid or v[1] is table]:
+            del self._instance_rows[k]
 
     def invalidate_chain(self, table: ColumnTable) -> None:
         """Invalidate ``table`` and every ancestor on its delta chain.
@@ -236,6 +248,27 @@ class Catalog:
         if hit is not None and hit[0] is table:
             self.stats["encode_groups_hit"] += 1
             return hit[1]
+        parent = self._instance_parent(table) if attrs else None
+        if parent is not None:
+            # Sketch instance: derive from the base table's cached encoding
+            # by a gather + dense renumber.  ``np.unique(axis=0)`` numbers
+            # groups lexicographically, so restricting the base numbering to
+            # the present groups (order-preserving) reproduces a from-scratch
+            # encode of the instance bit-for-bit — in O(rows + groups)
+            # instead of an O(n log n) host sort per instance.
+            base, rows = parent
+            base_enc = self.groups(base, attrs)
+            gid_rows = base_enc.gid[rows]
+            counts = np.bincount(gid_rows, minlength=base_enc.n_groups)
+            present = counts > 0
+            new_of_base = np.cumsum(present) - 1
+            gid = new_of_base[gid_rows].astype(np.int32)
+            n_groups = int(present.sum())
+            group_values = {a: v[present] for a, v in base_enc.group_values.items()}
+            enc = GroupEncoding(gid, jnp.asarray(gid), n_groups, group_values)
+            self.stats["encode_groups_instance"] += 1
+            self._put(self._groups, key, (table, enc))
+            return enc
         d = table.delta
         if d is not None and attrs:
             parent = self.groups(d.parent, attrs)
@@ -286,6 +319,39 @@ class Catalog:
         bucket = self._bucketize_raw(table, ranges)
         self._put(self._buckets, key, (table, bucket))
         return bucket
+
+    def frag_of_group(
+        self,
+        table: ColumnTable,
+        ranges: "RangeSet",
+        groupby: Tuple[str, ...],
+        group_values: Dict[str, np.ndarray],
+    ) -> np.ndarray:
+        """Fragment id per *group* under a partition on group-by attributes.
+
+        The CB-OPT-GB fast path's vector: when every partition attribute is a
+        group-by attribute the group key pins the fragment exactly, so the
+        bucketization of the per-group key values answers incidence for every
+        estimate over this (table version, group-by, partition) — cached here
+        instead of re-bucketizing the group values on each estimate.
+        Composite partitions assemble the row-major cross-product id.
+        """
+        key = (table.uid, table.version, tuple(groupby), ranges.key())
+        hit = self._frag_groups.get(key)
+        n_groups = len(next(iter(group_values.values()))) if group_values else 1
+        if hit is not None and hit.shape[0] == n_groups:
+            self.stats["frag_of_group_hit"] += 1
+            return hit
+        self.stats["frag_of_group"] += 1
+        parts = getattr(ranges, "parts", (ranges,))
+        frag = None
+        for r in parts:
+            b = np.asarray(r.bucketize(jnp.asarray(group_values[r.attr])))
+            frag = b if frag is None else frag * r.n_ranges + b
+        if len(self._frag_groups) >= self.max_entries:
+            self._frag_groups.pop(next(iter(self._frag_groups)))
+        self._frag_groups[key] = frag
+        return frag
 
     def cached_bucket(self, table: ColumnTable, ranges: "RangeSet") -> Optional[Array]:
         """The full bucket vector iff it is available without full-table work.
@@ -356,6 +422,13 @@ class Catalog:
         if hit is not None and hit[0] is table:
             self.stats["where_mask_hit"] += 1
             return hit[1]
+        parent = self._instance_parent(table)
+        if parent is not None:
+            base, rows = parent
+            mask = jnp.take(self.where_mask(base, pred), jnp.asarray(rows), axis=0)
+            self.stats["where_mask_instance"] += 1
+            self._put(self._wheres, key, (table, mask))
+            return mask
         d = table.delta
         if d is not None:
             parent_mask = self.where_mask(d.parent, pred)
@@ -422,9 +495,24 @@ class Catalog:
             return hit[2]
         return None
 
-    def put_instance(self, sketch: object, table: ColumnTable, instance: ColumnTable) -> None:
+    def put_instance(self, sketch: object, table: ColumnTable,
+                     instance: ColumnTable, rows: Optional[np.ndarray] = None) -> None:
         self.stats["instance_build"] += 1
         self._put(self._instances, (id(sketch), id(table)), (sketch, table, instance))
+        if rows is not None:
+            # Remember the subset map so the instance's group encodings and
+            # WHERE masks derive from the base table's cached ones by a
+            # gather (``groups`` / ``where_mask`` consult this first).
+            self._put(self._instance_rows, id(instance),
+                      (instance, table, np.asarray(rows)))
+
+    def _instance_parent(
+        self, table: ColumnTable
+    ) -> Optional[Tuple[ColumnTable, np.ndarray]]:
+        hit = self._instance_rows.get(id(table))
+        if hit is not None and hit[0] is table:
+            return hit[1], hit[2]
+        return None
 
     # -- cheap per-attribute statistics ---------------------------------------
     def distinct_count(self, table: ColumnTable, attr: str) -> int:

@@ -4,10 +4,17 @@ For each incoming query:
   1. probe the sketch index; on a hit, run the instrumented query over the
      catalog-cached sketch instance (fragment skipping, no per-row scan);
   2. otherwise run the configured candidate-selection strategy (sampling is
-     cached/reused per Sec. 7.1), capture an accurate sketch on the chosen
-     attribute via the fused capture+execute path, store it, and return the
-     shared result;
+     cached/reused per Sec. 7.1, AQR estimate passes are cached
+     threshold-independently per table version), capture an accurate sketch
+     on the chosen attribute via the fused capture+execute path, store it,
+     and return the shared result;
   3. when no viable candidate exists, fall back to NO-PS execution.
+
+``run_batch`` accepts a batch of concurrent queries and routes the misses
+through the batched admission pipeline (``repro.core.admission``): grouped
+shared-sample/shared-AQR selection in one padded device launch, one
+inner-block scan per signature group, and multi-sketch fused capture —
+bit-identical to sequential ``run`` but with the per-miss cost shared.
 
 All repeated host work (group-by dictionary encoding, join materialization,
 bucketization, distinct counts, sketch instances) lives in the engine's
@@ -21,12 +28,13 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Dict, Mapping, Optional, Tuple
+import zlib
+from typing import Dict, List, Mapping, Optional, Sequence, Tuple
 
 import jax
 import numpy as np
 
-from repro.aqp.sampling import SampleCache
+from repro.aqp.sampling import AQRCache, SampleCache
 from repro.aqp.size_estimation import EstimationConfig
 from repro.core.catalog import Catalog
 from repro.core.index import IndexEntry, SketchIndex
@@ -48,6 +56,11 @@ class RunInfo:
     t_select: float = 0.0
     t_capture: float = 0.0
     t_execute: float = 0.0
+    # Reused-path timing split: ``t_probe`` is the index lookup, ``t_repair``
+    # the bring-current work on a mutated table (both used to hide inside
+    # ``t_execute``, silently inflating the reuse numbers).
+    t_probe: float = 0.0
+    t_repair: float = 0.0
     # Index hit on a mutated table: the sketch was brought current before use
     # (incrementally maintained, or re-captured when maintenance refused —
     # catalog.stats['sketch_maintained'/'sketch_recaptured'] tell them apart).
@@ -60,7 +73,7 @@ class RunInfo:
 
     @property
     def t_total(self) -> float:
-        return self.t_select + self.t_capture + self.t_execute
+        return self.t_probe + self.t_select + self.t_capture + self.t_repair + self.t_execute
 
 
 class PBDSEngine:
@@ -84,9 +97,10 @@ class PBDSEngine:
         self.cfg = cfg
         self.index = SketchIndex()
         self.samples = SampleCache()
+        self.aqr = AQRCache()
         self.catalog = Catalog()
         self.cluster_tables = cluster_tables
-        self._key = jax.random.PRNGKey(seed)
+        self._base_key = jax.random.PRNGKey(seed)
         self._ranges_cache: Dict[Tuple[str, str], RangeSet] = {}
         # Delta chains pin every prior version's columns; past this depth the
         # engine advances all maintainers and collapses the history.
@@ -101,9 +115,17 @@ class PBDSEngine:
         # and drops row-position caches, the same trade as cluster_by.
         self.compact_tail_frac = compact_tail_frac
 
-    def _next_key(self) -> jax.Array:
-        self._key, k = jax.random.split(self._key)
-        return k
+    def _select_key(self, q: Query) -> jax.Array:
+        """Per-query selection randomness, derived from query *content*.
+
+        A chained key stream would make the engine's choices depend on the
+        order misses happen to arrive in; folding the query signature into
+        the seed key instead makes sequential ``run`` and batched
+        ``run_batch`` admission draw identical randomness for identical
+        queries — the invariant the differential admission suite pins.
+        """
+        h = zlib.crc32(repr(q.signature()).encode()) & 0x7FFFFFFF
+        return jax.random.fold_in(self._base_key, h)
 
     def ranges_for(self, table: str, attr: str) -> RangeSet:
         ck = (table, attr)
@@ -209,25 +231,28 @@ class PBDSEngine:
     def run(self, q: Query) -> Tuple[QueryResult, RunInfo]:
         t0 = time.perf_counter()
         entry = self.index.lookup_entry(q) if self.strategy != "NO-PS" else None
+        tp = time.perf_counter()
         if entry is not None:
             sketch, repaired = self._current_sketch(entry)
+            tr = time.perf_counter()
             res = execute_with_sketch(q, self.db, sketch, catalog=self.catalog)
             t1 = time.perf_counter()
             return res, RunInfo(
                 reused=True, created=False, attr=sketch.attr, strategy=self.strategy,
-                selectivity=sketch.selectivity, t_execute=t1 - t0, repaired=repaired,
+                selectivity=sketch.selectivity, t_probe=tp - t0, t_repair=tr - tp,
+                t_execute=t1 - tr, repaired=repaired,
             )
 
         if self.strategy == "NO-PS":
             res = execute(q, self.db, catalog=self.catalog)
             return res, RunInfo(False, False, None, "NO-PS", None,
-                                t_execute=time.perf_counter() - t0)
+                                t_execute=time.perf_counter() - tp, t_probe=tp - t0)
 
         sel = select_attribute(
-            self.strategy, self._next_key(), q, self.db, self.n_ranges,
+            self.strategy, self._select_key(q), q, self.db, self.n_ranges,
             sample_cache=self.samples, theta=self.theta, cfg=self.cfg,
             ranges_for=lambda a: self.ranges_for(q.table, a),
-            catalog=self.catalog,
+            catalog=self.catalog, aqr_cache=self.aqr,
         )
         t1 = time.perf_counter()
 
@@ -239,7 +264,7 @@ class PBDSEngine:
             res = execute(q, self.db, catalog=self.catalog)
             t2 = time.perf_counter()
             return res, RunInfo(False, False, None, self.strategy, None,
-                                t_select=t1 - t0, t_execute=t2 - t1)
+                                t_probe=tp - t0, t_select=t1 - tp, t_execute=t2 - t1)
 
         ranges = self.ranges_for(q.table, sel.attr)
         self._maybe_cluster(q.table, ranges)
@@ -262,6 +287,63 @@ class PBDSEngine:
         t3 = time.perf_counter()
         return res, RunInfo(
             reused=False, created=True, attr=sel.attr, strategy=self.strategy,
-            selectivity=sketch.selectivity,
-            t_select=t1 - t0, t_capture=(tc - t1) + (t3 - t2), t_execute=t2 - tc,
+            selectivity=sketch.selectivity, t_probe=tp - t0,
+            t_select=t1 - tp, t_capture=(tc - t1) + (t3 - t2), t_execute=t2 - tc,
         )
+
+    def run_batch(self, qs: Sequence[Query]) -> List[Tuple[QueryResult, RunInfo]]:
+        """Batched admission: serve index hits immediately, admit the misses
+        through the shared-selection / fused-capture pipeline.
+
+        Semantically equivalent to ``[self.run(q) for q in qs]`` — results,
+        index contents and sketch bits are pinned bit-identical by
+        ``tests/test_admission.py``.  One carve-out: with
+        ``cluster_tables=True`` the first admission physically re-clusters
+        the table mid-batch and invalidates cached samples; sequential
+        execution then re-samples the permuted rows for later same-batch
+        misses while the batch shares the pre-cluster sample, so strategies
+        whose candidate incidence depends on sample *row positions*
+        (non-group-by candidates, e.g. CB-OPT-REL/CB-OPT) may choose
+        differently.  Group-by-candidate strategies (CB-OPT-GB, the default
+        regime) pin incidence on group values and stay bit-identical either
+        way.  The miss-path cost is shared:
+        misses are grouped by inner-block signature so each group pays ONE
+        stratified sample, ONE AQR estimate pass, and ONE table scan feeding
+        every admitted sketch's provenance; all selection math runs as a
+        single padded (query x candidate) device launch, and capture emits B
+        bitvectors from one bucketization.  Queries whose sketch would be
+        created by an earlier query in the same batch are deferred a wave and
+        served as ordinary index hits, exactly as sequential execution would.
+        """
+        from repro.core.admission import admit_wave, plan_wave
+
+        out: List[Optional[Tuple[QueryResult, RunInfo]]] = [None] * len(qs)
+        pending: List[Tuple[int, Query]] = list(enumerate(qs))
+        while pending:
+            misses: List[Tuple[int, Query, float]] = []
+            for i, q in pending:
+                t0 = time.perf_counter()
+                entry = self.index.lookup_entry(q) if self.strategy != "NO-PS" else None
+                tp = time.perf_counter()
+                if entry is None:
+                    misses.append((i, q, tp - t0))
+                    continue
+                sketch, repaired = self._current_sketch(entry)
+                tr = time.perf_counter()
+                res = execute_with_sketch(q, self.db, sketch, catalog=self.catalog)
+                out[i] = (res, RunInfo(
+                    reused=True, created=False, attr=sketch.attr,
+                    strategy=self.strategy, selectivity=sketch.selectivity,
+                    t_probe=tp - t0, t_repair=tr - tp,
+                    t_execute=time.perf_counter() - tr, repaired=repaired,
+                ))
+            if not misses:
+                break
+            # NO-PS never creates sketches, so within-batch deferral is moot.
+            wave, deferred = (
+                plan_wave(misses) if self.strategy != "NO-PS" else (misses, []))
+            served = admit_wave(self, wave)
+            for i, item in served.items():
+                out[i] = item
+            pending = [(i, q) for i, q, _ in deferred]
+        return out  # type: ignore[return-value]

@@ -118,6 +118,10 @@ class SketchMaintainer:
         # so group flips touch one row; the build loop is over *deduped*
         # (group, fragment) pairs, bounded by n_groups x n_fragments.
         self.incidence: List[Dict[int, int]] = [dict() for _ in range(self.n_groups)]
+        # All rows start owned; ``clone_for`` flips rows to shared (copy-on-
+        # write) so a batch of same-signature maintainers does not duplicate
+        # O(groups) dictionaries per query.
+        self._row_owned = np.ones(self.n_groups, dtype=bool)
         pairs, cnts = np.unique(
             np.stack([enc.gid[where], frag[where]], axis=1), axis=0, return_counts=True
         ) if where.any() else (np.empty((0, 2), dtype=np.int64), np.empty(0, dtype=np.int64))
@@ -132,6 +136,47 @@ class SketchMaintainer:
             pairs[sel, 1], weights=cnts[sel], minlength=ranges.n_ranges
         ).astype(np.int64)
 
+    def clone_for(self, q: Query, db: Database,
+                  catalog: Optional[Catalog] = None) -> "SketchMaintainer":
+        """A maintainer for ``q`` sharing this one's threshold-independent
+        state.
+
+        The counting state (per-group sums/WHERE-passing counts and the
+        (group, fragment) incidence) depends only on the inner-block
+        signature and the partition — not on the HAVING chain — so a batch of
+        admitted queries differing in thresholds builds it ONCE and clones.
+        The threshold-dependent pieces (surviving set, folded ``frag_prov``,
+        monotone-safety) are re-derived per query exactly as a fresh build
+        would, so a clone is bit-equal to ``SketchMaintainer(q, ...)``.
+        """
+        m = object.__new__(SketchMaintainer)
+        m.q = q
+        m.ranges = self.ranges
+        m.table_uid = self.table_uid
+        m.version = self.version
+        m.exact = monotone_safe(q, db, catalog or default_catalog())
+        m.conservative = False
+        m.right = self.right
+        m._values_integral = self._values_integral
+        m.n_groups = self.n_groups
+        m.key_index = dict(self.key_index)
+        m.group_values = self.group_values  # replaced on growth, never mutated
+        m.sums = self.sums.copy()
+        m.counts = self.counts.copy()
+        # Copy-on-write incidence: clones share the row dicts (a pointer-list
+        # copy) and ``_own_row`` copies a row only when a delta touches it —
+        # cloning stays O(groups) pointers instead of O(groups) dict copies.
+        m.incidence = list(self.incidence)
+        m._row_owned = np.zeros(self.n_groups, dtype=bool)
+        self._row_owned[:] = False
+        m.passing = provenance_group_keep(q, m._agg_f32(), m.group_values, m.n_groups)
+        m.counted = m.passing.copy()
+        m.frag_prov = np.zeros_like(self.frag_prov)
+        for g in np.nonzero(m.counted)[0]:
+            for f, c in m.incidence[int(g)].items():
+                m.frag_prov[f] += c
+        return m
+
     # -- group-aggregate bookkeeping ------------------------------------------
     def _agg_f32(self) -> np.ndarray:
         """Per-group aggregate values with the executor's float32 semantics."""
@@ -143,6 +188,15 @@ class SketchMaintainer:
             return sums
         return sums / np.maximum(counts, np.float32(1.0))
 
+    def _own_row(self, g: int) -> Dict[int, int]:
+        """The group's incidence row, copied first if shared with a clone."""
+        row = self.incidence[g]
+        if not self._row_owned[g]:
+            row = dict(row)
+            self.incidence[g] = row
+            self._row_owned[g] = True
+        return row
+
     def _grow_groups(self, new_keys: np.ndarray, n_groups: int) -> None:
         """Extend per-group state for freshly assigned gids (appends only)."""
         n_new = n_groups - self.n_groups
@@ -150,6 +204,8 @@ class SketchMaintainer:
             return
         self.n_groups = n_groups
         self.incidence.extend(dict() for _ in range(n_new))
+        self._row_owned = np.concatenate(
+            [self._row_owned, np.ones(n_new, dtype=bool)])
         self.sums = np.concatenate([self.sums, np.zeros(n_new)])
         self.counts = np.concatenate([self.counts, np.zeros(n_new, dtype=np.int64)])
         self.passing = np.concatenate([self.passing, np.zeros(n_new, dtype=bool)])
@@ -206,7 +262,7 @@ class SketchMaintainer:
                                     return_counts=True)
             for (g, f), c in zip(pairs, cnts):
                 g, f, c = int(g), int(f), int(c) * sign
-                row = self.incidence[g]
+                row = self._own_row(g)
                 row[f] = row.get(f, 0) + c
                 if row[f] == 0:
                     del row[f]

@@ -25,7 +25,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.catalog import Catalog, default_catalog
-from repro.core.table import ColumnTable, Database
+from repro.core.table import PAD_VALID, ColumnTable, Database
 
 Array = jax.Array
 
@@ -122,6 +122,21 @@ class Query:
         """Group-by attributes that live on the sketched (fact) relation."""
         fact = db[self.table]
         return tuple(a for a in self.groupby if fact.has(a))
+
+    def inner_signature(self) -> Tuple:
+        """Hashable identity of the inner block (FROM/WHERE/GROUP BY/agg) —
+        everything the HAVING chain does *not* affect.  Queries with equal
+        inner signatures share samples, AQR estimate passes, inner-block
+        evaluations and maintainer counting state; the batched admission
+        pipeline and the AQR cache both key on this one helper so the
+        sharing assumptions cannot drift apart."""
+        return (
+            self.table,
+            self.groupby,
+            (self.agg.fn, self.agg.attr),
+            dataclasses.astuple(self.where) if self.where else None,
+            dataclasses.astuple(self.join) if self.join else None,
+        )
 
     def signature(self) -> Tuple:
         """Hashable identity used by the sketch index."""
@@ -266,6 +281,10 @@ def inner_group_partials(
         if q.where is not None
         else jnp.ones(flat.num_rows, dtype=bool)
     )
+    if flat.has(PAD_VALID):
+        # Pow2-padded sketch instance: the tail rows exist only to pin the
+        # compiled shape and must contribute nothing (weight 0 everywhere).
+        where_mask = where_mask & flat[PAD_VALID]
     enc = catalog.groups(flat, q.groupby)
     if q.agg.fn == "count":
         vals = jnp.ones(flat.num_rows, dtype=jnp.float32)
@@ -411,6 +430,16 @@ def _provenance_from_inner(q: Query, ib: InnerBlock, n_fact_rows: int) -> np.nda
     mask = np.zeros(n_fact_rows, dtype=bool)
     mask[ib.fact_idx[row_keep]] = True
     return mask
+
+
+# Public names for the inner-block products: the batched admission pipeline
+# (``repro.core.admission``) evaluates the shared FROM/WHERE/GROUP BY/agg
+# block once per signature group and derives every member query's result and
+# provenance from the same ``InnerBlock`` — the group-level tails are pure
+# functions of it, so sharing is bit-exact.
+inner_block = _inner_block
+result_from_inner = _result_from_inner
+provenance_from_inner = _provenance_from_inner
 
 
 def execute(q: Query, db: Database, catalog: Optional[Catalog] = None) -> QueryResult:

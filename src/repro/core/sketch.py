@@ -12,7 +12,7 @@ the catalog, so an index hit re-executes over an already-materialized D_P.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Optional, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -27,7 +27,7 @@ from repro.core.queries import (
     provenance_mask,
 )
 from repro.core.ranges import RangeSet
-from repro.core.table import ColumnTable, Database
+from repro.core.table import PAD_VALID, ColumnTable, Database
 
 Array = jax.Array
 
@@ -112,6 +112,65 @@ def capture_sketch(
     )
 
 
+def capture_sketches_batch(
+    qs: Sequence[Query],
+    db: Database,
+    ranges_list: Sequence[RangeSet],
+    provs: Sequence[np.ndarray],
+    use_kernel: bool = True,
+    catalog: Optional[Catalog] = None,
+) -> List[ProvenanceSketch]:
+    """Multi-sketch fused capture: B provenance masks, one scan per partition.
+
+    Queries are grouped by (table, partition); each group pays ONE cached
+    bucketization and ONE ``fragment_bitmap_batch`` launch that reduces all
+    of the group's stacked masks against the shared one-hot incidence — the
+    admission pipeline's replacement for B sequential ``capture_sketch``
+    calls.  The mask batch is pow2-padded so batch sizes quantize to a few
+    compiled shapes.  Bits are bit-identical to per-query capture.
+    """
+    catalog = catalog or default_catalog()
+    out: List[Optional[ProvenanceSketch]] = [None] * len(qs)
+    groups: Dict[Tuple, List[int]] = {}
+    for i, (q, ranges) in enumerate(zip(qs, ranges_list)):
+        groups.setdefault((q.table, ranges.key()), []).append(i)
+    for (table_name, _), idxs in groups.items():
+        table = db[table_name]
+        ranges = ranges_list[idxs[0]]
+        bucket = catalog.bucketize(table, ranges)
+        stacked = np.stack([np.asarray(provs[i], dtype=bool) for i in idxs])
+        b = stacked.shape[0]
+        b_pad = 1 << (b - 1).bit_length()
+        if b_pad != b:
+            stacked = np.concatenate(
+                [stacked, np.zeros((b_pad - b, stacked.shape[1]), dtype=bool)])
+        if use_kernel:
+            from repro.kernels import ops as kops
+
+            bits_b = np.asarray(
+                kops.fragment_bitmap_batch(jnp.asarray(stacked), bucket, ranges.n_ranges))
+        else:
+            bits_b = np.asarray(
+                jax.vmap(
+                    lambda p: jax.ops.segment_max(
+                        p.astype(jnp.int32), bucket, num_segments=ranges.n_ranges)
+                )(jnp.asarray(stacked)) > 0
+            )
+        sizes = catalog.fragment_sizes(table, ranges)
+        for j, i in enumerate(idxs):
+            bits = bits_b[j].astype(bool)
+            out[i] = ProvenanceSketch(
+                table=table_name,
+                ranges=ranges_list[i],
+                bits=bits,
+                size_rows=int(sizes[bits].sum()),
+                total_rows=table.num_rows,
+                table_uid=table.uid,
+                table_version=table.version,
+            )
+    return out  # type: ignore[return-value]
+
+
 def sketch_keep_mask(
     sketch: ProvenanceSketch,
     table: ColumnTable,
@@ -128,13 +187,49 @@ def sketch_keep_mask(
     return jnp.asarray(sketch.bits)[bucket]
 
 
+def _pad_instance_pow2(
+    instance: ColumnTable, rows: np.ndarray, catalog: Catalog
+) -> Tuple[ColumnTable, np.ndarray]:
+    """Pow2-pad an instance's row count with masked (weight-0) tail rows.
+
+    Steady-state reuse executes over catalog-cached instances whose row
+    counts drift with every repair (a handful of rows per mutation), and each
+    fresh count is a fresh XLA shape — a recompile on the hot path.  Padding
+    every instance to the next power of two quantizes the shape space so a
+    repaired instance almost always lands in an already-compiled size class.
+    The tail rows duplicate row 0 and carry ``PAD_VALID=False``; the executor
+    zero-weights them, so results are bit-identical (adding 0.0 terms to the
+    f32 segment sums is exact).  ``rows`` (the base-table row index per
+    instance row) is padded alongside for the catalog's subset-derived
+    encodings.
+    """
+    n = instance.num_rows
+    if n == 0:
+        return instance, rows
+    n_pad = 1 << (n - 1).bit_length()
+    valid = np.zeros(n_pad, dtype=bool)
+    valid[:n] = True
+    if n_pad != n:
+        idx = np.zeros(n_pad, dtype=np.int64)
+        idx[:n] = np.arange(n)
+        instance = instance.gather(jnp.asarray(idx))
+        rows = rows[idx]
+        catalog.stats["instance_padded"] += 1
+    return (instance.with_column(PAD_VALID, jnp.asarray(valid[:instance.num_rows])),
+            rows)
+
+
 def _build_instance(
     sketch: ProvenanceSketch, table: ColumnTable, catalog: Catalog
-) -> ColumnTable:
-    """Materialize the sketch instance R_P of one table.
+) -> Tuple[ColumnTable, np.ndarray]:
+    """Materialize the sketch instance R_P of one table (+ its source rows).
 
     Clustered tables on the sketch's own partition skip fragments by slicing;
-    everything else falls back to the per-row keep-mask kernel.
+    everything else falls back to the per-row keep-mask kernel.  Either way
+    the rows are pow2-padded (masked tail) so reuse execution over the cached
+    instance hits an already-compiled shape, and the base-row map rides along
+    so group encodings / WHERE masks of the instance derive from the base
+    table's cached ones by an O(n) gather instead of fresh host passes.
     """
     lay = table.layout
     if lay is not None and lay.matches(sketch.ranges):
@@ -148,10 +243,13 @@ def _build_instance(
             n = table.num_rows
             tail_bucket = np.asarray(
                 catalog.bucketize(table, sketch.ranges))[n - lay.tail:]
-        return table.take_fragments(frag_ids, tail_bucket=tail_bucket)
+        inst, rows = table.take_fragments(
+            frag_ids, tail_bucket=tail_bucket, return_rows=True)
+        return _pad_instance_pow2(inst, rows, catalog)
     catalog.stats["instance_mask"] += 1
     mask = sketch_keep_mask(sketch, table, catalog=catalog)
-    return table.select(mask)
+    rows = np.nonzero(np.asarray(mask))[0]
+    return _pad_instance_pow2(table.gather(jnp.asarray(rows)), rows, catalog)
 
 
 def apply_sketch(
@@ -166,8 +264,8 @@ def apply_sketch(
     table = db[sketch.table]
     instance = catalog.get_instance(sketch, table)
     if instance is None:
-        instance = _build_instance(sketch, table, catalog)
-        catalog.put_instance(sketch, table, instance)
+        instance, rows = _build_instance(sketch, table, catalog)
+        catalog.put_instance(sketch, table, instance, rows=rows)
     return db.with_table(instance)
 
 

@@ -13,12 +13,13 @@ from typing import Callable, Dict, List, Optional, Tuple
 import jax
 import numpy as np
 
-from repro.aqp.sampling import SampleCache, SampleSet
+from repro.aqp.sampling import AQRCache, SampleCache, SampleSet
 from repro.aqp.size_estimation import (
     EstimationConfig,
     SizeEstimate,
     approximate_query_result,
     estimate_size_batched,
+    satisfied_groups,
 )
 from repro.core.catalog import Catalog, default_catalog
 from repro.core.queries import Query
@@ -76,6 +77,7 @@ def select_attribute(
     ranges_for: Optional[Callable[[str], RangeSet]] = None,
     topk: int = 1,
     catalog: Optional[Catalog] = None,
+    aqr_cache: Optional[AQRCache] = None,
 ) -> SelectionResult:
     catalog = catalog or default_catalog()
     cands = candidate_pool(strategy, q, db, n_ranges, catalog=catalog)
@@ -94,11 +96,17 @@ def select_attribute(
         return SelectionResult(strategy, best, cands, {}, topk=ranking[:topk])
 
     # Cost-based: one shared AQR pass, then all candidates' fragment
-    # incidence in a single vmapped device pass (Sec. 8).
+    # incidence in a single vmapped device pass (Sec. 8).  Both the sample
+    # and the estimate pass are cross-query caches: concurrent queries that
+    # differ only in thresholds reuse them wholesale.
     sample_cache = sample_cache or SampleCache()
     k_s, k_e = jax.random.split(key)
     samples = sample_cache.get_or_create(k_s, db[q.table], q.groupby_on_fact(db), theta)
-    aqr = approximate_query_result(k_e, q, db, samples, cfg)
+    if aqr_cache is not None:
+        est, sampled = aqr_cache.get_or_compute(k_e, q, db, samples, theta, cfg)
+        aqr = (est, satisfied_groups(q, est, sampled))
+    else:
+        aqr = approximate_query_result(k_e, q, db, samples, cfg)
     estimates: Dict[str, SizeEstimate] = estimate_size_batched(
         k_e, q, db, {a: ranges_for(a) for a in cands}, samples, cfg,
         aqr=aqr, catalog=catalog,

@@ -24,6 +24,11 @@ Array = jax.Array
 # apart from "a different relation entirely".
 _TABLE_UIDS = itertools.count(1)
 
+# Reserved column marking pow2-padded tables (sketch instances): True for
+# real rows, False for the shape-pinning tail.  The executor folds it into
+# the aggregation weights so padded and unpadded execution agree bit-for-bit.
+PAD_VALID = "__valid__"
+
 
 def _bucketize_np(bounds: np.ndarray, values: np.ndarray) -> np.ndarray:
     """Host-side fragment ids with ``RangeSet.bucketize``'s exact comparison
@@ -208,8 +213,9 @@ class ColumnTable:
                            version=self.version, uid=self.uid)
 
     def take_fragments(
-        self, frag_ids: np.ndarray, tail_bucket: Optional[np.ndarray] = None
-    ) -> "ColumnTable":
+        self, frag_ids: np.ndarray, tail_bucket: Optional[np.ndarray] = None,
+        return_rows: bool = False,
+    ):
         """Concatenate the given fragments' contiguous slices (clustered only).
 
         Appended rows live in the layout's unsorted ``tail``; they are
@@ -217,7 +223,9 @@ class ColumnTable:
         rather than invalidating the slice path.  ``tail_bucket`` — the tail
         rows' fragment ids — may be passed in when the caller holds a cached
         (delta-refreshed) bucketization; otherwise it is recomputed here from
-        the layout's own bounds.
+        the layout's own bounds.  With ``return_rows`` the selected source
+        row indices are returned alongside (the catalog's instance-encoding
+        derivation needs the subset map).
         """
         if self.layout is None:
             raise ValueError(f"{self.name}: take_fragments needs a clustered table")
@@ -239,7 +247,8 @@ class ColumnTable:
             keep[frag_ids] = True
             parts.append(np.arange(n - lay.tail, n)[keep[tail_bucket]])
         idx = np.concatenate(parts) if parts else np.empty(0, dtype=np.int64)
-        return self.gather(jnp.asarray(idx))
+        out = self.gather(jnp.asarray(idx))
+        return (out, idx) if return_rows else out
 
     def compact(self) -> "ColumnTable":
         """Fold the layout's unsorted tail back into fragment-major order.

@@ -126,9 +126,15 @@ class SketchedDataPipeline:
             # the surviving fragments' docs (slice concatenation when the
             # engine clustered the corpus fragment-major).
             from repro.core.sketch import apply_sketch
+            from repro.core.table import PAD_VALID
 
-            inst = apply_sketch(sketch, self.engine.db, catalog=self.engine.catalog)
-            self.selected_docs = np.sort(np.asarray(inst["corpus"]["doc_id"]))
+            inst = apply_sketch(sketch, self.engine.db, catalog=self.engine.catalog)["corpus"]
+            doc_ids = np.asarray(inst["doc_id"])
+            if inst.has(PAD_VALID):
+                # Instances are pow2-padded with masked duplicate rows (shape
+                # stability for the executor); only the valid rows are docs.
+                doc_ids = doc_ids[np.asarray(inst[PAD_VALID])]
+            self.selected_docs = np.sort(doc_ids)
         else:  # no viable sketch: fall back to exact predicate
             from repro.core.queries import provenance_mask
 

@@ -74,3 +74,59 @@ def fragment_bitmap_pallas(
         interpret=interpret,
     )(bucket_2d, prov_2d)
     return out[0, :n_ranges] > 0
+
+
+def _bitmap_batch_kernel(bucket_ref, provs_ref, out_ref, *, n_ranges_p: int):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    bucket = bucket_ref[...].reshape(-1)  # (rows,)
+    provs = provs_ref[...].reshape(provs_ref.shape[0], -1).astype(jnp.float32)  # (B, rows)
+    rows = bucket.shape[0]
+    # One-hot incidence of the tile's rows against every range id, contracted
+    # against ALL provenance masks at once: (B, rows) @ (rows, ranges) on the
+    # MXU, so the per-query cost of capturing B sketches from one scan is a
+    # slice of a single matmul instead of B segmented reductions.
+    range_ids = jax.lax.broadcasted_iota(jnp.int32, (rows, n_ranges_p), 1)
+    onehot = (bucket[:, None] == range_ids).astype(jnp.float32)
+    counts = jnp.dot(provs, onehot, preferred_element_type=jnp.float32)
+    out_ref[...] = jnp.maximum(out_ref[...], (counts > 0).astype(jnp.int32))
+
+
+def fragment_bitmap_batch_pallas(
+    bucket: jax.Array,
+    provs: jax.Array,
+    n_ranges: int,
+    rows_per_tile: int = ROWS_PER_TILE,
+    interpret: bool = False,
+) -> jax.Array:
+    """bits (bool[B, n_ranges]) from one bucket (int32[n]) and B stacked
+    provenance masks (bool[B, n]) — multi-sketch fused capture: one
+    bucketization, one scan of the rows, B bitvectors out."""
+    b, n = provs.shape
+    n_pad = -n % rows_per_tile
+    b_pad = -b % 8  # sublane-align the mask/bitmap batch axis
+    bucket_p = jnp.pad(bucket.astype(jnp.int32), (0, n_pad))
+    provs_p = jnp.pad(provs.astype(jnp.int32), ((0, b_pad), (0, n_pad)))
+    n_ranges_p = n_ranges + (-n_ranges % LANE)
+    n_tiles = (n + n_pad) // rows_per_tile
+    sub = rows_per_tile // LANE
+
+    bucket_2d = bucket_p.reshape(n_tiles * sub, LANE)
+    provs_3d = provs_p.reshape(b + b_pad, n_tiles * sub, LANE)
+
+    out = pl.pallas_call(
+        functools.partial(_bitmap_batch_kernel, n_ranges_p=n_ranges_p),
+        grid=(n_tiles,),
+        in_specs=[
+            pl.BlockSpec((sub, LANE), lambda i: (i, 0)),
+            pl.BlockSpec((b + b_pad, sub, LANE), lambda i: (0, i, 0)),
+        ],
+        out_specs=pl.BlockSpec((b + b_pad, n_ranges_p), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b + b_pad, n_ranges_p), jnp.int32),
+        interpret=interpret,
+    )(bucket_2d, provs_3d)
+    return out[:b, :n_ranges] > 0

@@ -16,7 +16,10 @@ import jax.numpy as jnp
 
 from repro.kernels import ref
 from repro.kernels.flash_attention import flash_attention_pallas
-from repro.kernels.fragment_bitmap import fragment_bitmap_pallas
+from repro.kernels.fragment_bitmap import (
+    fragment_bitmap_batch_pallas,
+    fragment_bitmap_pallas,
+)
 from repro.kernels.segment_aggregate import segment_aggregate_pallas
 from repro.kernels.sketch_filter import sketch_filter_pallas
 
@@ -45,6 +48,22 @@ def _fragment_bitmap_jit(prov, bucket, n_ranges, mode):
 
 def fragment_bitmap(prov: Array, bucket: Array, n_ranges: int, backend: Optional[str] = None) -> Array:
     return _fragment_bitmap_jit(prov, bucket, n_ranges, _mode(backend))
+
+
+@functools.partial(jax.jit, static_argnums=(2, 3))
+def _fragment_bitmap_batch_jit(provs, bucket, n_ranges, mode):
+    if mode == "pallas":
+        return fragment_bitmap_batch_pallas(bucket, provs, n_ranges)
+    if mode == "interpret":
+        return fragment_bitmap_batch_pallas(bucket, provs, n_ranges, interpret=True)
+    return ref.fragment_bitmap_batch_ref(provs, bucket, n_ranges)
+
+
+def fragment_bitmap_batch(
+    provs: Array, bucket: Array, n_ranges: int, backend: Optional[str] = None
+) -> Array:
+    """B stacked provenance masks -> B sketch bitvectors, one scan."""
+    return _fragment_bitmap_batch_jit(provs, bucket, n_ranges, _mode(backend))
 
 
 @functools.partial(jax.jit, static_argnums=(2,))

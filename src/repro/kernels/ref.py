@@ -17,6 +17,11 @@ def fragment_bitmap_ref(prov: Array, bucket: Array, n_ranges: int) -> Array:
     return hits > 0
 
 
+def fragment_bitmap_batch_ref(provs: Array, bucket: Array, n_ranges: int) -> Array:
+    """bits[b, r] = OR over rows in fragment r of provenance mask b."""
+    return jax.vmap(lambda p: fragment_bitmap_ref(p, bucket, n_ranges))(provs)
+
+
 def sketch_filter_ref(bucket: Array, bits: Array) -> Array:
     """keep[i] = bits[bucket[i]] — the sketch's disjunction-of-ranges."""
     return bits.astype(bool)[bucket]

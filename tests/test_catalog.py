@@ -370,6 +370,81 @@ def test_batched_estimation_matches_reference():
         assert got.hi_rows == pytest.approx(ref.hi_rows, rel=1e-4)
 
 
+def test_incidence_pass_pow2_padding_avoids_retrace():
+    """Candidate sets whose pair counts AND fragment counts differ must land
+    in one compiled size class: pairs, fragment axis and the leading
+    (query x candidate) axis are all pow2-quantized, counter-asserted via the
+    trace-time counter (``_incidence_pass`` bodies run only when jit misses).
+    """
+    import jax
+
+    from repro.aqp.sampling import stratified_reservoir_sample
+    from repro.aqp.size_estimation import (
+        TRACE_COUNTS,
+        approximate_query_result,
+        estimate_size_batched,
+    )
+
+    db = Database({"crimes": make_crimes(20_000, seed=9)})
+    q = Query("crimes", ("district", "year"), Aggregate("sum", "records"),
+              having=Having(">", 400.0))
+    key = jax.random.PRNGKey(0)
+    samples = stratified_reservoir_sample(key, db["crimes"], q.groupby, 0.1)
+    aqr = approximate_query_result(key, q, db, samples)
+    cands = ["district", "year", "beat"]
+
+    def estimate(n_ranges):
+        ranges_by = {a: equi_depth_ranges(db["crimes"], a, n_ranges)
+                     for a in cands}
+        return estimate_size_batched(key, q, db, ranges_by, samples, aqr=aqr)
+
+    estimate(40)  # warm: one trace for this size class
+    before = TRACE_COUNTS["incidence_pass"]
+    # 33..56 ranges all pad to the same pow2 fragment axis (64); satisfied
+    # pair counts shift a little but stay inside one pow2 pair class.
+    estimate(33)
+    estimate(56)
+    estimate(40)
+    assert TRACE_COUNTS["incidence_pass"] == before, (
+        "differing n_ranges retraced the batched incidence pass")
+
+
+def test_frag_of_group_cached_per_table_version():
+    """The GB fast-path fragment-of-group vector bucketizes once per
+    (table version, group-by, partition) and then serves from the catalog."""
+    import jax
+
+    from repro.aqp.sampling import stratified_reservoir_sample
+    from repro.aqp.size_estimation import approximate_query_result, estimate_size_batched
+
+    db = Database({"crimes": make_crimes(20_000, seed=9)})
+    q = Query("crimes", ("district", "year"), Aggregate("sum", "records"),
+              having=Having(">", 400.0))
+    key = jax.random.PRNGKey(0)
+    samples = stratified_reservoir_sample(key, db["crimes"], q.groupby, 0.1)
+    aqr = approximate_query_result(key, q, db, samples)
+    ranges_by = {a: equi_depth_ranges(db["crimes"], a, 40)
+                 for a in ("district", "year")}
+    cat = Catalog()
+    estimate_size_batched(key, q, db, ranges_by, samples, aqr=aqr, catalog=cat)
+    assert cat.stats["frag_of_group"] == 2  # one per partition
+    assert cat.stats["frag_of_group_hit"] == 0
+    estimate_size_batched(key, q, db, ranges_by, samples, aqr=aqr, catalog=cat)
+    assert cat.stats["frag_of_group"] == 2  # no re-bucketize on replay
+    assert cat.stats["frag_of_group_hit"] == 2
+    # A new table version recomputes (the group dictionary may have grown).
+    t2 = db["crimes"].append(
+        {a: np.asarray(db["crimes"][a])[:100] for a in db["crimes"].schema})
+    db2 = Database({"crimes": t2})
+    from repro.aqp.sampling import extend_sample_for_append
+
+    samples2 = extend_sample_for_append(
+        key, samples, (t2.delta.appended,), (db["crimes"].num_rows,))
+    aqr2 = approximate_query_result(key, q, db2, samples2)
+    estimate_size_batched(key, q, db2, ranges_by, samples2, aqr=aqr2, catalog=cat)
+    assert cat.stats["frag_of_group"] == 4
+
+
 def test_benchmark_timeit_blocks_nested_results():
     from benchmarks.common import block_until_ready
 
