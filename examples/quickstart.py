@@ -141,3 +141,27 @@ res_s2, info_s2 = sharded.run(q2)  # read drains inboxes, repairs, routes
 print(f"mutated sharded run: repaired={info_s2.repaired} "
       f"contacted={info_s2.shards_contacted} skipped={info_s2.shards_skipped}")
 assert res_s2.canonical() == execute(q2, sharded.db).canonical()
+
+# --- 6. SPMD batched serving: a whole hit batch in ONE XLA launch ------------
+# The warm hit path is fused: registered sketch instances live as stacked
+# shard-major arrays (pow2-padded, global group dictionary), so a batch of
+# hits — even across different sketches — computes all B x S per-group
+# partials in a single program; each query then finishes its own HAVING
+# tail on the merged state.  Misses in the same batch go through the shared
+# admission pipeline and their captures broadcast to every shard in one pass.
+taus_s = np.quantile(execute(base, big).values, (0.97, 0.92, 0.9))
+shard_batch = [Query(table="crimes", groupby=("district", "year"),
+                     agg=Aggregate("sum", "records"), having=Having(">", float(t)))
+               for t in taus_s] + [q2]
+sharded.run_batch(shard_batch)   # admits the new sketches, registers shards
+sharded.run_batch(shard_batch)   # first hit serve: builds + caches the stacks
+t0 = time.perf_counter()
+outs_s = sharded.run_batch(shard_batch)  # steady state: all hits, one launch
+t_sb = time.perf_counter() - t0
+route = sharded.last_route
+print(f"sharded run_batch: {len(shard_batch)} hits in {t_sb*1e3:.1f}ms "
+      f"({t_sb/len(shard_batch)*1e3:.2f}ms/query, fused={route.fused}, "
+      f"one launch for {route.n_queries} queries)")
+for q_i, (r_i, i_i) in zip(shard_batch, outs_s):
+    assert i_i.reused
+    assert r_i.canonical() == execute(q_i, sharded.db).canonical()

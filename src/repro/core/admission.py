@@ -105,6 +105,22 @@ def plan_wave(misses: List[Miss]) -> Tuple[List[Miss], List[Miss]]:
     return wave, deferred
 
 
+def admit_misses(
+    engine: "PBDSEngine", misses: List[Miss]
+) -> Tuple[Dict[int, Tuple[QueryResult, "RunInfo"]], List[Tuple[int, Query]]]:
+    """One admission wave: plan (subsumption deferral), admit, return
+    ``(served by batch position, deferred (position, query) pairs)``.
+
+    The shared miss-path step of ``PBDSEngine.run_batch`` and
+    ``ShardedEngine.run_batch`` — NO-PS skips planning (it never creates
+    sketches, so within-batch deferral is moot).
+    """
+    wave, deferred = (
+        plan_wave(misses) if engine.strategy != "NO-PS" else (misses, []))
+    served = admit_wave(engine, wave)
+    return served, [(i, q) for i, q, _ in deferred]
+
+
 def _select_wave(
     engine: "PBDSEngine", wave: List[Miss]
 ) -> Dict[int, SelectionResult]:

@@ -202,6 +202,12 @@ class Catalog:
         # ``groups``/``where_mask`` on a sketch instance gather from the base
         # table's cached products instead of fresh full host passes.
         self._instance_rows: Dict[int, Tuple[ColumnTable, ColumnTable, np.ndarray]] = {}
+        # Stacked shard-major instances (``repro.core.shard``), keyed by
+        # (registration key, table uid/version, plan identity) with a token
+        # guard (per-shard table ids + sketch bits) so any shard-side delta
+        # application or bit flip rebuilds the stack.  Values are opaque to
+        # the catalog (a ``shard.StackedInstances``).
+        self._stacked: Dict[Tuple, Tuple[Tuple, object]] = {}
 
     def clear(self) -> None:
         self.__init__(max_entries=self.max_entries)
@@ -240,6 +246,24 @@ class Catalog:
         while t is not None:
             self.invalidate_table(t)
             t = t.delta.parent if t.delta is not None else None
+
+    # -- stacked shard-major instances ---------------------------------------
+    def get_stacked(self, key: Tuple, token: Tuple) -> Optional[object]:
+        hit = self._stacked.get(key)
+        if hit is not None and hit[0] == token:
+            self.stats["stacked_hit"] += 1
+            return hit[1]
+        return None
+
+    def put_stacked(self, key: Tuple, token: Tuple, value: object) -> None:
+        self.stats["stacked_build"] += 1
+        self._put(self._stacked, key, (token, value))
+
+    def drop_stacked(self, key_prefix) -> None:
+        """Drop stacked entries whose key starts with ``key_prefix`` (used
+        when a registration is evicted so its stack stops pinning arrays)."""
+        for k in [k for k in self._stacked if k[: len(key_prefix)] == key_prefix]:
+            del self._stacked[k]
 
     # -- group-by dictionary encodings --------------------------------------
     def groups(self, table: ColumnTable, attrs: Tuple[str, ...]) -> GroupEncoding:

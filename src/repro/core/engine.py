@@ -228,20 +228,27 @@ class PBDSEngine:
         entry.maintainer = maintainer
         return result.sketch, True
 
+    def _serve_hit(
+        self, q: Query, entry: IndexEntry, t_probe: float
+    ) -> Tuple[QueryResult, RunInfo]:
+        """Serve one index hit over the (repaired-if-stale) sketch instance —
+        the shared hit path of ``run`` and ``run_batch``."""
+        tp = time.perf_counter()
+        sketch, repaired = self._current_sketch(entry)
+        tr = time.perf_counter()
+        res = execute_with_sketch(q, self.db, sketch, catalog=self.catalog)
+        return res, RunInfo(
+            reused=True, created=False, attr=sketch.attr, strategy=self.strategy,
+            selectivity=sketch.selectivity, t_probe=t_probe, t_repair=tr - tp,
+            t_execute=time.perf_counter() - tr, repaired=repaired,
+        )
+
     def run(self, q: Query) -> Tuple[QueryResult, RunInfo]:
         t0 = time.perf_counter()
         entry = self.index.lookup_entry(q) if self.strategy != "NO-PS" else None
         tp = time.perf_counter()
         if entry is not None:
-            sketch, repaired = self._current_sketch(entry)
-            tr = time.perf_counter()
-            res = execute_with_sketch(q, self.db, sketch, catalog=self.catalog)
-            t1 = time.perf_counter()
-            return res, RunInfo(
-                reused=True, created=False, attr=sketch.attr, strategy=self.strategy,
-                selectivity=sketch.selectivity, t_probe=tp - t0, t_repair=tr - tp,
-                t_execute=t1 - tr, repaired=repaired,
-            )
+            return self._serve_hit(q, entry, tp - t0)
 
         if self.strategy == "NO-PS":
             res = execute(q, self.db, catalog=self.catalog)
@@ -315,7 +322,7 @@ class PBDSEngine:
         created by an earlier query in the same batch are deferred a wave and
         served as ordinary index hits, exactly as sequential execution would.
         """
-        from repro.core.admission import admit_wave, plan_wave
+        from repro.core.admission import admit_misses
 
         out: List[Optional[Tuple[QueryResult, RunInfo]]] = [None] * len(qs)
         pending: List[Tuple[int, Query]] = list(enumerate(qs))
@@ -328,22 +335,10 @@ class PBDSEngine:
                 if entry is None:
                     misses.append((i, q, tp - t0))
                     continue
-                sketch, repaired = self._current_sketch(entry)
-                tr = time.perf_counter()
-                res = execute_with_sketch(q, self.db, sketch, catalog=self.catalog)
-                out[i] = (res, RunInfo(
-                    reused=True, created=False, attr=sketch.attr,
-                    strategy=self.strategy, selectivity=sketch.selectivity,
-                    t_probe=tp - t0, t_repair=tr - tp,
-                    t_execute=time.perf_counter() - tr, repaired=repaired,
-                ))
+                out[i] = self._serve_hit(q, entry, tp - t0)
             if not misses:
                 break
-            # NO-PS never creates sketches, so within-batch deferral is moot.
-            wave, deferred = (
-                plan_wave(misses) if self.strategy != "NO-PS" else (misses, []))
-            served = admit_wave(self, wave)
+            served, pending = admit_misses(self, misses)
             for i, item in served.items():
                 out[i] = item
-            pending = [(i, q) for i, q, _ in deferred]
         return out  # type: ignore[return-value]

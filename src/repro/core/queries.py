@@ -263,18 +263,16 @@ class InnerBlock:
     where_np: np.ndarray
 
 
-def inner_group_partials(
-    q: Query, flat: ColumnTable, catalog: Catalog
-):
-    """WHERE mask + group encoding + fused per-group sums/counts over one
-    (already joined) flat table.
+def inner_block_arrays(q: Query, flat: ColumnTable, catalog: Catalog):
+    """The per-row inputs of the inner block's aggregation over one (already
+    joined) flat table: ``(enc, where_mask, vals)``.
 
-    The shared prefix of inner-block evaluation: single-node execution feeds
-    it the full flat table, the fragment-sharded path (``repro.core.shard``)
-    feeds it a shard-local sketch instance — keeping the aggregation
-    semantics (mask source, value selection, kernel dispatch) in one place is
-    what makes routed partials mergeable into bit-identical results.
-    Returns ``(enc, where_mask, sums, counts)``.
+    The single source of truth for mask derivation (WHERE ∧ pad-validity),
+    group encoding and aggregate value selection.  Single-node execution
+    feeds the arrays straight into ``segment_sums_counts``; the fragment-
+    sharded stacked launch (``repro.core.shard``) pads and stacks them on a
+    shard axis first — either way the aggregation semantics come from here,
+    which is what makes routed partials mergeable into bit-identical results.
     """
     where_mask = (
         catalog.where_mask(flat, q.where)
@@ -290,6 +288,16 @@ def inner_group_partials(
         vals = jnp.ones(flat.num_rows, dtype=jnp.float32)
     else:
         vals = flat[q.agg.attr]
+    return enc, where_mask, vals
+
+
+def inner_group_partials(
+    q: Query, flat: ColumnTable, catalog: Catalog
+):
+    """WHERE mask + group encoding + fused per-group sums/counts over one
+    (already joined) flat table.  Returns ``(enc, where_mask, sums, counts)``.
+    """
+    enc, where_mask, vals = inner_block_arrays(q, flat, catalog)
     sums, counts = segment_sums_counts(vals, enc.gid_dev, enc.n_groups, weights=where_mask)
     return enc, where_mask, sums, counts
 

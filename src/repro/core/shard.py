@@ -6,14 +6,26 @@ natural unit of horizontal scale-out: a clustered ``ColumnTable``'s fragments
 are placed across S shards (host-emulated shard objects by default, pinned to
 a ``jax`` device mesh when one exists — see ``repro.parallel.placement``), and
 a reused sketch is routed as a *fragment-id set* to only the shards owning set
-bits.  Each contacted shard evaluates the inner block over its local sketch
-instance and returns per-group partial aggregates (sums + WHERE-passing
-counts); the coordinator merges them by group key and finishes the query with
-the same group-level code single-node execution uses
-(``queries.result_from_group_state``), so routed results match single-node
-results exactly whenever the aggregate arithmetic is exact (integer-valued
-columns within float32 range — the same envelope the maintenance subsystem
-pins, see ``SketchMaintainer._clears_trustworthy``).
+bits.
+
+Serving is SPMD by default: the contacted shards' local sketch instances are
+kept as a *stacked shard-major* representation (``StackedInstances`` — rows
+pow2-padded to a common count, stacked on a leading shard axis, group ids
+rewritten into a coordinator-owned global dictionary), and ONE
+``shard_map``/vmapped launch computes every shard's per-group partial
+aggregates (sums + WHERE-passing counts) in a single XLA program, merging
+them over the shard axis inside the launch.  ``ShardedEngine.run_batch``
+extends the same launch with a leading query axis, so a whole hit batch —
+even across different registered sketches — costs one program.  The
+per-shard host loop (each shard's ``partial()`` evaluated separately, merged
+by group key on the coordinator) survives behind ``fused=False`` — it is the
+shape a real multi-process RPC deployment would take, and the benchmark
+baseline.  Either way the query finishes with the same group-level code
+single-node execution uses (``queries.result_from_group_state``), so routed
+results match single-node results exactly whenever the aggregate arithmetic
+is exact (integer-valued columns within float32 range — the same envelope
+the maintenance subsystem pins, see
+``SketchMaintainer._clears_trustworthy``).
 
 Replication is delta-based, not state-based: ``append_rows``/``delete_rows``
 are coordinator operations that route each batch by fragment ownership and
@@ -34,9 +46,11 @@ from __future__ import annotations
 
 import collections
 import dataclasses
+import functools
 import time
-from typing import Deque, Dict, List, Mapping, Optional, Tuple
+from typing import Deque, Dict, List, Mapping, Optional, Sequence, Tuple
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -47,12 +61,18 @@ from repro.core.maintenance import MaintenanceError, SketchMaintainer
 from repro.core.queries import (
     Query,
     QueryResult,
+    inner_block_arrays,
     inner_group_partials,
     result_from_group_state,
 )
 from repro.core.ranges import RangeSet, equi_depth_ranges
 from repro.core.table import ColumnTable, Database, FragmentLayout
-from repro.parallel.placement import place_table, shard_devices
+from repro.parallel.placement import (
+    place_stacked,
+    place_table,
+    serving_mesh,
+    shard_devices,
+)
 
 
 # ---------------------------------------------------------------------------
@@ -302,6 +322,115 @@ class FragmentShard:
 
 
 # ---------------------------------------------------------------------------
+# Stacked shard-major execution (the fused SPMD hot path)
+# ---------------------------------------------------------------------------
+
+# Telemetry for the fused launch: ``TRACE_COUNTS`` bumps at trace time only
+# (tests assert pow2 quantization keeps shard-count / sketch-set changes in
+# one compiled size class), ``LAUNCH_COUNTS`` bumps once per host-side
+# invocation (tests assert the hit path costs exactly one launch per batch).
+TRACE_COUNTS: collections.Counter = collections.Counter()
+LAUNCH_COUNTS: collections.Counter = collections.Counter()
+
+
+def _next_pow2(n: int) -> int:
+    return 1 << max(0, (n - 1)).bit_length()
+
+
+@dataclasses.dataclass(frozen=True)
+class StackedInstances:
+    """Shard-major stacked inner-block arrays for one registered entry.
+
+    Per-shard sketch-instance rows (post-join flat tables) are padded to a
+    common pow2 row count and stacked on a leading shard axis — values, group
+    ids (in the coordinator-owned *global* group dictionary), and weights
+    (WHERE ∧ row-validity; padded rows carry weight 0, the ``__valid__``
+    convention of pow2-padded instances).  All three carry a leading
+    query axis of 1 so a batch of hits concatenates without reshapes.  The
+    shard axis is pow2-padded too, and placed over the 1-D serving mesh when
+    one exists, so one ``shard_map``/vmapped launch computes every shard's
+    per-group partials in a single XLA program.
+    """
+
+    vals: jax.Array  # (1, S_pad, R_pad) f32
+    gid: jax.Array  # (1, S_pad, R_pad) i32 — global group ids
+    weights: jax.Array  # (1, S_pad, R_pad) f32 — WHERE ∧ valid
+    n_groups: int
+    g_pad: int
+    group_values: Dict[str, np.ndarray]  # global dictionary (np.unique order)
+    contacted_ids: Tuple[int, ...]  # shard ids owning >= 1 sketch fragment
+    token: Tuple = ()  # freshness token (shard table versions + sketch bits)
+
+    @property
+    def contacted(self) -> int:
+        return len(self.contacted_ids)
+
+    @property
+    def r_pad(self) -> int:
+        return int(self.vals.shape[2])
+
+
+def _fused_body(vals, gid, w, g_pad: int):
+    """(K, S, R) stacked arrays -> (K, g_pad) merged per-group sums/counts.
+
+    One program: each query's shard slices flatten into one row axis (the
+    shard-axis reduction IS the segment sum — group ids are already global),
+    so the batched segment-aggregate kernel runs with batch = the query axis
+    only.  f32 sums of integral values are exact under any association, so
+    the result is bit-identical to the host-loop per-shard-partial merge and
+    to single-node execution (the envelope ``tests/test_shard.py`` pins).
+    """
+    TRACE_COUNTS["fused_partials"] += 1
+    from repro.kernels import ops as kops
+
+    k, s, r = vals.shape
+    return kops.segment_aggregate_batch(
+        vals.reshape(k, s * r), gid.reshape(k, s * r), g_pad,
+        w.reshape(k, s * r))
+
+
+_fused_jit = functools.partial(jax.jit, static_argnums=(3,))(_fused_body)
+
+# mesh id -> (mesh, jitted shard_map fn); the mesh reference keeps the id valid.
+_SPMD_FNS: Dict[int, Tuple[object, object]] = {}
+
+
+def _spmd_body(vals, gid, w, g_pad: int):
+    """Per-device block of the shard_map launch: each device reduces its
+    local shard slices into (K, g_pad) partial matrices, psum merges."""
+    TRACE_COUNTS["fused_partials"] += 1
+    from repro.kernels import ops as kops
+
+    k, s, r = vals.shape
+    sums, counts = kops.segment_aggregate_batch(
+        vals.reshape(k, s * r), gid.reshape(k, s * r), g_pad,
+        w.reshape(k, s * r))
+    return jax.lax.psum(sums, "shards"), jax.lax.psum(counts, "shards")
+
+
+def _fused_spmd_fn(mesh):
+    """The jitted shard_map launch for one mesh (cached per mesh)."""
+    hit = _SPMD_FNS.get(id(mesh))
+    if hit is not None:
+        return hit[1]
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    @functools.partial(jax.jit, static_argnums=(3,))
+    def fn(vals, gid, w, g_pad):
+        body = shard_map(
+            functools.partial(_spmd_body, g_pad=g_pad),
+            mesh=mesh,
+            in_specs=(P(None, "shards", None),) * 3,
+            out_specs=(P(None, None), P(None, None)),
+        )
+        return body(vals, gid, w)
+
+    _SPMD_FNS[id(mesh)] = (mesh, fn)
+    return fn
+
+
+# ---------------------------------------------------------------------------
 # Coordinator
 # ---------------------------------------------------------------------------
 
@@ -324,7 +453,7 @@ class _Registered:
 
 @dataclasses.dataclass
 class RouteInfo:
-    """Bookkeeping of one routed (reused-sketch) execution."""
+    """Bookkeeping of one routed (reused-sketch) execution or hit batch."""
 
     contacted: int
     skipped: int
@@ -332,11 +461,23 @@ class RouteInfo:
     deltas_applied: int
     per_shard_s: Dict[int, float]
     t_merge_s: float
+    # Device-launch wall time: the single stacked program on the fused path,
+    # the summed per-shard ``partial()`` calls on the host-loop path.
+    t_launch_s: float = 0.0
+    # True when served by the stacked one-launch SPMD path, False for the
+    # per-shard host loop.
+    fused: bool = False
+    # Queries served by this route (one, or a run_batch hit batch).
+    n_queries: int = 1
 
     @property
     def t_critical_s(self) -> float:
-        """Emulated shard-parallel latency: slowest contacted shard + merge
-        (host-emulated shards run sequentially; real deployments overlap)."""
+        """Emulated shard-parallel latency.  Host-loop: slowest contacted
+        shard + merge (host-emulated shards run sequentially; real
+        deployments overlap).  Fused: the one launch already computes all
+        shards in a single program, so launch + merge IS the critical path."""
+        if self.fused:
+            return self.t_launch_s + self.t_merge_s
         return (max(self.per_shard_s.values()) if self.per_shard_s else 0.0) \
             + self.t_merge_s
 
@@ -363,6 +504,8 @@ class ShardedEngine:
         strategy: str = "CB-OPT-GB",
         policy: str = "contig",
         use_devices: bool = True,
+        fused: bool = True,
+        max_registered: Optional[int] = None,
         **engine_kwargs,
     ):
         for k in ("cluster_tables", "compact_tail_frac"):
@@ -406,6 +549,15 @@ class ShardedEngine:
         # id(IndexEntry) -> routed-serving state for that logical entry.
         self._registered: Dict[int, _Registered] = {}
         self.last_route: Optional[RouteInfo] = None
+        # Fused SPMD serving: stacked one-launch execution (the default);
+        # ``fused=False`` keeps the per-shard host loop (benchmark baseline,
+        # and the only path real multi-process RPC shards could take today).
+        self.fused = fused
+        self._mesh = serving_mesh(use_devices)
+        # Per-shard memory bound: registrations beyond this are pruned by the
+        # coordinator's recency clock (``SketchIndex.prune``) after each
+        # registration pass, evicting shard maintainers + cached instances.
+        self.max_registered = max_registered
 
     # -- convenience -----------------------------------------------------------
     @property
@@ -496,10 +648,7 @@ class ShardedEngine:
         # Miss (or unroutable hit): single-node path on the coordinator, then
         # register any fresh capture with every shard.
         res, info = self.engine.run(q)
-        if self.engine.strategy != "NO-PS":
-            for e in self.engine.index.entries():
-                if e.query.table == self.table_name and id(e) not in self._registered:
-                    self._register(e)
+        self._register_new()
         return res, info
 
     def _group_local(self, q: Query) -> bool:
@@ -517,35 +666,67 @@ class ShardedEngine:
             return False
         return True
 
-    def _register(self, entry: IndexEntry) -> None:
-        ranges = entry.sketch.ranges
-        group_local = self._group_local(entry.query)
-        if group_local:
+    def _register_new(self) -> None:
+        """Broadcast every not-yet-registered index entry to the shards.
+
+        One pass: the watermark catch-up runs once across all shards (not
+        once per entry), then every new entry's per-shard maintainers are
+        registered — the path ``run_batch`` uses to register a whole admitted
+        wave's captures at once.
+        """
+        if self.engine.strategy == "NO-PS":
+            return
+        new = [e for e in self.engine.index.entries()
+               if e.query.table == self.table_name
+               and id(e) not in self._registered]
+        if not new:
+            return
+        if any(self._group_local(e.query) for e in new):
             for shard in self.shards:
                 shard.catch_up(self.version)
-                shard.register(id(entry), entry.query, ranges)
-        self._registered[id(entry)] = _Registered(entry, ranges, group_local)
+        for e in new:
+            group_local = self._group_local(e.query)
+            if group_local:
+                for shard in self.shards:
+                    shard.register(id(e), e.query, e.sketch.ranges)
+            self._registered[id(e)] = _Registered(e, e.sketch.ranges, group_local)
+        if self.max_registered is not None:
+            self.prune(self.max_registered)
 
     def _unregister(self, key: int) -> None:
         for shard in self.shards:
             shard.unregister(key)
         self._registered.pop(key, None)
+        self.engine.catalog.drop_stacked(("stacked", key))
 
-    def _run_routed(
-        self, q: Query, entry: IndexEntry, t0: float
-    ) -> Optional[Tuple[QueryResult, RunInfo]]:
-        key = id(entry)
-        reg = self._registered.get(key)
-        if reg is None:
-            return None
-        ranges = reg.ranges
-        # Watermark gate: every shard must drain its inbox up to the
-        # coordinator's mutation count before serving — an un-contacted
-        # lagging shard could own fragments the mutations just made
-        # provenance-bearing (and its data must be current for partials).
+    def prune(self, max_entries: int) -> int:
+        """Bound per-shard memory with the coordinator's recency clock.
+
+        Evicts least-recently-hit sketches from the coordinator index
+        (``SketchIndex.prune``) and drops every evicted entry's shard-side
+        state in the same pass: per-shard maintainers, cached local
+        instances, and the stacked launch arrays.  Returns #evictions.
+        """
+        evicted = self.engine.index.prune(max_entries)
+        if evicted:
+            alive = {id(e) for e in self.engine.index.entries()}
+            for key in [k for k in self._registered if k not in alive]:
+                self._unregister(key)
+        return evicted
+
+    def _catch_up_all(self) -> int:
+        """Watermark gate: every shard must drain its inbox up to the
+        coordinator's mutation count before serving — an un-contacted
+        lagging shard could own fragments the mutations just made
+        provenance-bearing (and its data must be current for partials)."""
         applied = 0
         for shard in self.shards:
             applied += shard.catch_up(self.version)
+        return applied
+
+    def _resolve_bits(self, key: int, reg: _Registered) -> Optional[np.ndarray]:
+        """The logical sketch bits for one registered entry (or ``None`` when
+        a shard maintainer was lost — caller falls back to the miss path)."""
         if reg.group_local:
             # Fully decentralized maintenance: every group is shard-local,
             # so the logical bits are the OR of per-shard maintained bits.
@@ -556,64 +737,434 @@ class ShardedEngine:
                     self._unregister(key)
                     return None
                 bits_parts.append(b)
-            bits = np.logical_or.reduce(bits_parts)
-        else:
-            # Groups span shards: the HAVING chain needs global aggregates,
-            # so the *coordinator's* maintainer repairs the logical sketch
-            # (delta-sized) and shards only serve the routed partials.
-            sketch, _ = self.engine._current_sketch(entry)
-            bits = sketch.bits
+            return np.logical_or.reduce(bits_parts)
+        # Groups span shards: the HAVING chain needs global aggregates, so
+        # the *coordinator's* maintainer repairs the logical sketch
+        # (delta-sized) and shards only serve the routed partials.
+        sketch, _ = self.engine._current_sketch(reg.entry)
+        return sketch.bits
 
+    def _stacked_for(
+        self, key: int, reg: _Registered, bits: np.ndarray
+    ) -> StackedInstances:
+        """Build (or fetch) the stacked shard-major arrays for one entry.
+
+        The cache key pins the registration + fragment plan; the token guards
+        freshness (per-shard table identities + the sketch bits), so any
+        shard-side delta application or maintained-bit flip rebuilds the
+        stack while the steady state costs one dictionary probe.
+        """
+        catalog = self.engine.catalog
+        ckey = ("stacked", key, self.db[self.table_name].uid, id(self.plan))
+        # (uid, version) — not id() — per shard table: versions are monotone
+        # under append/delete and survive collapse() (same contents), whereas
+        # a recycled object address could alias a stale stack onto fresh data.
+        token = (tuple((s.table.uid, s.table.version) for s in self.shards),
+                 bits.tobytes())
+        hit = catalog.get_stacked(ckey, token)
+        if hit is not None:
+            return hit
+        q = reg.entry.query
+        ranges = reg.ranges
         routable = ranges.key() == self.ranges.key()
-        per_shard_s: Dict[int, float] = {}
-        partials = []
+        attrs = tuple(q.groupby)
+
+        # The stacked shard axis covers *contacted* shards only: a fragment-
+        # skipped shard owns no sketch fragments, so its instance is empty by
+        # construction and stacking it would only inflate the padded compute
+        # (routing — which shards to skip — stays a host decision; the launch
+        # then computes exactly the routed work).
+        per_shard: List[Tuple] = []
+        contacted_ids: List[int] = []
         for shard in self.shards:
             if routable and not bits[shard.owned].any():
-                continue  # fragment-skip the whole shard
-            ts = time.perf_counter()
-            partials.append(shard.partial(q, key, ranges, bits))
-            per_shard_s[shard.shard_id] = time.perf_counter() - ts
-        tm = time.perf_counter()
-        res = _merge_partials(q, partials)
-        t1 = time.perf_counter()
+                continue  # fragment-skip: contributes no stacked slice
+            contacted_ids.append(shard.shard_id)
+            inst = shard._instance(key, ranges, bits)
+            if q.join is not None:
+                flat, _ = shard.catalog.join(
+                    inst, shard.dims[q.join.right], q.join.left_key,
+                    q.join.right_key)
+            else:
+                flat = inst
+            per_shard.append(inner_block_arrays(q, flat, shard.catalog))
+
+        # Coordinator-owned global group dictionary: np.unique over the
+        # concatenated per-shard group key values — the same construction
+        # the host-loop merge re-keys with, so numbering (and hence result
+        # row order) is identical across the fused, host-loop and
+        # single-node paths.
+        if not attrs:
+            n_groups, group_values = 1, {}
+            global_of_local: List[Optional[np.ndarray]] = [None] * len(per_shard)
+        else:
+            mats, owners = [], []
+            for i, a in enumerate(per_shard):
+                if a[0].n_groups > 0:
+                    mats.append(np.stack(
+                        [np.asarray(a[0].group_values[at]) for at in attrs],
+                        axis=1))
+                    owners.append(i)
+            global_of_local = [None] * len(per_shard)
+            if mats:
+                all_keys = np.concatenate(mats)
+                uniq, inv = np.unique(all_keys, axis=0, return_inverse=True)
+                n_groups = int(uniq.shape[0])
+                group_values = {a: uniq[:, i] for i, a in enumerate(attrs)}
+                off = 0
+                for i, m in zip(owners, mats):
+                    global_of_local[i] = inv[off:off + m.shape[0]]
+                    off += m.shape[0]
+            else:
+                n_groups, group_values = 0, {}
+
+        r_max = max((int(a[1].shape[0]) for a in per_shard), default=0)
+        r_pad = _next_pow2(max(r_max, 1))
+        s_pad = _next_pow2(max(len(per_shard), 1))
+        g_pad = _next_pow2(max(n_groups, 1))
+        vals_np = np.zeros((s_pad, r_pad), np.float32)
+        gid_np = np.zeros((s_pad, r_pad), np.int32)
+        w_np = np.zeros((s_pad, r_pad), np.float32)
+        for i, a in enumerate(per_shard):
+            enc, where_mask, vals = a
+            n = int(where_mask.shape[0])
+            if n == 0:
+                continue
+            gmap = global_of_local[i]
+            gid_np[i, :n] = (enc.gid if gmap is None
+                             else gmap[enc.gid]).astype(np.int32)
+            vals_np[i, :n] = np.asarray(vals, dtype=np.float32)
+            w_np[i, :n] = np.asarray(where_mask, dtype=np.float32)
+
+        st = StackedInstances(
+            vals=place_stacked(jnp.asarray(vals_np[None]), self._mesh),
+            gid=place_stacked(jnp.asarray(gid_np[None]), self._mesh),
+            weights=place_stacked(jnp.asarray(w_np[None]), self._mesh),
+            n_groups=n_groups,
+            g_pad=g_pad,
+            group_values=group_values,
+            contacted_ids=tuple(contacted_ids),
+            token=token,
+        )
+        catalog.put_stacked(ckey, token, st)
+        return st
+
+    def _launch(self, vals, gid, weights, g_pad: int):
+        """The one fused launch: shard_map over the serving mesh when its
+        device count divides the (pow2-padded) shard axis, the vmapped
+        single-program path otherwise."""
+        mesh = self._mesh
+        if mesh is not None and vals.shape[1] % mesh.devices.size == 0:
+            fn = _fused_spmd_fn(mesh)
+        else:
+            fn = _fused_jit
+        LAUNCH_COUNTS["fused_partials"] += 1
+        return fn(vals, gid, weights, g_pad)
+
+    def _result_from_merged(
+        self, q: Query, st: StackedInstances,
+        sums: np.ndarray, counts: np.ndarray,
+    ) -> QueryResult:
+        """Finish one query from the fused launch's merged per-group state —
+        the same group-level tail as ``_merge_partials``, minus the re-key
+        (the stacked layout already speaks the global dictionary)."""
+        if not q.groupby:
+            s, c = float(sums[0]), float(counts[0])
+            agg = _finalize(q.agg.fn, np.array([s], dtype=np.float64),
+                            np.array([c], dtype=np.float64))
+            return result_from_group_state(q, {}, agg, np.array([c > 0]))
+        if st.n_groups == 0:
+            return QueryResult(
+                group_values={a: np.empty(0) for a in
+                              (q.outer_groupby if q.outer_groupby
+                               else q.groupby)},
+                values=np.empty(0))
+        sums64 = sums[:st.n_groups].astype(np.float64)
+        counts64 = counts[:st.n_groups].astype(np.float64)
+        agg = _finalize(q.agg.fn, sums64, counts64)
+        return result_from_group_state(q, st.group_values, agg, counts64 > 0)
+
+    def _run_routed(
+        self, q: Query, entry: IndexEntry, t0: float
+    ) -> Optional[Tuple[QueryResult, RunInfo]]:
+        key = id(entry)
+        reg = self._registered.get(key)
+        if reg is None:
+            return None
+        applied = self._catch_up_all()
+        bits = self._resolve_bits(key, reg)
+        if bits is None:
+            return None
+
+        if self.fused:
+            st = self._stacked_for(key, reg, bits)
+            tl = time.perf_counter()
+            sums, counts = self._launch(st.vals, st.gid, st.weights, st.g_pad)
+            sums_np, counts_np = np.asarray(sums[0]), np.asarray(counts[0])
+            tm = time.perf_counter()
+            res = self._result_from_merged(q, st, sums_np, counts_np)
+            t1 = time.perf_counter()
+            contacted = st.contacted
+            per_shard_s: Dict[int, float] = {}
+            t_launch, t_merge = tm - tl, t1 - tm
+        else:
+            ranges = reg.ranges
+            routable = ranges.key() == self.ranges.key()
+            per_shard_s = {}
+            partials = []
+            for shard in self.shards:
+                if routable and not bits[shard.owned].any():
+                    continue  # fragment-skip the whole shard
+                ts = time.perf_counter()
+                partials.append(shard.partial(q, key, ranges, bits))
+                per_shard_s[shard.shard_id] = time.perf_counter() - ts
+            tm = time.perf_counter()
+            res = _merge_partials(q, partials)
+            t1 = time.perf_counter()
+            contacted = len(per_shard_s)
+            t_launch, t_merge = sum(per_shard_s.values()), t1 - tm
         self.last_route = RouteInfo(
-            contacted=len(per_shard_s),
-            skipped=self.n_shards - len(per_shard_s),
+            contacted=contacted,
+            skipped=self.n_shards - contacted,
             watermark=self.version,
             deltas_applied=applied,
             per_shard_s=per_shard_s,
-            t_merge_s=t1 - tm,
+            t_merge_s=t_merge,
+            t_launch_s=t_launch,
+            fused=self.fused,
         )
         info = RunInfo(
-            reused=True, created=False, attr=ranges.attr,
+            reused=True, created=False, attr=reg.ranges.attr,
             strategy=self.engine.strategy, selectivity=entry.sketch.selectivity,
             t_execute=t1 - t0, repaired=applied > 0,
-            shards_contacted=len(per_shard_s),
-            shards_skipped=self.n_shards - len(per_shard_s),
+            shards_contacted=contacted,
+            shards_skipped=self.n_shards - contacted,
         )
         return res, info
 
+    # -- batched serving -------------------------------------------------------
+    def run_batch(self, qs: Sequence[Query]) -> List[Tuple[QueryResult, RunInfo]]:
+        """Batched sharded serving: one fused launch for ALL index hits, and
+        cross-shard batched admission for the misses.
 
-def _merge_partials(
-    q: Query,
+        Semantically equivalent to ``[self.run(q) for q in qs]`` (results,
+        index contents, sketch bits and shard maintainer state — pinned by
+        ``tests/test_shard_batch.py``).  Hits are grouped by index entry and
+        their stacked arrays concatenate on a leading query axis: the B×S
+        per-group partial matrices for the whole batch come out of ONE XLA
+        launch (counter-asserted), each query finishing with its own
+        HAVING-chain tail on the merged state.  Misses run through the same
+        ``core/admission`` pipeline single-node ``run_batch`` uses (shared
+        samples/AQR/inner-block/capture per signature group), and every
+        captured sketch broadcasts to shard registrations in one pass.
+        """
+        from repro.core.admission import admit_misses
+
+        out: List[Optional[Tuple[QueryResult, RunInfo]]] = [None] * len(qs)
+        pending: List[Tuple[int, Query]] = list(enumerate(qs))
+        while pending:
+            misses: List[Tuple[int, Query, float]] = []
+            hits: Dict[int, List[Tuple[int, Query, IndexEntry, float]]] = {}
+            for i, q in pending:
+                t0 = time.perf_counter()
+                entry = (self.engine.index.lookup_entry(q)
+                         if self.engine.strategy != "NO-PS" else None)
+                tp = time.perf_counter()
+                if entry is None:
+                    misses.append((i, q, tp - t0))
+                elif id(entry) in self._registered:
+                    hits.setdefault(id(entry), []).append((i, q, entry, tp - t0))
+                else:
+                    # Hit without routed registration (rare: the registration
+                    # was dropped): single-node serve + re-register, exactly
+                    # like ``run``'s fallback.
+                    out[i] = self.engine.run(q)
+                    self._register_new()
+            if hits:
+                self._serve_hits_batch(list(hits.items()), out)
+            if not misses:
+                break
+            served, pending = admit_misses(self.engine, misses)
+            for i, item in served.items():
+                out[i] = item
+            self._register_new()
+        return out  # type: ignore[return-value]
+
+    def _serve_hits_batch(
+        self,
+        groups: List[Tuple[int, List[Tuple[int, Query, IndexEntry, float]]]],
+        out: List[Optional[Tuple[QueryResult, RunInfo]]],
+    ) -> None:
+        """Serve one wave's index hits routed — all entries, one launch."""
+        applied = self._catch_up_all()
+        serving: List[Tuple[int, List, StackedInstances]] = []
+        loop_stats: List[Tuple[Tuple[int, ...], Dict[int, float], float, int]] = []
+        for key, members in groups:
+            reg = self._registered.get(key)
+            bits = self._resolve_bits(key, reg) if reg is not None else None
+            if bits is None:
+                # Maintainer lost mid-flight: single-node serve (the entry
+                # still answers from the coordinator), re-register after.
+                for i, q, _, _ in members:
+                    out[i] = self.engine.run(q)
+                self._register_new()
+                continue
+            if not self.fused:
+                loop_stats.append(
+                    self._serve_key_host_loop(key, reg, bits, members,
+                                              applied, out))
+                continue
+            serving.append((key, members, self._stacked_for(key, reg, bits)))
+        if loop_stats:
+            contacted = set().union(*(set(c) for c, _, _, _ in loop_stats))
+            per_shard_s: Dict[int, float] = {}
+            for _, ps, _, _ in loop_stats:
+                for sid, dt in ps.items():
+                    per_shard_s[sid] = per_shard_s.get(sid, 0.0) + dt
+            self.last_route = RouteInfo(
+                contacted=len(contacted),
+                skipped=self.n_shards - len(contacted),
+                watermark=self.version, deltas_applied=applied,
+                per_shard_s=per_shard_s,
+                t_merge_s=sum(m for _, _, m, _ in loop_stats),
+                t_launch_s=sum(per_shard_s.values()), fused=False,
+                n_queries=sum(n for _, _, _, n in loop_stats),
+            )
+        if not serving:
+            return
+
+        tl = time.perf_counter()
+        if len(serving) == 1:
+            st0 = serving[0][2]
+            sums, counts = self._launch(st0.vals, st0.gid, st0.weights,
+                                        st0.g_pad)
+        else:
+            vals, gid, weights, g_pad = self._assemble_batch(serving)
+            sums, counts = self._launch(vals, gid, weights, g_pad)
+        sums_np, counts_np = np.asarray(sums), np.asarray(counts)
+        tm = time.perf_counter()
+
+        union_contacted: set = set()
+        n_served = 0
+        for row, (key, members, st) in enumerate(serving):
+            union_contacted.update(st.contacted_ids)
+            for i, q, entry, tp in members:
+                tq = time.perf_counter()
+                res = self._result_from_merged(
+                    q, st, sums_np[row], counts_np[row])
+                out[i] = (res, RunInfo(
+                    reused=True, created=False,
+                    attr=self._registered[key].ranges.attr,
+                    strategy=self.engine.strategy,
+                    selectivity=entry.sketch.selectivity,
+                    t_probe=tp, t_execute=time.perf_counter() - tq,
+                    repaired=applied > 0,
+                    shards_contacted=st.contacted,
+                    shards_skipped=self.n_shards - st.contacted,
+                ))
+                n_served += 1
+        t1 = time.perf_counter()
+        self.last_route = RouteInfo(
+            contacted=len(union_contacted),
+            skipped=self.n_shards - len(union_contacted),
+            watermark=self.version, deltas_applied=applied,
+            per_shard_s={}, t_merge_s=t1 - tm, t_launch_s=tm - tl,
+            fused=True, n_queries=n_served,
+        )
+
+    def _assemble_batch(self, serving: List[Tuple[int, List, StackedInstances]]):
+        """Concatenate multiple entries' stacked arrays on the query axis.
+
+        Every entry's arrays are padded to the batch's common (pow2)
+        shard/row/group classes; dummy query rows (pow2 tail) carry weight 0
+        everywhere.  The assembled tensors are cached in the catalog keyed by
+        the ordered entry set and token-guarded by every member's freshness
+        token, so a steady-state batch pays one dictionary probe instead of
+        re-padding/concatenating per serve.
+        """
+        catalog = self.engine.catalog
+        bkey = ("stacked_batch",) + tuple(key for key, _, _ in serving)
+        token = tuple(st.token for _, _, st in serving)
+        hit = catalog.get_stacked(bkey, token)
+        if hit is not None:
+            return hit
+        s_pad = max(int(st.vals.shape[1]) for _, _, st in serving)
+        r_pad = max(st.r_pad for _, _, st in serving)
+        g_pad = max(st.g_pad for _, _, st in serving)
+        k_pad = _next_pow2(len(serving))
+
+        def stack(field, dtype):
+            parts = [jnp.pad(getattr(st, field),
+                             ((0, 0), (0, s_pad - int(st.vals.shape[1])),
+                              (0, r_pad - st.r_pad)))
+                     for _, _, st in serving]
+            if k_pad > len(serving):
+                parts.append(jnp.zeros(
+                    (k_pad - len(serving), s_pad, r_pad), dtype))
+            return jnp.concatenate(parts)
+
+        assembled = (stack("vals", jnp.float32), stack("gid", jnp.int32),
+                     stack("weights", jnp.float32), g_pad)
+        catalog.put_stacked(bkey, token, assembled)
+        return assembled
+
+    def _serve_key_host_loop(
+        self, key: int, reg: _Registered, bits: np.ndarray,
+        members: List[Tuple[int, Query, IndexEntry, float]],
+        applied: int,
+        out: List[Optional[Tuple[QueryResult, RunInfo]]],
+    ) -> Tuple[Tuple[int, ...], Dict[int, float], float, int]:
+        """Host-loop batch fallback: per-shard partials once per entry (they
+        are HAVING-independent), merged once, member tails per query.
+        Returns ``(contacted shard ids, per-shard seconds, merge seconds,
+        queries served)`` for the caller's aggregated ``last_route``."""
+        ranges = reg.ranges
+        routable = ranges.key() == self.ranges.key()
+        per_shard_s: Dict[int, float] = {}
+        partials = []
+        q0 = reg.entry.query
+        for shard in self.shards:
+            if routable and not bits[shard.owned].any():
+                continue
+            ts = time.perf_counter()
+            partials.append(shard.partial(q0, key, ranges, bits))
+            per_shard_s[shard.shard_id] = time.perf_counter() - ts
+        tm = time.perf_counter()
+        # One HAVING-independent merge per entry; each member pays only its
+        # own group-level tail (mirroring the fused path's shared launch).
+        state = merge_partials_state(tuple(q0.groupby), partials)
+        for i, q, entry, tp in members:
+            tq = time.perf_counter()
+            res = _result_from_state(q, state)
+            out[i] = (res, RunInfo(
+                reused=True, created=False, attr=ranges.attr,
+                strategy=self.engine.strategy,
+                selectivity=entry.sketch.selectivity,
+                t_probe=tp, t_execute=time.perf_counter() - tq,
+                repaired=applied > 0,
+                shards_contacted=len(per_shard_s),
+                shards_skipped=self.n_shards - len(per_shard_s),
+            ))
+        return (tuple(per_shard_s), dict(per_shard_s),
+                time.perf_counter() - tm, len(members))
+
+
+def merge_partials_state(
+    attrs: Tuple[str, ...],
     partials: List[Tuple[Dict[str, np.ndarray], np.ndarray, np.ndarray]],
-) -> QueryResult:
-    """Merge per-shard per-group partials into the final result.
+) -> Optional[Tuple[Dict[str, np.ndarray], np.ndarray, np.ndarray]]:
+    """Re-key per-shard per-group partials into merged group state.
 
     Partial sums/counts are re-keyed on group *values* (shard-local group
-    numbering is arbitrary) and accumulated in float64; under the integral
-    exactness envelope the float32 cast below reproduces the single-node
-    kernel's per-group values bit-for-bit, and the shared
-    ``result_from_group_state`` finishes HAVING chains and outer blocks
-    identically to single-node execution.
+    numbering is arbitrary) and accumulated in float64; returns
+    ``(group_values, sums, counts)``, or ``None`` when no shard contributed
+    a group.  HAVING-independent, so one merge serves every query behind the
+    same index entry.
     """
-    attrs = tuple(q.groupby)
     if not attrs:
         s = float(sum(p[1].sum() for p in partials))
         c = float(sum(p[2].sum() for p in partials))
-        agg = _finalize(q.agg.fn, np.array([s], dtype=np.float64),
-                        np.array([c], dtype=np.float64))
-        return result_from_group_state(q, {}, agg, np.array([c > 0]))
+        return {}, np.array([s], dtype=np.float64), np.array([c], dtype=np.float64)
     keys, sums, counts = [], [], []
     for gv, s, c in partials:
         if s.shape[0] == 0:
@@ -622,19 +1173,42 @@ def _merge_partials(
         sums.append(s.astype(np.float64))
         counts.append(c.astype(np.float64))
     if not keys:
-        return QueryResult(
-            group_values={a: np.empty(0) for a in
-                          (q.outer_groupby if q.outer_groupby else attrs)},
-            values=np.empty(0))
+        return None
     all_keys = np.concatenate(keys)
     uniq, inv = np.unique(all_keys, axis=0, return_inverse=True)
     sums_m = np.zeros(uniq.shape[0], dtype=np.float64)
     counts_m = np.zeros(uniq.shape[0], dtype=np.float64)
     np.add.at(sums_m, inv, np.concatenate(sums))
     np.add.at(counts_m, inv, np.concatenate(counts))
-    agg = _finalize(q.agg.fn, sums_m, counts_m)
     group_values = {a: uniq[:, i] for i, a in enumerate(attrs)}
+    return group_values, sums_m, counts_m
+
+
+def _result_from_state(
+    q: Query,
+    state: Optional[Tuple[Dict[str, np.ndarray], np.ndarray, np.ndarray]],
+) -> QueryResult:
+    """Finish one query from merged group state: under the integral
+    exactness envelope the float32 cast in ``_finalize`` reproduces the
+    single-node kernel's per-group values bit-for-bit, and the shared
+    ``result_from_group_state`` finishes HAVING chains and outer blocks
+    identically to single-node execution."""
+    if state is None:
+        return QueryResult(
+            group_values={a: np.empty(0) for a in
+                          (q.outer_groupby if q.outer_groupby else q.groupby)},
+            values=np.empty(0))
+    group_values, sums_m, counts_m = state
+    agg = _finalize(q.agg.fn, sums_m, counts_m)
     return result_from_group_state(q, group_values, agg, counts_m > 0)
+
+
+def _merge_partials(
+    q: Query,
+    partials: List[Tuple[Dict[str, np.ndarray], np.ndarray, np.ndarray]],
+) -> QueryResult:
+    """Merge per-shard per-group partials into one query's final result."""
+    return _result_from_state(q, merge_partials_state(tuple(q.groupby), partials))
 
 
 def _finalize(fn: str, sums: np.ndarray, counts: np.ndarray) -> np.ndarray:

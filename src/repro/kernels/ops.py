@@ -20,7 +20,10 @@ from repro.kernels.fragment_bitmap import (
     fragment_bitmap_batch_pallas,
     fragment_bitmap_pallas,
 )
-from repro.kernels.segment_aggregate import segment_aggregate_pallas
+from repro.kernels.segment_aggregate import (
+    segment_aggregate_batch_pallas,
+    segment_aggregate_pallas,
+)
 from repro.kernels.sketch_filter import sketch_filter_pallas
 
 Array = jax.Array
@@ -96,6 +99,31 @@ def segment_aggregate(
     backend: Optional[str] = None,
 ) -> Tuple[Array, Array]:
     return _segment_aggregate_jit(values, gid, n_groups, weights, _mode(backend))
+
+
+@functools.partial(jax.jit, static_argnums=(2, 4))
+def _segment_aggregate_batch_jit(values, gid, n_groups, weights, mode):
+    if mode == "pallas":
+        return segment_aggregate_batch_pallas(values, gid, n_groups, weights)
+    if mode == "interpret":
+        return segment_aggregate_batch_pallas(values, gid, n_groups, weights,
+                                              interpret=True)
+    return ref.segment_aggregate_batch_ref(values, gid, n_groups, weights)
+
+
+def segment_aggregate_batch(
+    values: Array,
+    gid: Array,
+    n_groups: int,
+    weights: Optional[Array] = None,
+    backend: Optional[str] = None,
+) -> Tuple[Array, Array]:
+    """B independent segment problems (B, n) -> (B, n_groups) sums/counts.
+
+    The sharded serving engine flattens its (query, shard) axes into ``B`` so
+    every shard's per-group partials come out of one launch.
+    """
+    return _segment_aggregate_batch_jit(values, gid, n_groups, weights, _mode(backend))
 
 
 @functools.partial(jax.jit, static_argnums=(3, 4, 5))

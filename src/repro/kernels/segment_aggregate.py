@@ -49,6 +49,73 @@ def _segagg_kernel(gid_ref, val_ref, w_ref, out_ref, *, group_block: int):
     out_ref[...] += partial.reshape(out_ref.shape)
 
 
+def _segagg_batch_kernel(gid_ref, val_ref, w_ref, out_ref, *, group_block: int):
+    r = pl.program_id(2)
+
+    @pl.when(r == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    gid = gid_ref[...].reshape(-1)
+    vals = val_ref[...].reshape(-1).astype(jnp.float32)
+    w = w_ref[...].reshape(-1).astype(jnp.float32)
+    rows = gid.shape[0]
+
+    local = gid - pl.program_id(1) * group_block
+    group_ids = jax.lax.broadcasted_iota(jnp.int32, (rows, group_block), 1)
+    onehot = (local[:, None] == group_ids).astype(jnp.float32)
+    vw = jnp.stack([vals * w, w], axis=1)
+    partial = jax.lax.dot_general(
+        onehot, vw, (((0,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    out_ref[...] += partial.reshape(out_ref.shape)
+
+
+def segment_aggregate_batch_pallas(
+    values: jax.Array,
+    gid: jax.Array,
+    n_groups: int,
+    weights: jax.Array | None = None,
+    rows_per_tile: int = ROWS_PER_TILE,
+    group_block: int = GROUP_BLOCK,
+    interpret: bool = False,
+):
+    """Batched segmented aggregation: B independent segment problems, one grid.
+
+    ``values``/``gid``/``weights`` are (B, n); returns (sums f32[B, n_groups],
+    counts f32[B, n_groups]).  The batch dimension is the slowest grid axis
+    so each (batch, group-block) accumulator stays VMEM-resident while its
+    row tiles stream — the shard/query axes of the sharded serving engine's
+    stacked launch map onto ``B``.
+    """
+    b, n = values.shape
+    w = (jnp.ones_like(values, dtype=jnp.float32) if weights is None
+         else weights.astype(jnp.float32))
+    n_pad = -n % rows_per_tile
+    gid_p = jnp.pad(gid.astype(jnp.int32), ((0, 0), (0, n_pad)), constant_values=-1)
+    val_p = jnp.pad(values.astype(jnp.float32), ((0, 0), (0, n_pad)))
+    w_p = jnp.pad(w, ((0, 0), (0, n_pad)))
+    n_tiles = (n + n_pad) // rows_per_tile
+    n_gblocks = (n_groups + group_block - 1) // group_block
+    sub = rows_per_tile // LANE
+
+    gid_2d = gid_p.reshape(b * n_tiles * sub, LANE)
+    val_2d = val_p.reshape(b * n_tiles * sub, LANE)
+    w_2d = w_p.reshape(b * n_tiles * sub, LANE)
+
+    in_spec = pl.BlockSpec((sub, LANE), lambda i, g, r: (i * n_tiles + r, 0))
+    out = pl.pallas_call(
+        functools.partial(_segagg_batch_kernel, group_block=group_block),
+        grid=(b, n_gblocks, n_tiles),
+        in_specs=[in_spec, in_spec, in_spec],
+        out_specs=pl.BlockSpec((group_block, 2), lambda i, g, r: (i * n_gblocks + g, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * n_gblocks * group_block, 2), jnp.float32),
+        interpret=interpret,
+    )(gid_2d, val_2d, w_2d)
+    out = out.reshape(b, n_gblocks * group_block, 2)
+    return out[:, :n_groups, 0], out[:, :n_groups, 1]
+
+
 def segment_aggregate_pallas(
     values: jax.Array,
     gid: jax.Array,

@@ -2,6 +2,8 @@
 device state — the dry-run sets XLA_FLAGS before any jax initialization)."""
 from __future__ import annotations
 
+import functools
+
 import jax
 
 
@@ -16,3 +18,22 @@ def make_host_mesh():
     """Whatever this host has (smoke tests / examples): (n_devices, 1)."""
     n = len(jax.devices())
     return jax.make_mesh((n, 1), ("data", "model"))
+
+
+@functools.lru_cache(maxsize=None)
+def make_serving_mesh(min_devices: int = 2):
+    """1-D mesh over the local accelerators for SPMD sharded serving.
+
+    The sharded engine's fused routed launch shard_maps its stacked
+    (query, shard, row) arrays over the ``"shards"`` axis and psum-merges the
+    per-shard partials.  Returns ``None`` on hosts with fewer than
+    ``min_devices`` devices — there the same stacked launch runs as one
+    single-device program (the vmapped fallback), so callers can treat the
+    mesh as a pure placement hint.  Cached (the local device set is fixed for
+    the process) so every engine shares ONE mesh object and the jitted
+    shard_map programs keyed on it never recompile per engine.
+    """
+    devices = jax.local_devices()
+    if len(devices) < min_devices:
+        return None
+    return jax.make_mesh((len(devices),), ("shards",))

@@ -13,8 +13,41 @@ from __future__ import annotations
 from typing import List, Optional
 
 import jax
+from jax.sharding import NamedSharding, PartitionSpec
 
 from repro.core.table import ColumnTable
+
+
+def serving_mesh(use_devices: bool = True):
+    """The 1-D SPMD serving mesh, or ``None`` (single device / disabled).
+
+    Thin indirection over ``repro.launch.mesh.make_serving_mesh`` so the
+    sharded engine's placement decisions all route through this module.
+    """
+    if not use_devices:
+        return None
+    from repro.launch.mesh import make_serving_mesh
+
+    return make_serving_mesh()
+
+
+def place_stacked(arr: jax.Array, mesh, shard_axis: int = 1) -> jax.Array:
+    """Pin a stacked shard-major array's shard axis across the mesh.
+
+    ``arr``'s ``shard_axis`` is laid out over the mesh's ``"shards"`` axis
+    (every device owns a contiguous run of shard slices) so the fused
+    shard_map launch reads its shard's rows locally.  Identity when there is
+    no mesh or the axis does not divide evenly (the vmapped single-program
+    fallback then runs wherever the arrays already live).
+    """
+    if mesh is None:
+        return arr
+    n_dev = mesh.devices.size
+    if arr.shape[shard_axis] % n_dev != 0:
+        return arr
+    spec = [None] * arr.ndim
+    spec[shard_axis] = "shards"
+    return jax.device_put(arr, NamedSharding(mesh, PartitionSpec(*spec)))
 
 
 def shard_devices(n_shards: int, use_devices: bool = True) -> List[Optional[jax.Device]]:

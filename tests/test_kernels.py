@@ -50,6 +50,23 @@ def test_segment_aggregate(n, g, dtype):
     np.testing.assert_allclose(np.asarray(c1), np.asarray(c2), rtol=1e-6)
 
 
+@pytest.mark.parametrize("b,n,g", [(1, 100, 5), (4, 700, 130), (3, 2048, 512)])
+def test_segment_aggregate_batch(b, n, g):
+    """Batched kernel == ref == per-row unbatched kernel, bit-for-bit on
+    integral f32 inputs (the sharded fused launch's exactness envelope)."""
+    gid = jnp.asarray(RNG.integers(0, g, (b, n)).astype(np.int32))
+    vals = jnp.asarray(RNG.integers(0, 100, (b, n)).astype(np.float32))
+    w = jnp.asarray((RNG.random((b, n)) < 0.5).astype(np.float32))
+    s1, c1 = ops.segment_aggregate_batch(vals, gid, g, w, backend="interpret")
+    s2, c2 = ref.segment_aggregate_batch_ref(vals, gid, g, w)
+    np.testing.assert_array_equal(np.asarray(s1), np.asarray(s2))
+    np.testing.assert_array_equal(np.asarray(c1), np.asarray(c2))
+    for i in range(b):
+        s3, c3 = ops.segment_aggregate(vals[i], gid[i], g, w[i], backend="ref")
+        np.testing.assert_array_equal(np.asarray(s2[i]), np.asarray(s3))
+        np.testing.assert_array_equal(np.asarray(c2[i]), np.asarray(c3))
+
+
 def test_segment_aggregate_matches_engine_groupby():
     """Kernel path == the executor's segment aggregation."""
     from repro.core.datasets import make_crimes
