@@ -1,0 +1,288 @@
+"""Chaos-tolerance gates: differential at scale, recovery cost, health tax.
+
+Three contracts from the chaos PR's acceptance criteria, all enforced at
+quick scale (the CI chaos-smoke job):
+
+  * **differential** — >= 100 seeded-random replay sequences (kill / stall /
+    partition / flaky / heal interleaved with queries, query batches, appends
+    and deletes) across 1-8 shards on the crimes schema AND all four workload
+    templates (A-GH, A-JGH, AA-GH, AA-JGH) on the TPC-H join schema: every
+    chaotic trace must be bit-identical to the fault-free replay of the same
+    ops.  Chaos may change routing, never results.
+  * **recovery** — bringing a killed shard back (probe + checkpoint adopt +
+    delta replay + maintainer re-registration) must be >= 3x cheaper than
+    cold re-capture: evicting the index and re-admitting the same sketches
+    (selection + capture + registration on every shard), which is what the
+    engine would pay without the recovery protocol.
+  * **overhead** — fault-free serving with health tracking on (retry
+    wrappers, straggler monitors, checkpoint bookkeeping) must cost <= 5%
+    over ``health=False`` on the fused reuse path, measured interleaved so
+    runner drift hits both sides equally.
+
+``--json`` (via ``benchmarks.run``) writes ``BENCH_chaos.json``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import time
+
+import numpy as np
+
+from benchmarks.common import emit
+from repro.core import Aggregate, Database, Having, Query, ShardedEngine, execute
+from repro.core.datasets import make_crimes, make_tpch
+from repro.runtime.chaos import differential, random_ops, random_schedule
+
+#: (shard_counts, seeds_per_count, ops_per_sequence) for the two schemas.
+SEQ_PLAN = {
+    "quick": {"crimes": (tuple(range(1, 9)), 10, 8), "tpch": ((2, 4, 6, 8), 6, 8)},
+    "full": {"crimes": (tuple(range(1, 9)), 20, 12), "tpch": ((2, 4, 6, 8), 12, 10)},
+}
+MIN_SEQUENCES = 100
+MIN_RECOVERY_SPEEDUP = 3.0
+MAX_HEALTH_OVERHEAD = 1.05
+RECOVERY_CYCLES = 3
+OVERHEAD_REPEATS = 20
+
+
+def _crimes_queries(db):
+    base = Query("crimes", ("district", "year"), Aggregate("sum", "records"))
+    sums = execute(base, db).values
+    qs = [dataclasses.replace(base, having=Having(">", float(np.quantile(sums, qt))))
+          for qt in (0.5, 0.8)]
+    byear = Query("crimes", ("year",), Aggregate("sum", "records"))
+    qs.append(dataclasses.replace(byear, having=Having(
+        ">", float(np.quantile(execute(byear, db).values, 0.6)))))
+    return qs
+
+
+def _crimes_rows(rng, n):
+    t = make_crimes(n, seed=int(rng.integers(1 << 30)))
+    return {a: np.asarray(t[a]) for a in t.schema}
+
+
+def _tpch_templates(db):
+    from repro.core import JoinSpec
+
+    def thresh(q, qt):
+        vals = execute(dataclasses.replace(q, having=None, outer_having=None),
+                       db).values
+        return float(np.quantile(vals, qt))
+
+    agh = Query("lineitem", ("l_suppkey",), Aggregate("sum", "l_quantity"))
+    agh = dataclasses.replace(agh, having=Having(">", thresh(agh, 0.8)))
+    ajgh = Query("lineitem", ("l_suppkey",), Aggregate("sum", "l_quantity"),
+                 join=JoinSpec("orders", "l_orderkey", "o_orderkey"))
+    ajgh = dataclasses.replace(ajgh, having=Having(">", thresh(ajgh, 0.8)))
+    aagh = Query("lineitem", ("l_partkey", "l_suppkey"),
+                 Aggregate("sum", "l_quantity"), having=Having(">", 0.0),
+                 outer_groupby=("l_suppkey",), outer_agg=Aggregate("sum", None))
+    aagh = dataclasses.replace(aagh, outer_having=Having(">", thresh(aagh, 0.8)))
+    aajgh = Query("lineitem", ("l_partkey", "l_suppkey"), Aggregate("count", None),
+                  join=JoinSpec("orders", "l_orderkey", "o_orderkey"),
+                  having=Having(">", 0.0),
+                  outer_groupby=("l_suppkey",), outer_agg=Aggregate("sum", None))
+    aajgh = dataclasses.replace(
+        aajgh, outer_having=Having(">", thresh(aajgh, 0.8)))
+    return [agh, ajgh, aagh, aajgh]
+
+
+def _run_differential(scale: str):
+    plan = SEQ_PLAN[scale]
+    total = identical = 0
+    failures = []
+
+    crimes_db = Database({"crimes": make_crimes(2500, seed=17)})
+    crimes_qs = _crimes_queries(crimes_db)
+    counts, seeds, n_ops = plan["crimes"]
+    for n_shards in counts:
+        for seed in range(seeds):
+            ops = random_ops(seed * 31 + n_shards, n_ops, crimes_qs, _crimes_rows)
+            events = random_schedule(seed * 97 + n_shards + 1000, n_ops, n_shards)
+            ok, _, _ = differential(
+                lambda n=n_shards: ShardedEngine(
+                    crimes_db, "crimes", "district", n_shards=n, n_ranges=16,
+                    theta=0.1, seed=0, min_selectivity_gain=2.0,
+                    op_deadline_s=0.02),
+                "crimes", ops, events)
+            total += 1
+            identical += ok
+            if not ok:
+                failures.append(("crimes", n_shards, seed))
+
+    tpch_db = make_tpch(2000, seed=8)
+    tpch_qs = _tpch_templates(tpch_db)
+
+    def tpch_rows(rng, n):
+        t = make_tpch(4 * n, seed=int(rng.integers(1 << 30)))["lineitem"]
+        return {a: np.asarray(t[a])[:n] for a in t.schema}
+
+    counts, seeds, n_ops = plan["tpch"]
+    for n_shards in counts:
+        for seed in range(seeds):
+            ops = random_ops(seed * 53 + n_shards + 7, n_ops, tpch_qs, tpch_rows,
+                             p_query=0.5, p_batch=0.2, p_append=0.2)
+            events = random_schedule(seed * 41 + n_shards + 2000, n_ops, n_shards)
+            ok, _, _ = differential(
+                lambda n=n_shards: ShardedEngine(
+                    tpch_db, "lineitem", "l_suppkey", n_shards=n, n_ranges=16,
+                    theta=0.1, seed=0, min_selectivity_gain=1.0,
+                    op_deadline_s=0.02),
+                "lineitem", ops, events)
+            total += 1
+            identical += ok
+            if not ok:
+                failures.append(("tpch", n_shards, seed))
+    return total, identical, failures
+
+
+def _run_recovery(n_rows: int):
+    """Recovery machinery (probe + checkpoint adopt + delta replay +
+    maintainer re-registration, i.e. ``_catch_up_all`` post-heal) vs cold
+    re-capture (evict the index and re-admit: selection + capture +
+    registration on every shard — what the engine would have to do without
+    the recovery protocol).
+
+    Each kill/heal cycle runs on a fresh engine over the same table with the
+    same append batch, so cycles are shape-identical: the first pays any
+    one-time XLA compiles, min-of-N measures the steady-state cost — the
+    same treatment the re-admission side gets from its min-of-N.
+    """
+    db = Database({"crimes": make_crimes(n_rows, seed=23)})
+    qs = _crimes_queries(db)[:2]
+    t = make_crimes(200, seed=77)
+    batch = {a: np.asarray(t[a]) for a in t.schema}
+
+    t_recover = float("inf")
+    se = None
+    for _ in range(RECOVERY_CYCLES):
+        se = ShardedEngine(db, "crimes", "district", n_shards=4, n_ranges=32,
+                           theta=0.1, seed=0, min_selectivity_gain=2.0)
+        for q in qs:
+            se.run(q)
+            se.run(q)
+        se.shards[1].inject("kill")
+        se.run(qs[0])  # degraded serve: suspect
+        se.run(qs[0])  # degraded serve: dead
+        se.append_rows("crimes", batch)  # logged for the dead shard
+        se.shards[1].heal()
+        t0 = time.perf_counter()
+        applied, down = se._catch_up_all()  # probe -> adopt -> replay -> re-reg
+        t_recover = min(t_recover, time.perf_counter() - t0)
+        assert not down and se.health[1] == "healthy"
+        res, info = se.run(qs[0])
+        assert not info.degraded
+        assert res.canonical() == execute(qs[0], se.db).canonical()
+
+    # Cold re-capture on the final engine (same table state, warm caches —
+    # the generous baseline): evict every entry, re-admit from scratch.
+    t_recapture = float("inf")
+    for _ in range(RECOVERY_CYCLES):
+        for e in list(se.engine.index.entries()):
+            se.engine.index.remove(e)
+            se._unregister(id(e))
+        t0 = time.perf_counter()
+        created = 0
+        for q in qs:
+            _, info = se.run(q)
+            created += info.created
+        t_recapture = min(t_recapture, time.perf_counter() - t0)
+        assert created >= 1  # the narrower query reuses the broad sketch
+    return t_recover, t_recapture
+
+
+def _run_overhead(n_rows: int):
+    """Fault-free fused reuse latency, health tracking on vs off,
+    interleaved best-of-N so load drift hits both engines equally."""
+    db = Database({"crimes": make_crimes(n_rows, seed=29)})
+    q = _crimes_queries(db)[0]
+    engines = {
+        "health": ShardedEngine(db, "crimes", "district", n_shards=4,
+                                n_ranges=32, theta=0.1, seed=0,
+                                min_selectivity_gain=2.0, health=True),
+        "plain": ShardedEngine(db, "crimes", "district", n_shards=4,
+                               n_ranges=32, theta=0.1, seed=0,
+                               min_selectivity_gain=2.0, health=False),
+    }
+    for se in engines.values():
+        se.run(q)
+        se.run(q)  # warm the fused stack + compile
+    best = {"health": float("inf"), "plain": float("inf")}
+    for _ in range(OVERHEAD_REPEATS):
+        for name, se in engines.items():
+            t0 = time.perf_counter()
+            _, info = se.run(q)
+            best[name] = min(best[name], time.perf_counter() - t0)
+            assert info.reused and not info.degraded
+    return best["health"], best["plain"]
+
+
+def run(scale: str = "quick", json_path: str | None = None):
+    total, identical, failures = _run_differential(scale)
+    n_rows = 60_000 if scale == "quick" else 200_000
+    t_recover, t_recapture = _run_recovery(n_rows)
+    t_health, t_plain = _run_overhead(n_rows)
+
+    recovery_speedup = t_recapture / max(t_recover, 1e-9)
+    overhead = t_health / max(t_plain, 1e-9)
+    rows = [
+        ("chaos_differential", total, identical, len(failures), "", ""),
+        ("chaos_recovery", "", "", "", f"{t_recover*1e3:.3f}",
+         f"{recovery_speedup:.2f}"),
+        ("chaos_overhead", "", "", "", f"{t_health*1e3:.3f}",
+         f"{overhead:.3f}"),
+    ]
+    emit(rows, ("bench", "sequences", "identical", "diverged", "ms", "ratio"))
+
+    if json_path:  # write before the gates: the artifact lands either way
+        with open(json_path, "w") as f:
+            json.dump({
+                "bench": "chaos", "scale": scale,
+                "differential": {
+                    "sequences": total, "identical": identical,
+                    "min_sequences": MIN_SEQUENCES,
+                    "failures": failures,
+                },
+                "recovery": {
+                    "t_recover_ms": round(t_recover * 1e3, 3),
+                    "t_recapture_ms": round(t_recapture * 1e3, 3),
+                    "speedup": round(recovery_speedup, 2),
+                    "min_speedup": MIN_RECOVERY_SPEEDUP,
+                },
+                "overhead": {
+                    "t_health_ms": round(t_health * 1e3, 3),
+                    "t_plain_ms": round(t_plain * 1e3, 3),
+                    "ratio": round(overhead, 4),
+                    "max_ratio": MAX_HEALTH_OVERHEAD,
+                },
+            }, f, indent=2)
+        print(f"# wrote {json_path}")
+
+    if scale == "quick":
+        assert total >= MIN_SEQUENCES, (
+            f"only {total} replay sequences (gate: >= {MIN_SEQUENCES})")
+        assert identical == total, (
+            f"{len(failures)} chaotic traces diverged from fault-free: "
+            f"{failures[:5]}")
+        assert recovery_speedup >= MIN_RECOVERY_SPEEDUP, (
+            f"shard recovery ({t_recover*1e3:.2f}ms) is only "
+            f"{recovery_speedup:.2f}x cheaper than cold re-capture "
+            f"({t_recapture*1e3:.2f}ms); gate >= {MIN_RECOVERY_SPEEDUP}x")
+        assert overhead <= MAX_HEALTH_OVERHEAD, (
+            f"health tracking costs {overhead:.3f}x the untracked fused path "
+            f"({t_health*1e3:.3f}ms vs {t_plain*1e3:.3f}ms); gate <= "
+            f"{MAX_HEALTH_OVERHEAD}x")
+    return rows
+
+
+if __name__ == "__main__":
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--scale", choices=["quick", "full"], default="quick")
+    ap.add_argument("--json", action="store_true")
+    args = ap.parse_args()
+    run(scale="quick" if args.quick else args.scale,
+        json_path="BENCH_chaos.json" if args.json else None)

@@ -5,9 +5,11 @@
 Emits CSV per benchmark.  ``--json`` additionally writes ``BENCH_fig9.json``
 (per-strategy t_select/t_capture/t_execute/t_probe/t_repair + reused-exec
 means and the speedup over ``benchmarks/seed_fig9_baseline.json``),
-``BENCH_maintenance.json``, ``BENCH_shard.json`` and ``BENCH_admission.json``
+``BENCH_maintenance.json``, ``BENCH_shard.json``, ``BENCH_admission.json``
 (batched vs sequential admission, >= 3x per-query miss-path floor enforced at
-quick scale) so successive PRs have a perf trajectory to compare against.  The dry-run/roofline artifacts are
+quick scale) and ``BENCH_chaos.json`` (>= 100 chaos-differential replay
+sequences, >= 3x recovery-vs-recapture, <= 5% health-tracking tax) so
+successive PRs have a perf trajectory to compare against.  The dry-run/roofline artifacts are
 produced by ``repro.launch.dryrun`` + ``benchmarks.roofline`` (they need the
 512-device XLA flag and hence their own process).
 """
@@ -35,6 +37,7 @@ def main() -> None:
     from benchmarks import (
         bench_ablation,
         bench_admission,
+        bench_chaos,
         bench_fig4_bootstrap,
         bench_fig7_strategies,
         bench_fig8_accuracy,
@@ -65,6 +68,10 @@ def main() -> None:
         "admission": functools.partial(
             bench_admission.run,
             json_path="BENCH_admission.json" if args.json else None,
+        ),
+        "chaos": functools.partial(
+            bench_chaos.run,
+            json_path="BENCH_chaos.json" if args.json else None,
         ),
     }
     failed = []

@@ -165,3 +165,32 @@ print(f"sharded run_batch: {len(shard_batch)} hits in {t_sb*1e3:.1f}ms "
 for q_i, (r_i, i_i) in zip(shard_batch, outs_s):
     assert i_i.reused
     assert r_i.canonical() == execute(q_i, sharded.db).canonical()
+
+# --- 7. Chaos tolerance: kill a shard, keep serving, rebalance, recover ------
+# Shards fail.  The engine tracks per-shard health (retry wrappers + straggler
+# monitors), serves a down shard's fragment slices coordinator-side (degraded
+# mode — bit-identical, just slower), and recovers a rejoining shard from its
+# checkpoint + the coordinator's delta log — never by re-capturing sketches.
+sharded.shards[1].inject("kill")        # all of shard 1's local state is gone
+res_d, info_d = sharded.run(q2)         # ...but serving never stops
+route = sharded.last_route
+print(f"shard 1 killed: degraded={info_d.degraded} "
+      f"failed_shards={route.failed_shards} health={sharded.health}")
+assert res_d.canonical() == execute(q2, sharded.db).canonical()
+
+sharded.run(q2)                          # second failed contact: suspect->dead
+rebuilt = sharded.rebalance()            # re-place its fragments on survivors
+print(f"rebalanced: fragments moved to shards {sorted(set(rebuilt))}, "
+      f"shard 1 now owns {sharded.plan.fragments_of(1).size} fragments")
+res_r, info_r = sharded.run(q2)          # clean (non-degraded) serving again
+assert not info_r.degraded
+assert res_r.canonical() == execute(q2, sharded.db).canonical()
+
+sharded.shards[1].heal()                 # the shard process comes back
+sharded.run(q2)                          # probe -> recover -> healthy
+print(f"shard 1 rejoined: health={sharded.health} "
+      f"watermark v{sharded.min_watermark()} == coordinator v{sharded.version}")
+
+# The same arc is scriptable: repro.runtime.chaos replays seeded fault
+# schedules (kill/stall/partition/flaky/heal) against seeded workloads and
+# asserts chaotic traces equal fault-free ones bit-for-bit (`differential`).

@@ -49,9 +49,11 @@ from repro.core.table import (
     from_numpy,
 )
 from repro.core.shard import (
+    BackpressureError,
     FragmentShard,
     RouteInfo,
     ShardPlan,
+    ShardUnavailableError,
     ShardedEngine,
     plan_fragments,
 )
@@ -72,4 +74,5 @@ __all__ = [
     "SelectionResult", "candidate_pool", "select_attribute",
     "ColumnTable", "Database", "FragmentLayout", "encode_groups", "from_numpy",
     "FragmentShard", "RouteInfo", "ShardPlan", "ShardedEngine", "plan_fragments",
+    "BackpressureError", "ShardUnavailableError",
 ]

@@ -70,6 +70,11 @@ class RunInfo:
     # fragments.  ``None`` for single-node execution.
     shards_contacted: Optional[int] = None
     shards_skipped: Optional[int] = None
+    # Sharded serving answered with one or more shards down/lagging: their
+    # fragment slices were served from the coordinator's authoritative table
+    # (bit-identical, but without that shard's parallelism).  The per-route
+    # detail (which shards, how many retries) lives on ``RouteInfo``.
+    degraded: bool = False
 
     @property
     def t_total(self) -> float:

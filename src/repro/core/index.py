@@ -110,6 +110,11 @@ class SketchIndex:
     def entries(self) -> List[IndexEntry]:
         return [e for v in self._entries.values() for e in v]
 
+    def contains(self, entry: IndexEntry) -> bool:
+        """True when ``entry`` (by identity) is still stored — registration
+        state keyed on entry ids must not resurrect an evicted entry."""
+        return any(e is entry for e in self._entries.get(_pred_key(entry.query), []))
+
     def remove(self, entry: IndexEntry) -> bool:
         """Evict one entry by identity (e.g. its join dimension mutated and
         the sketch can no longer be repaired); returns True when found."""

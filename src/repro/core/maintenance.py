@@ -385,6 +385,32 @@ def build_maintainer(q: Query, db: Database, ranges: RangeSet,
     return SketchMaintainer(q, db, ranges, catalog)
 
 
+def maintainer_for(
+    q: Query,
+    db: Database,
+    ranges: RangeSet,
+    catalog: Optional[Catalog],
+    pool: List["SketchMaintainer"],
+) -> SketchMaintainer:
+    """A maintainer for ``q``, cloning counting state from a pool-mate.
+
+    A batch of sketches sharing one inner-block signature and partition (the
+    common case in admitted waves, and in shard recovery re-registering a
+    whole registration set at once) differs only in HAVING thresholds — the
+    expensive counting pass is threshold-independent, so the first build pays
+    it and the rest ``clone_for``.  Falls back to a fresh build when no
+    pool-mate matches (different signature, partition, or table version).
+    """
+    fact = db[q.table]
+    sig = q.inner_signature()
+    for m in pool:
+        if (m.q.inner_signature() == sig
+                and m.ranges.key() == ranges.key()
+                and m.table_uid == fact.uid and m.version == fact.version):
+            return m.clone_for(q, db, catalog)
+    return SketchMaintainer(q, db, ranges, catalog)
+
+
 @dataclasses.dataclass
 class RepairResult:
     sketch: ProvenanceSketch

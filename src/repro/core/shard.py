@@ -48,7 +48,7 @@ import collections
 import dataclasses
 import functools
 import time
-from typing import Deque, Dict, List, Mapping, Optional, Sequence, Tuple
+from typing import Deque, Dict, List, Mapping, Optional, Sequence, Set, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -57,7 +57,7 @@ import numpy as np
 from repro.core.catalog import Catalog
 from repro.core.engine import PBDSEngine, RunInfo
 from repro.core.index import IndexEntry
-from repro.core.maintenance import MaintenanceError, SketchMaintainer
+from repro.core.maintenance import MaintenanceError, SketchMaintainer, maintainer_for
 from repro.core.queries import (
     Query,
     QueryResult,
@@ -68,11 +68,29 @@ from repro.core.queries import (
 from repro.core.ranges import RangeSet, equi_depth_ranges
 from repro.core.table import ColumnTable, Database, FragmentLayout
 from repro.parallel.placement import (
+    failover_device,
     place_stacked,
     place_table,
     serving_mesh,
     shard_devices,
 )
+from repro.runtime.elastic import plan_replacement
+from repro.runtime.resilience import RetryPolicy, StragglerMonitor, with_retries
+
+
+class ShardUnavailableError(RuntimeError):
+    """A shard could not be reached: dead, partitioned, or mid-failure.
+
+    The retryable error class of the serving layer — ``ShardedEngine`` wraps
+    every shard op in ``runtime.resilience.with_retries`` against exactly
+    this type, so transient drops retry while logic errors (e.g. the
+    mis-routed-tail corruption guard) surface immediately.
+    """
+
+
+class BackpressureError(RuntimeError):
+    """A shard's inbox is at its depth cap; the coordinator must drain or
+    let its per-shard delta log carry the entry until the next resync."""
 
 
 # ---------------------------------------------------------------------------
@@ -149,9 +167,11 @@ class FragmentShard:
         clustered: ColumnTable,
         dims: Mapping[str, ColumnTable],
         device=None,
+        inbox_cap: Optional[int] = None,
+        version: int = 0,
     ):
-        if clustered.layout is None or clustered.layout.tail:
-            raise ValueError("shards are built from a tail-free clustered table")
+        if clustered.layout is None:
+            raise ValueError("shards are built from a clustered table")
         self.shard_id = shard_id
         self.ranges = ranges
         self.owned = plan.fragments_of(shard_id)
@@ -159,8 +179,21 @@ class FragmentShard:
         self._local_of_global = np.full(ranges.n_ranges, -1, dtype=np.int64)
         self._local_of_global[self.owned] = np.arange(self.owned.shape[0])
 
-        off = clustered.layout.offsets
+        lay = clustered.layout
+        off = lay.offsets
         parts = [np.arange(off[f], off[f + 1]) for f in self.owned]
+        n_tail_local = 0
+        if lay.tail:
+            # Rebuild-from-coordinator path (failover/rebalance): the source
+            # table may carry an unsorted append tail — route its rows by
+            # fragment ownership exactly like ``ShardedEngine.append_rows``.
+            n = clustered.num_rows
+            tail_vals = np.asarray(clustered[ranges.attr])[n - lay.tail:]
+            tail_frag = np.asarray(ranges.bucketize(jnp.asarray(tail_vals)))
+            own_tail = (n - lay.tail) + np.nonzero(
+                plan.owner[tail_frag] == shard_id)[0]
+            n_tail_local = int(own_tail.shape[0])
+            parts.append(own_tail)
         idx = np.concatenate(parts) if parts else np.empty(0, dtype=np.int64)
         local = clustered.gather(jnp.asarray(idx))
         local_sizes = np.array([off[f + 1] - off[f] for f in self.owned],
@@ -171,35 +204,123 @@ class FragmentShard:
             # different coordinate system from the global partition's.
             ranges_key=("shard", shard_id, ranges.key()),
             offsets=np.concatenate([[0], np.cumsum(local_sizes)]).astype(np.int64),
+            tail=n_tail_local,
         )
         self.device = device
-        self.table = place_table(
-            ColumnTable(local.name, local.columns, clustered.primary_key, layout),
+        self.table: Optional[ColumnTable] = place_table(
+            ColumnTable(local.name, local.columns, clustered.primary_key, layout,
+                        version=version),
             device)
         self.dims: Dict[str, ColumnTable] = {
             k: place_table(v, device) for k, v in dims.items()}
         self.catalog = Catalog()
         self.maintainers: Dict[int, SketchMaintainer] = {}
         self._inst: Dict[int, Tuple[Tuple, ColumnTable]] = {}
-        self._inbox: Deque[Tuple[str, object]] = collections.deque()
+        self._inbox: Deque[Tuple[int, str, object]] = collections.deque()
+        # Inbox depth cap: a shard that never drains (dead, partitioned)
+        # must not silently eat the coordinator's memory — past the cap
+        # ``ship`` raises ``BackpressureError`` and the coordinator's delta
+        # log carries the entry until the next resync.
+        self.inbox_cap = inbox_cap
+        self.backpressure_hits = 0
+        # Fault-injection state (``runtime.chaos`` drives it): the guard
+        # below is the in-process stand-in for an RPC boundary.
+        self.fault: Optional[str] = None  # None|"dead"|"stall"|"partition"|"flaky"
+        self.stall_s = 0.0
+        self._flaky_fails = 0
+
+    # -- fault injection -------------------------------------------------------
+    def _guard(self, op: str) -> None:
+        """Every shard op passes through here — the failure choke point."""
+        if self.fault in ("dead", "partition"):
+            raise ShardUnavailableError(
+                f"shard {self.shard_id} is {self.fault} ({op})")
+        if self.fault == "flaky":
+            self._flaky_fails -= 1
+            if self._flaky_fails <= 0:
+                self.fault = None
+            raise ShardUnavailableError(
+                f"shard {self.shard_id} dropped {op} (flaky)")
+        if self.fault == "stall" and self.stall_s > 0:
+            time.sleep(self.stall_s)
+        if self.table is None:
+            raise ShardUnavailableError(
+                f"shard {self.shard_id} lost its state ({op})")
+
+    def inject(self, kind: str, arg=None) -> None:
+        """Inject one fault.  ``kill`` loses ALL in-memory state — table,
+        maintainers, caches, inbox — exactly like a process death; ``stall``
+        makes every op sleep (a straggler); ``partition`` makes the shard
+        unreachable with state intact; ``flaky`` fails the next ``arg`` ops
+        then self-heals (exercises the retry path)."""
+        if kind == "kill":
+            self.fault = "dead"
+            self.table = None
+            self.maintainers.clear()
+            self._inst.clear()
+            self._inbox.clear()
+            self.catalog = Catalog()
+        elif kind == "stall":
+            self.fault = "stall"
+            self.stall_s = float(arg) if arg is not None else 0.02
+        elif kind == "partition":
+            self.fault = "partition"
+        elif kind == "flaky":
+            self.fault = "flaky"
+            self._flaky_fails = int(arg) if arg is not None else 1
+        else:
+            raise ValueError(f"unknown fault kind {kind!r}")
+
+    def heal(self) -> None:
+        """Clear any injected fault.  A killed shard becomes *reachable but
+        empty* — the coordinator detects the lost state on its next read and
+        runs checkpoint-adopt + delta-replay + re-registration recovery."""
+        self.fault = None
+        self.stall_s = 0.0
+        self._flaky_fails = 0
+
+    @property
+    def reachable(self) -> bool:
+        """Can the coordinator talk to this shard at all right now?"""
+        return self.fault not in ("dead", "partition")
+
+    def adopt(self, table: ColumnTable, dims: Mapping[str, ColumnTable]) -> None:
+        """Install recovered state (checkpoint table + current dims) after a
+        kill; maintainers and caches are gone until re-registration."""
+        self.table = place_table(table, self.device)
+        self.dims = {k: place_table(v, self.device) for k, v in dims.items()}
+        self.catalog = Catalog()
+        self.maintainers = {}
+        self._inst = {}
+        self._inbox.clear()
 
     # -- replication -----------------------------------------------------------
     @property
     def version(self) -> int:
-        """Local watermark: how many fact-table deltas have been applied."""
-        return self.table.version
+        """Local watermark: how many fact-table deltas have been applied
+        (``-1`` while the shard's state is lost)."""
+        return self.table.version if self.table is not None else -1
 
     @property
     def lag(self) -> int:
         return len(self._inbox)
 
-    def ship(self, kind: str, payload) -> None:
-        """Enqueue one delta (``append`` row batch / ``delete`` local mask)."""
-        self._inbox.append((kind, payload))
+    def ship(self, version: int, kind: str, payload) -> None:
+        """Enqueue one versioned delta (``append`` row batch / ``delete``
+        local mask).  Delivery is idempotent — ``catch_up`` drops entries at
+        or below the local version — so the coordinator may re-ship a log
+        suffix after a partition without coordination."""
+        self._guard("ship")
+        if self.inbox_cap is not None and len(self._inbox) >= self.inbox_cap:
+            self.backpressure_hits += 1
+            raise BackpressureError(
+                f"shard {self.shard_id} inbox at cap ({self.inbox_cap})")
+        self._inbox.append((version, kind, payload))
 
     def update_dim(self, table: ColumnTable) -> None:
         """Replace a replicated dimension table (applied eagerly — dimension
         mutations are rare and invalidate join maintainers wholesale)."""
+        self._guard("update_dim")
         old = self.dims.get(table.name)
         if old is not None:
             self.catalog.invalidate_table(old)
@@ -221,11 +342,22 @@ class FragmentShard:
         batch rows, and catalog entries refresh through the delta chain.
         A maintainer that cannot advance (e.g. its dimension table was
         replaced mid-chain) is dropped; the coordinator re-registers it
-        from scratch on the next read that needs it.
+        from scratch on the next read that needs it.  Duplicate inbox
+        entries (version at or below the local watermark — resync re-ships)
+        are dropped; a version *gap* (a ship lost to backpressure or a
+        partition) stops the drain so the coordinator can resync the
+        missing suffix from its delta log.
         """
+        self._guard("catch_up")
         applied = 0
         while self.table.version < watermark and self._inbox:
-            kind, payload = self._inbox.popleft()
+            version, kind, payload = self._inbox[0]
+            if version <= self.table.version:
+                self._inbox.popleft()  # duplicate re-ship: idempotent skip
+                continue
+            if version > self.table.version + 1:
+                break  # gap: wait for the coordinator's log resync
+            self._inbox.popleft()
             if kind == "append":
                 self.table = self.table.append(payload)
             elif kind == "delete":
@@ -251,10 +383,14 @@ class FragmentShard:
         """Build this shard's maintainer for one logical index entry.
 
         The shard must be at the coordinator's watermark (the maintainer
-        counts the *current* local rows).
+        counts the *current* local rows).  Registration waves sharing an
+        inner-block signature (batched admission, recovery re-registration)
+        pay ONE local counting pass and clone the rest.
         """
-        self.maintainers[key] = SketchMaintainer(q, self._db(), ranges,
-                                                 self.catalog)
+        self._guard("register")
+        self.maintainers[key] = maintainer_for(
+            q, self._db(), ranges, self.catalog,
+            list(self.maintainers.values()))
 
     def unregister(self, key: int) -> None:
         self.maintainers.pop(key, None)
@@ -263,6 +399,7 @@ class FragmentShard:
     def bits_for(self, key: int) -> Optional[np.ndarray]:
         """This shard's maintained sketch bits (global fragment ids), or
         ``None`` when the maintainer was lost and needs re-registration."""
+        self._guard("bits_for")
         m = self.maintainers.get(key)
         return m.bits() if m is not None else None
 
@@ -274,6 +411,7 @@ class FragmentShard:
         slice concatenation over the local fragment-major layout; any other
         partition falls back to the per-row keep-mask over local rows.
         """
+        self._guard("instance")
         token = (id(self.table), bits.tobytes())
         cached = self._inst.get(key)
         if cached is not None and cached[0] == token:
@@ -469,6 +607,13 @@ class RouteInfo:
     fused: bool = False
     # Queries served by this route (one, or a run_batch hit batch).
     n_queries: int = 1
+    # Degraded-mode bookkeeping: ``failed_shards`` lists the shards whose
+    # fragment slices were served from the coordinator's authoritative table
+    # this route (down, partitioned, or past the op deadline), ``n_retries``
+    # the transient shard-op failures retried away by ``with_retries``.
+    degraded: bool = False
+    failed_shards: Tuple[int, ...] = ()
+    n_retries: int = 0
 
     @property
     def t_critical_s(self) -> float:
@@ -506,6 +651,10 @@ class ShardedEngine:
         use_devices: bool = True,
         fused: bool = True,
         max_registered: Optional[int] = None,
+        health: bool = True,
+        op_deadline_s: float = 5.0,
+        inbox_cap: Optional[int] = 4096,
+        retry_policy: Optional[RetryPolicy] = None,
         **engine_kwargs,
     ):
         for k in ("cluster_tables", "compact_tail_frac"):
@@ -527,9 +676,11 @@ class ShardedEngine:
         self.plan = plan_fragments(
             np.diff(clustered.layout.offsets), n_shards, policy=policy)
         dims = {k: v for k, v in self.engine.db.tables.items() if k != table}
-        devices = shard_devices(n_shards, use_devices)
+        self._devices = shard_devices(n_shards, use_devices)
+        self._inbox_cap = inbox_cap
         self.shards: List[FragmentShard] = [
-            FragmentShard(s, self.plan, self.ranges, clustered, dims, devices[s])
+            FragmentShard(s, self.plan, self.ranges, clustered, dims,
+                          self._devices[s], inbox_cap=inbox_cap)
             for s in range(n_shards)
         ]
         # Global-row -> (shard, local-row) map, maintained across mutations so
@@ -558,6 +709,28 @@ class ShardedEngine:
         # coordinator's recency clock (``SketchIndex.prune``) after each
         # registration pass, evicting shard maintainers + cached instances.
         self.max_registered = max_registered
+        # -- shard health tracking (healthy -> suspect -> dead -> recovering
+        # -> healthy).  ``health=False`` bypasses the per-op wrapper entirely
+        # (fault-free benchmarking baseline: quantifies the tracking layer's
+        # overhead; never run it against a chaotic cluster).
+        self.health_tracking = health
+        self.op_deadline_s = op_deadline_s
+        self._retry_policy = retry_policy or RetryPolicy(
+            max_attempts=3, backoff_s=1e-3, backoff_mult=2.0,
+            retryable=(ShardUnavailableError,), deadline_s=op_deadline_s)
+        self.health: List[str] = ["healthy"] * n_shards
+        self._monitors: Dict[Tuple[int, str], StragglerMonitor] = {}
+        self._route_retries = 0
+        # Coordinator-durable recovery state: per-shard checkpoint (a
+        # reference to the shard's immutable local table as of its last fully
+        # drained read — the in-process stand-in for a durable snapshot) plus
+        # the delta log of everything shipped past it.  Recovery of a lost
+        # shard is checkpoint-adopt + delta-replay + maintainer
+        # re-registration — never a from-scratch re-capture.
+        self._ckpt: List[Optional[ColumnTable]] = [
+            s.table for s in self.shards]
+        self._log: List[List[Tuple[int, str, object]]] = [
+            [] for _ in range(n_shards)]
 
     # -- convenience -----------------------------------------------------------
     @property
@@ -590,9 +763,10 @@ class ShardedEngine:
         shard_of = self.plan.owner[bucket]
         counts = np.bincount(shard_of, minlength=self.n_shards)
         new_local = np.empty(shard_of.shape[0], dtype=np.int64)
+        version = self.version + 1
         for s, shard in enumerate(self.shards):
             sel = shard_of == s
-            shard.ship("append", {k: v[sel] for k, v in rows_np.items()})
+            self._ship(s, version, "append", {k: v[sel] for k, v in rows_np.items()})
             new_local[sel] = self._shard_rows[s] + np.arange(counts[s])
         self._shard_rows += counts
         self._row_shard = np.concatenate([self._row_shard, shard_of])
@@ -607,10 +781,11 @@ class ShardedEngine:
             self._replicate_dim(table_name)
             return
         mask = np.asarray(mask, dtype=bool)
+        version = self.version + 1
         for s, shard in enumerate(self.shards):
             local_mask = np.zeros(self._shard_rows[s], dtype=bool)
             local_mask[self._row_local[mask & (self._row_shard == s)]] = True
-            shard.ship("delete", local_mask)
+            self._ship(s, version, "delete", local_mask)
         keep = ~mask
         self._row_shard = self._row_shard[keep]
         self._row_local = self._row_local[keep]
@@ -621,6 +796,23 @@ class ShardedEngine:
         self.engine.delete_rows(table_name, mask)
         self.version += 1
 
+    def _ship(self, sid: int, version: int, kind: str, payload) -> None:
+        """Best-effort delivery of one delta.  The coordinator's per-shard
+        delta log is the authoritative copy (appended first, pruned at
+        checkpoints), so a failed or backpressured ship just leaves the
+        shard lagging until the next read resyncs it from the log."""
+        self._log[sid].append((version, kind, payload))
+        if self.health_tracking and self.health[sid] == "dead":
+            return  # known-dead: don't even try; recovery replays the log
+        try:
+            self.shards[sid].ship(version, kind, payload)
+        except BackpressureError:
+            pass  # inbox full; the log carries it
+        except ShardUnavailableError:
+            if self.health_tracking:
+                self.health[sid] = ("dead" if self.health[sid] == "suspect"
+                                    else "suspect")
+
     def _replicate_dim(self, table_name: str) -> None:
         """Replicate a mutated dimension table and evict sketches it serves.
 
@@ -628,9 +820,18 @@ class ShardedEngine:
         sketches are versioned against the *fact* table only — serving one
         across a dimension mutation could silently return a stale-join
         result.  Eviction forces a fresh capture on the next miss.
+        Unreachable shards are skipped — ``_sync_shard`` re-replicates any
+        dimension whose (uid, version) drifted before the shard serves again.
         """
-        for shard in self.shards:
-            shard.update_dim(self.engine.db[table_name])
+        for sid, shard in enumerate(self.shards):
+            if self.health_tracking and self.health[sid] == "dead":
+                continue
+            try:
+                shard.update_dim(self.engine.db[table_name])
+            except ShardUnavailableError:
+                if self.health_tracking:
+                    self.health[sid] = ("dead" if self.health[sid] == "suspect"
+                                        else "suspect")
         for e in list(self.engine.index.entries()):
             if e.query.join is not None and e.query.join.right == table_name:
                 self.engine.index.remove(e)
@@ -681,14 +882,23 @@ class ShardedEngine:
                and id(e) not in self._registered]
         if not new:
             return
+        down: Set[int] = set()
         if any(self._group_local(e.query) for e in new):
-            for shard in self.shards:
-                shard.catch_up(self.version)
+            _, down = self._catch_up_all()
         for e in new:
             group_local = self._group_local(e.query)
             if group_local:
-                for shard in self.shards:
-                    shard.register(id(e), e.query, e.sketch.ranges)
+                for sid, shard in enumerate(self.shards):
+                    if sid in down or (self.health_tracking
+                                       and self.health[sid] != "healthy"):
+                        continue  # registered at recovery (_reregister_shard)
+                    try:
+                        self._shard_call(
+                            sid, "register",
+                            functools.partial(shard.register, id(e), e.query,
+                                              e.sketch.ranges))
+                    except ShardUnavailableError:
+                        pass
             self._registered[id(e)] = _Registered(e, e.sketch.ranges, group_local)
         if self.max_registered is not None:
             self.prune(self.max_registered)
@@ -714,53 +924,387 @@ class ShardedEngine:
                 self._unregister(key)
         return evicted
 
-    def _catch_up_all(self) -> int:
-        """Watermark gate: every shard must drain its inbox up to the
-        coordinator's mutation count before serving — an un-contacted
-        lagging shard could own fragments the mutations just made
-        provenance-bearing (and its data must be current for partials)."""
-        applied = 0
-        for shard in self.shards:
+    # -- health tracking / failover -------------------------------------------
+    def _shard_call(self, sid: int, op: str, fn):
+        """One guarded shard op: bounded retries with backoff + a deadline
+        (``runtime.resilience.with_retries``), per-(shard, op) straggler
+        tracking, and the shard state machine transitions.  A hard failure
+        demotes healthy -> suspect -> dead; a clean in-deadline op promotes
+        suspect/recovering -> healthy."""
+        if not self.health_tracking:
+            return fn()
+        if self.health[sid] == "dead":
+            raise ShardUnavailableError(f"shard {sid} marked dead")
+        retries = 0
+
+        def _count(_attempt: int, _e: Exception) -> None:
+            nonlocal retries
+            retries += 1
+
+        t0 = time.perf_counter()
+        try:
+            out = with_retries(fn, self._retry_policy, on_retry=_count)
+        except ShardUnavailableError:
+            self._route_retries += retries
+            self.health[sid] = ("dead" if self.health[sid] == "suspect"
+                                else "suspect")
+            raise
+        dt = time.perf_counter() - t0
+        self._route_retries += retries
+        mon = self._monitors.get((sid, op))
+        if mon is None:
+            mon = self._monitors[(sid, op)] = StragglerMonitor()
+        mon.observe(dt)
+        if dt > self.op_deadline_s and mon.median() is not None:
+            # Past the deadline (an injected stall, or a genuinely slow
+            # host): route around it — its slices serve coordinator-side
+            # until it answers within the deadline again.  The monitor's
+            # warmup window grants grace while the op's timing baseline
+            # forms (first calls pay one-time XLA compiles; demoting on
+            # those would degrade perfectly healthy shards).
+            self.health[sid] = "suspect"
+        elif self.health[sid] in ("suspect", "recovering"):
+            self.health[sid] = "healthy"
+        return out
+
+    def _checkpoint(self, sid: int) -> None:
+        """Advance one shard's durable recovery point.  Local tables are
+        immutable, so a checkpoint is one reference + a log prune."""
+        shard = self.shards[sid]
+        self._ckpt[sid] = shard.table
+        v = shard.table.version
+        if self._log[sid] and self._log[sid][0][0] <= v:
+            self._log[sid] = [e for e in self._log[sid] if e[0] > v]
+
+    def _sync_shard(self, sid: int) -> int:
+        """Bring one shard to the coordinator watermark: refresh drifted
+        dimension replicas, drain the inbox, and re-ship any log suffix the
+        shard is missing (ships lost to a partition or to backpressure)."""
+        shard = self.shards[sid]
+        for name, t in self.engine.db.tables.items():
+            if name == self.table_name:
+                continue
+            cur = shard.dims.get(name)
+            if cur is None or cur.uid != t.uid or cur.version != t.version:
+                shard.update_dim(t)
+        applied = shard.catch_up(self.version)
+        while shard.version < self.version:
+            missing = [e for e in self._log[sid] if e[0] > shard.version]
+            if not missing:
+                # The log cannot reach the watermark (pruned past a loss):
+                # rebuild outright from the coordinator's table.
+                return applied + self._rebuild_shard(sid)
+            before = shard.version
+            for entry in missing:
+                try:
+                    shard.ship(*entry)
+                except BackpressureError:
+                    break  # drain below, then ship the rest
             applied += shard.catch_up(self.version)
+            if shard.version == before:
+                # No progress: a version gap the log cannot bridge (e.g. it
+                # was voided by a rebalance).  Rebuild outright.
+                return applied + self._rebuild_shard(sid)
         return applied
 
-    def _resolve_bits(self, key: int, reg: _Registered) -> Optional[np.ndarray]:
+    def _recover_shard(self, sid: int) -> int:
+        """Failover recovery of a reachable-again shard: adopt the last
+        checkpoint (state-lost kill), replay the delta log up to the
+        watermark, re-register per-shard maintainers.  Delta-replay +
+        re-registration — never a from-scratch re-capture: the maintainers
+        re-count only the shard's local rows and the sketch *bits* come back
+        through the same counting scheme that produced them."""
+        shard = self.shards[sid]
+        self.health[sid] = "recovering"
+        applied = 0
+        if shard.table is None:  # killed: all local state lost
+            if self._ckpt[sid] is None:
+                # No coherent checkpoint (placement changed while it was
+                # gone): rebuild from the coordinator's table outright.
+                self._rebuild_shard(sid)
+                self.health[sid] = "healthy"
+                return 0
+            dims = {k: v for k, v in self.engine.db.tables.items()
+                    if k != self.table_name}
+            shard.adopt(self._ckpt[sid], dims)
+        applied += self._sync_shard(sid)
+        self._reregister_shard(sid)
+        self._checkpoint(sid)
+        self.health[sid] = "healthy"
+        return applied
+
+    def _reregister_shard(self, sid: int) -> None:
+        """Re-register every routed entry's per-shard maintainer after the
+        shard's maintainer set was lost (kill) or rebuilt (rebalance)."""
+        shard = self.shards[sid]
+        for key, reg in self._registered.items():
+            if not reg.group_local or not self.engine.index.contains(reg.entry):
+                continue
+            if key not in shard.maintainers:
+                shard.register(key, reg.entry.query, reg.ranges)
+
+    def _rebuild_shard(self, sid: int) -> int:
+        """Rebuild one shard outright from the coordinator's authoritative
+        clustered table per the current plan (O(local rows) gather) — the
+        path elastic rebalancing takes, and the recovery fallback when the
+        delta log cannot reach the watermark.  Still not a re-capture:
+        maintainers re-register by local counting."""
+        ctable = self.db[self.table_name]
+        dims = {k: v for k, v in self.engine.db.tables.items()
+                if k != self.table_name}
+        dead = [s for s, h in enumerate(self.health) if h == "dead"]
+        self._devices[sid] = failover_device(self._devices, sid, dead)
+        self.shards[sid] = FragmentShard(
+            sid, self.plan, self.ranges, ctable, dims, self._devices[sid],
+            inbox_cap=self._inbox_cap, version=self.version)
+        self._log[sid] = []
+        self._reregister_shard(sid)
+        self._checkpoint(sid)
+        return 0
+
+    def _rebuild_row_maps(self) -> None:
+        """Recompute the global-row -> (shard, local-row) maps from the
+        coordinator table and the current plan (after a re-placement)."""
+        ctable = self.db[self.table_name]
+        lay = ctable.layout
+        n = ctable.num_rows
+        n_tail = lay.tail
+        frag_prefix = np.searchsorted(lay.offsets, np.arange(n - n_tail),
+                                      side="right") - 1
+        if n_tail:
+            tail_vals = np.asarray(ctable[self.attr])[n - n_tail:]
+            tail_frag = np.asarray(self.ranges.bucketize(jnp.asarray(tail_vals)))
+            row_frag = np.concatenate([frag_prefix, tail_frag])
+        else:
+            row_frag = frag_prefix
+        self._row_shard = self.plan.owner[row_frag]
+        self._row_local = np.empty(n, dtype=np.int64)
+        self._shard_rows = np.zeros(self.n_shards, dtype=np.int64)
+        for s in range(self.n_shards):
+            sel = self._row_shard == s
+            self._shard_rows[s] = int(sel.sum())
+            self._row_local[sel] = np.arange(self._shard_rows[s])
+
+    def rebalance(self, dead: Optional[Sequence[int]] = None) -> List[int]:
+        """Elastic failover: re-plan fragment placement away from ``dead``
+        shards (default: every shard currently marked dead) via the pure
+        ``runtime.elastic.plan_replacement`` policy and rebuild the shards
+        whose owned fragment set changed.  Returns the rebuilt shard ids."""
+        if dead is None:
+            dead = [s for s in range(self.n_shards)
+                    if self.health[s] == "dead"]
+        dead_set = {int(d) for d in dead}
+        if not dead_set:
+            return []
+        sizes = np.diff(self.db[self.table_name].layout.offsets)
+        new_owner = plan_replacement(sizes, self.plan.owner, self.n_shards,
+                                     sorted(dead_set))
+        changed = [s for s in range(self.n_shards)
+                   if not np.array_equal(np.nonzero(new_owner == s)[0],
+                                         self.plan.fragments_of(s))]
+        self.plan = ShardPlan(n_shards=self.n_shards, owner=new_owner)
+        self._rebuild_row_maps()
+        rebuilt = []
+        for sid in changed:
+            if sid in dead_set:
+                # The lost shard now owns nothing; void its recovery state —
+                # checkpoint AND log speak the old placement, so a later
+                # rejoin must rebuild from the coordinator, never replay.
+                self._ckpt[sid] = None
+                self._log[sid] = []
+                continue
+            self._rebuild_shard(sid)
+            self.health[sid] = "healthy"
+            rebuilt.append(sid)
+        # The plan object changed identity: every stacked cache key is dead.
+        self.engine.catalog.drop_stacked(("stacked",))
+        self.engine.catalog.drop_stacked(("stacked_batch",))
+        return rebuilt
+
+    def _catch_up_all(self) -> Tuple[int, Set[int]]:
+        """Watermark gate, fault-tolerant: every reachable shard drains its
+        inbox up to the coordinator's mutation count before serving — an
+        un-contacted lagging shard could own fragments the mutations just
+        made provenance-bearing (and its data must be current for
+        partials).  Shards that cannot be brought current are returned as
+        ``down``: their fragment slices serve from the coordinator's
+        authoritative table this route (degraded mode).  Dead shards are
+        probed each read; a reachable-again one runs checkpoint + delta-log
+        recovery on the spot."""
+        applied = 0
+        down: Set[int] = set()
+        for sid, shard in enumerate(self.shards):
+            if self.health_tracking and self.health[sid] == "dead":
+                if shard.reachable:
+                    try:
+                        applied += self._recover_shard(sid)
+                    except (ShardUnavailableError, BackpressureError):
+                        self.health[sid] = "dead"
+                        down.add(sid)
+                else:
+                    down.add(sid)
+                continue
+            try:
+                applied += self._shard_call(
+                    sid, "catch_up", functools.partial(self._sync_shard, sid))
+            except (ShardUnavailableError, BackpressureError):
+                down.add(sid)
+                continue
+            shard = self.shards[sid]  # _sync_shard may have rebuilt it
+            if shard.version < self.version:  # pragma: no cover - defensive
+                down.add(sid)
+            else:
+                self._checkpoint(sid)
+                if self.health_tracking and self.health[sid] == "healthy":
+                    # A shard that sat out a registration wave (suspect at
+                    # the time) picks up its missing maintainers the first
+                    # read after it is healthy again.
+                    try:
+                        self._reregister_shard(sid)
+                    except (ShardUnavailableError, BackpressureError):
+                        down.add(sid)
+        return applied, down
+
+    def _degraded_set(self, down: Set[int]) -> Set[int]:
+        """The shards served coordinator-side this route: unrecoverable
+        (``down``) plus any flagged suspect by the op wrapper (stalled past
+        the deadline, or one hard failure away from dead).  Shards owning no
+        fragments (re-placed away by a rebalance) are excluded — they have
+        nothing to substitute, so their state cannot degrade a route."""
+        degraded = set(down)
+        if self.health_tracking:
+            degraded |= {s for s in range(self.n_shards)
+                         if self.health[s] in ("suspect", "dead")}
+        return {s for s in degraded if self.plan.fragments_of(s).size > 0}
+
+    def _resolve_bits(
+        self, key: int, reg: _Registered, degraded: Set[int]
+    ) -> Optional[np.ndarray]:
         """The logical sketch bits for one registered entry (or ``None`` when
-        a shard maintainer was lost — caller falls back to the miss path)."""
+        a shard maintainer was lost — caller falls back to the miss path).
+
+        Degraded shards are never contacted: the coordinator's own maintainer
+        substitutes (``_current_sketch`` maintains or re-captures the logical
+        sketch).  For group-local entries the coordinator bits equal the OR
+        of per-shard bits — shard-locality of every group makes the local
+        HAVING evaluations exactly the global one — so the substitution is
+        bit-identical, not merely safe."""
         if reg.group_local:
             # Fully decentralized maintenance: every group is shard-local,
             # so the logical bits are the OR of per-shard maintained bits.
             bits_parts = []
-            for shard in self.shards:
-                b = shard.bits_for(key)
+            for sid, shard in enumerate(self.shards):
+                if self.plan.fragments_of(sid).size == 0:
+                    continue  # owns nothing (re-placed away): no bits to OR
+                if sid in degraded:
+                    bits_parts = None
+                    break
+                try:
+                    b = self._shard_call(
+                        sid, "bits_for", functools.partial(shard.bits_for, key))
+                except ShardUnavailableError:
+                    degraded.add(sid)
+                    bits_parts = None
+                    break
                 if b is None:  # maintainer lost (e.g. dimension replaced)
                     self._unregister(key)
                     return None
                 bits_parts.append(b)
-            return np.logical_or.reduce(bits_parts)
-        # Groups span shards: the HAVING chain needs global aggregates, so
-        # the *coordinator's* maintainer repairs the logical sketch
-        # (delta-sized) and shards only serve the routed partials.
+            if bits_parts is not None:
+                return np.logical_or.reduce(bits_parts)
+        # Groups span shards (or a shard is degraded): the HAVING chain needs
+        # global aggregates, so the *coordinator's* maintainer repairs the
+        # logical sketch (delta-sized) and shards only serve routed partials.
         sketch, _ = self.engine._current_sketch(reg.entry)
         return sketch.bits
 
+    # -- degraded-mode serving -------------------------------------------------
+    def _degraded_flat(
+        self, sid: int, q: Query, reg: _Registered, bits: np.ndarray
+    ) -> ColumnTable:
+        """Shard ``sid``'s sketch-instance slice served *coordinator-side*
+        from the authoritative clustered table — the degraded-mode stand-in
+        while the shard is down or lagging.  Row set matches the shard's own
+        instance exactly; row order may differ, which is invisible under the
+        exactness envelope (order-insensitive sums, value-keyed groups)."""
+        ctable = self.db[self.table_name]
+        ranges = reg.ranges
+        owned = self.plan.fragments_of(sid)
+        if ranges.key() == self.ranges.key():
+            frag_ids = owned[np.asarray(bits)[owned]]
+            lay = ctable.layout
+            tail_bucket = None
+            if lay.tail:
+                gfrag = np.asarray(
+                    self.engine.catalog.bucketize(ctable, self.ranges))
+                tail_bucket = gfrag[ctable.num_rows - lay.tail:]
+            inst = ctable.take_fragments(frag_ids, tail_bucket=tail_bucket)
+        else:
+            bucket = np.asarray(self.engine.catalog.bucketize(ctable, ranges))
+            mask = np.asarray(bits)[bucket] & (self._row_shard == sid)
+            inst = ctable.select(jnp.asarray(mask))
+        if q.join is not None:
+            flat, _ = self.engine.catalog.join(
+                inst, self.db[q.join.right], q.join.left_key, q.join.right_key)
+        else:
+            flat = inst
+        return flat
+
+    def _degraded_partial(
+        self, sid: int, q: Query, reg: _Registered, bits: np.ndarray
+    ) -> Tuple[Dict[str, np.ndarray], np.ndarray, np.ndarray]:
+        """Coordinator-side substitute for ``FragmentShard.partial``."""
+        flat = self._degraded_flat(sid, q, reg, bits)
+        enc, _, sums, counts = inner_group_partials(q, flat, self.engine.catalog)
+        return enc.group_values, np.asarray(sums), np.asarray(counts)
+
+    def _shard_arrays(
+        self, sid: int, key: int, reg: _Registered, bits: np.ndarray, q: Query
+    ):
+        """One shard's inner-block arrays for the stacked layout (live path)."""
+        shard = self.shards[sid]
+        inst = shard._instance(key, reg.ranges, bits)
+        if q.join is not None:
+            flat, _ = shard.catalog.join(
+                inst, shard.dims[q.join.right], q.join.left_key, q.join.right_key)
+        else:
+            flat = inst
+        return inner_block_arrays(q, flat, shard.catalog)
+
+    def _stacked_token(self, degraded: Set[int], bits: np.ndarray) -> Tuple:
+        """Freshness token for the stacked arrays.  Degraded shards' slices
+        come from the coordinator's authoritative table, so their entry pins
+        the *coordinator* table version (a dead shard's table may not even
+        exist); live entries pin the shard-local (uid, version) — monotone
+        under append/delete and surviving collapse(), whereas a recycled
+        object address could alias a stale stack onto fresh data."""
+        ctable = self.db[self.table_name]
+        per = tuple(
+            ("coord", ctable.uid, ctable.version) if sid in degraded
+            # A state-less shard outside the degraded set owns no fragments
+            # (re-placed away) — it contributes no slice, any sentinel works.
+            else ("lost",) if s.table is None
+            else (s.table.uid, s.table.version)
+            for sid, s in enumerate(self.shards))
+        return (per, bits.tobytes())
+
     def _stacked_for(
-        self, key: int, reg: _Registered, bits: np.ndarray
+        self, key: int, reg: _Registered, bits: np.ndarray,
+        degraded: Set[int],
     ) -> StackedInstances:
         """Build (or fetch) the stacked shard-major arrays for one entry.
 
         The cache key pins the registration + fragment plan; the token guards
-        freshness (per-shard table identities + the sketch bits), so any
-        shard-side delta application or maintained-bit flip rebuilds the
-        stack while the steady state costs one dictionary probe.
+        freshness (per-shard table identities + the sketch bits + the
+        degraded set), so any shard-side delta application or maintained-bit
+        flip rebuilds the stack while the steady state costs one dictionary
+        probe.  Degraded shards' slices are built coordinator-side
+        (``_degraded_flat``) — the fused launch itself is indifferent to
+        where a slice came from.
         """
         catalog = self.engine.catalog
         ckey = ("stacked", key, self.db[self.table_name].uid, id(self.plan))
-        # (uid, version) — not id() — per shard table: versions are monotone
-        # under append/delete and survive collapse() (same contents), whereas
-        # a recycled object address could alias a stale stack onto fresh data.
-        token = (tuple((s.table.uid, s.table.version) for s in self.shards),
-                 bits.tobytes())
+        token = self._stacked_token(degraded, bits)
         hit = catalog.get_stacked(ckey, token)
         if hit is not None:
             return hit
@@ -776,18 +1320,29 @@ class ShardedEngine:
         # then computes exactly the routed work).
         per_shard: List[Tuple] = []
         contacted_ids: List[int] = []
-        for shard in self.shards:
-            if routable and not bits[shard.owned].any():
+        for sid in range(self.n_shards):
+            owned = self.plan.fragments_of(sid)
+            if owned.size == 0 or (routable and not bits[owned].any()):
                 continue  # fragment-skip: contributes no stacked slice
-            contacted_ids.append(shard.shard_id)
-            inst = shard._instance(key, ranges, bits)
-            if q.join is not None:
-                flat, _ = shard.catalog.join(
-                    inst, shard.dims[q.join.right], q.join.left_key,
-                    q.join.right_key)
-            else:
-                flat = inst
-            per_shard.append(inner_block_arrays(q, flat, shard.catalog))
+            contacted_ids.append(sid)
+            if sid in degraded:
+                per_shard.append(inner_block_arrays(
+                    q, self._degraded_flat(sid, q, reg, bits),
+                    self.engine.catalog))
+                continue
+            try:
+                per_shard.append(self._shard_call(
+                    sid, "instance",
+                    functools.partial(self._shard_arrays, sid, key, reg,
+                                      bits, q)))
+            except ShardUnavailableError:
+                # Mid-build failure: fall through to the degraded slice —
+                # the caller's route report picks the shard up via the
+                # (mutated) degraded set.
+                degraded.add(sid)
+                per_shard.append(inner_block_arrays(
+                    q, self._degraded_flat(sid, q, reg, bits),
+                    self.engine.catalog))
 
         # Coordinator-owned global group dictionary: np.unique over the
         # concatenated per-shard group key values — the same construction
@@ -836,6 +1391,9 @@ class ShardedEngine:
             vals_np[i, :n] = np.asarray(vals, dtype=np.float32)
             w_np[i, :n] = np.asarray(where_mask, dtype=np.float32)
 
+        # A shard may have failed mid-build (degraded grew): re-derive the
+        # token so the cached stack is keyed on how it was *actually* built.
+        token = self._stacked_token(degraded, bits)
         st = StackedInstances(
             vals=place_stacked(jnp.asarray(vals_np[None]), self._mesh),
             gid=place_stacked(jnp.asarray(gid_np[None]), self._mesh),
@@ -891,13 +1449,15 @@ class ShardedEngine:
         reg = self._registered.get(key)
         if reg is None:
             return None
-        applied = self._catch_up_all()
-        bits = self._resolve_bits(key, reg)
+        self._route_retries = 0
+        applied, down = self._catch_up_all()
+        degraded = self._degraded_set(down)
+        bits = self._resolve_bits(key, reg, degraded)
         if bits is None:
             return None
 
         if self.fused:
-            st = self._stacked_for(key, reg, bits)
+            st = self._stacked_for(key, reg, bits, degraded)
             tl = time.perf_counter()
             sums, counts = self._launch(st.vals, st.gid, st.weights, st.g_pad)
             sums_np, counts_np = np.asarray(sums[0]), np.asarray(counts[0])
@@ -912,12 +1472,24 @@ class ShardedEngine:
             routable = ranges.key() == self.ranges.key()
             per_shard_s = {}
             partials = []
-            for shard in self.shards:
-                if routable and not bits[shard.owned].any():
+            for sid in range(self.n_shards):
+                owned = self.plan.fragments_of(sid)
+                if owned.size == 0 or (routable and not bits[owned].any()):
                     continue  # fragment-skip the whole shard
                 ts = time.perf_counter()
-                partials.append(shard.partial(q, key, ranges, bits))
-                per_shard_s[shard.shard_id] = time.perf_counter() - ts
+                if sid in degraded:
+                    partials.append(self._degraded_partial(sid, q, reg, bits))
+                else:
+                    try:
+                        partials.append(self._shard_call(
+                            sid, "partial",
+                            functools.partial(self.shards[sid].partial, q, key,
+                                              ranges, bits)))
+                    except ShardUnavailableError:
+                        degraded.add(sid)
+                        partials.append(
+                            self._degraded_partial(sid, q, reg, bits))
+                per_shard_s[sid] = time.perf_counter() - ts
             tm = time.perf_counter()
             res = _merge_partials(q, partials)
             t1 = time.perf_counter()
@@ -932,6 +1504,9 @@ class ShardedEngine:
             t_merge_s=t_merge,
             t_launch_s=t_launch,
             fused=self.fused,
+            degraded=bool(degraded),
+            failed_shards=tuple(sorted(degraded)),
+            n_retries=self._route_retries,
         )
         info = RunInfo(
             reused=True, created=False, attr=reg.ranges.attr,
@@ -939,6 +1514,7 @@ class ShardedEngine:
             t_execute=t1 - t0, repaired=applied > 0,
             shards_contacted=contacted,
             shards_skipped=self.n_shards - contacted,
+            degraded=bool(degraded),
         )
         return res, info
 
@@ -996,12 +1572,15 @@ class ShardedEngine:
         out: List[Optional[Tuple[QueryResult, RunInfo]]],
     ) -> None:
         """Serve one wave's index hits routed — all entries, one launch."""
-        applied = self._catch_up_all()
+        self._route_retries = 0
+        applied, down = self._catch_up_all()
+        degraded = self._degraded_set(down)
         serving: List[Tuple[int, List, StackedInstances]] = []
         loop_stats: List[Tuple[Tuple[int, ...], Dict[int, float], float, int]] = []
         for key, members in groups:
             reg = self._registered.get(key)
-            bits = self._resolve_bits(key, reg) if reg is not None else None
+            bits = (self._resolve_bits(key, reg, degraded)
+                    if reg is not None else None)
             if bits is None:
                 # Maintainer lost mid-flight: single-node serve (the entry
                 # still answers from the coordinator), re-register after.
@@ -1012,9 +1591,10 @@ class ShardedEngine:
             if not self.fused:
                 loop_stats.append(
                     self._serve_key_host_loop(key, reg, bits, members,
-                                              applied, out))
+                                              applied, degraded, out))
                 continue
-            serving.append((key, members, self._stacked_for(key, reg, bits)))
+            serving.append(
+                (key, members, self._stacked_for(key, reg, bits, degraded)))
         if loop_stats:
             contacted = set().union(*(set(c) for c, _, _, _ in loop_stats))
             per_shard_s: Dict[int, float] = {}
@@ -1029,6 +1609,9 @@ class ShardedEngine:
                 t_merge_s=sum(m for _, _, m, _ in loop_stats),
                 t_launch_s=sum(per_shard_s.values()), fused=False,
                 n_queries=sum(n for _, _, _, n in loop_stats),
+                degraded=bool(degraded),
+                failed_shards=tuple(sorted(degraded)),
+                n_retries=self._route_retries,
             )
         if not serving:
             return
@@ -1061,6 +1644,7 @@ class ShardedEngine:
                     repaired=applied > 0,
                     shards_contacted=st.contacted,
                     shards_skipped=self.n_shards - st.contacted,
+                    degraded=bool(degraded),
                 ))
                 n_served += 1
         t1 = time.perf_counter()
@@ -1070,6 +1654,9 @@ class ShardedEngine:
             watermark=self.version, deltas_applied=applied,
             per_shard_s={}, t_merge_s=t1 - tm, t_launch_s=tm - tl,
             fused=True, n_queries=n_served,
+            degraded=bool(degraded),
+            failed_shards=tuple(sorted(degraded)),
+            n_retries=self._route_retries,
         )
 
     def _assemble_batch(self, serving: List[Tuple[int, List, StackedInstances]]):
@@ -1111,7 +1698,7 @@ class ShardedEngine:
     def _serve_key_host_loop(
         self, key: int, reg: _Registered, bits: np.ndarray,
         members: List[Tuple[int, Query, IndexEntry, float]],
-        applied: int,
+        applied: int, degraded: Set[int],
         out: List[Optional[Tuple[QueryResult, RunInfo]]],
     ) -> Tuple[Tuple[int, ...], Dict[int, float], float, int]:
         """Host-loop batch fallback: per-shard partials once per entry (they
@@ -1123,12 +1710,23 @@ class ShardedEngine:
         per_shard_s: Dict[int, float] = {}
         partials = []
         q0 = reg.entry.query
-        for shard in self.shards:
-            if routable and not bits[shard.owned].any():
+        for sid in range(self.n_shards):
+            owned = self.plan.fragments_of(sid)
+            if owned.size == 0 or (routable and not bits[owned].any()):
                 continue
             ts = time.perf_counter()
-            partials.append(shard.partial(q0, key, ranges, bits))
-            per_shard_s[shard.shard_id] = time.perf_counter() - ts
+            if sid in degraded:
+                partials.append(self._degraded_partial(sid, q0, reg, bits))
+            else:
+                try:
+                    partials.append(self._shard_call(
+                        sid, "partial",
+                        functools.partial(self.shards[sid].partial, q0, key,
+                                          ranges, bits)))
+                except ShardUnavailableError:
+                    degraded.add(sid)
+                    partials.append(self._degraded_partial(sid, q0, reg, bits))
+            per_shard_s[sid] = time.perf_counter() - ts
         tm = time.perf_counter()
         # One HAVING-independent merge per entry; each member pays only its
         # own group-level tail (mirroring the fused path's shared launch).
@@ -1144,6 +1742,7 @@ class ShardedEngine:
                 repaired=applied > 0,
                 shards_contacted=len(per_shard_s),
                 shards_skipped=self.n_shards - len(per_shard_s),
+                degraded=bool(degraded),
             ))
         return (tuple(per_shard_s), dict(per_shard_s),
                 time.perf_counter() - tm, len(members))

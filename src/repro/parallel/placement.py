@@ -63,6 +63,36 @@ def shard_devices(n_shards: int, use_devices: bool = True) -> List[Optional[jax.
     return [devices[i % len(devices)] for i in range(n_shards)]
 
 
+def failover_device(
+    devices: List[Optional[jax.Device]],
+    sid: int,
+    dead: List[int],
+) -> Optional[jax.Device]:
+    """Placement for shard ``sid``'s post-failover rebuild.
+
+    Keeps the shard's own pin in the common case.  When the same physical
+    device also backs *another* dead shard, the fault likely sits with the
+    device rather than the shard process, so the rebuild lands on the
+    least-loaded device backing no dead shard (falling back to its own pin
+    when every device is implicated).  ``None`` pins (single-device hosts)
+    stay ``None`` — placement is a no-op there.
+    """
+    own = devices[sid]
+    if own is None:
+        return None
+    dead_devs = {str(devices[d]) for d in dead
+                 if d != sid and devices[d] is not None}
+    if str(own) not in dead_devs:
+        return own
+    alive = [d for d in devices if d is not None and str(d) not in dead_devs]
+    if not alive:
+        return own
+    load: dict = {}
+    for d in alive:
+        load[str(d)] = load.get(str(d), 0) + 1
+    return min(alive, key=lambda d: (load[str(d)], str(d)))
+
+
 def place_table(table: ColumnTable, device: Optional[jax.Device]) -> ColumnTable:
     """Pin every column of ``table`` to ``device`` (identity when None)."""
     if device is None:

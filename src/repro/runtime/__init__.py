@@ -1,6 +1,15 @@
+from repro.runtime.chaos import (
+    ChaosEvent,
+    ChaosHarness,
+    differential,
+    random_ops,
+    random_schedule,
+    run_ops,
+)
 from repro.runtime.elastic import (
     ElasticPlan,
     feasible_mesh_shape,
     plan_remesh,
+    plan_replacement,
 )
 from repro.runtime.resilience import RetryPolicy, StragglerMonitor, with_retries

@@ -13,7 +13,9 @@ batch is preserved by rescaling grad-accumulation microbatches.
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Tuple
+from typing import Optional, Sequence, Tuple
+
+import numpy as np
 
 
 @dataclasses.dataclass(frozen=True)
@@ -74,3 +76,38 @@ def plan_remesh(
         n_micro=n_micro,
         dropped_devices=n_devices - used,
     )
+
+
+def plan_replacement(
+    sizes: np.ndarray,
+    owner: np.ndarray,
+    n_shards: int,
+    dead: Sequence[int],
+) -> np.ndarray:
+    """Re-place the fragments owned by ``dead`` shards onto survivors.
+
+    The fragment-level analogue of ``plan_remesh``: when a shard is lost for
+    good, its fragments (sized in rows) are handed to the least-loaded
+    surviving shards, largest orphan first — a greedy longest-processing-time
+    assignment that keeps the post-failure load spread within one fragment of
+    balanced.  Surviving shards keep every fragment they already own (their
+    local tables stay valid; only receivers rebuild), and the function is
+    pure and deterministic so the coordinator and any observer agree on the
+    new placement without coordination.
+
+    Returns the new ``owner`` array; raises ``ValueError`` when every shard
+    is dead.
+    """
+    sizes = np.asarray(sizes, dtype=np.float64)
+    owner = np.asarray(owner, dtype=np.int64).copy()
+    dead_set = {int(d) for d in dead}
+    survivors = [s for s in range(n_shards) if s not in dead_set]
+    if not survivors:
+        raise ValueError("no surviving shards to re-place fragments on")
+    load = {s: float(sizes[owner == s].sum()) for s in survivors}
+    orphans = np.nonzero(np.isin(owner, list(dead_set)))[0]
+    for f in sorted(orphans.tolist(), key=lambda f: -sizes[f]):
+        s = min(survivors, key=lambda s: (load[s], s))
+        owner[f] = s
+        load[s] += float(sizes[f])
+    return owner

@@ -18,16 +18,24 @@ class RetryPolicy:
     backoff_s: float = 0.1
     backoff_mult: float = 2.0
     retryable: Tuple[type, ...] = (RuntimeError, OSError)
+    # Wall-clock budget for the whole retry loop: once exceeded, the next
+    # retryable failure re-raises even with attempts left.  ``None`` = no
+    # deadline (the original behavior).
+    deadline_s: Optional[float] = None
 
 
 def with_retries(fn: Callable[[], T], policy: RetryPolicy = RetryPolicy(),
                  on_retry: Optional[Callable[[int, Exception], None]] = None) -> T:
     delay = policy.backoff_s
+    t0 = time.perf_counter()
     for attempt in range(1, policy.max_attempts + 1):
         try:
             return fn()
         except policy.retryable as e:  # noqa: PERF203
             if attempt == policy.max_attempts:
+                raise
+            if policy.deadline_s is not None \
+                    and time.perf_counter() - t0 >= policy.deadline_s:
                 raise
             if on_retry:
                 on_retry(attempt, e)

@@ -1,0 +1,301 @@
+"""Chaos-tolerant sharded serving: failure injection, failover, degraded mode.
+
+Contracts under test (the acceptance criteria of the chaos PR):
+
+  * the chaos differential gate — replay sequences interleaving kill / stall /
+    partition / flaky / heal with queries and append/delete mutations must
+    produce results EQUAL to the fault-free replay of the same ops (degraded
+    substitution is bit-identical, so equality is exact);
+  * during faults the engine keeps answering — no exception ever surfaces to
+    a caller — and ``RouteInfo`` reports ``degraded`` / ``failed_shards`` /
+    ``n_retries`` honestly;
+  * recovery of a rejoined shard is checkpoint-adopt + delta-replay +
+    maintainer re-registration, never a from-scratch sketch re-capture
+    (asserted on the coordinator index miss counter);
+  * ``rebalance`` re-places a dead shard's fragments onto survivors via
+    ``plan_replacement`` and the re-planned cluster serves exactly;
+  * shard inboxes are depth-capped: past the cap ``ship`` raises
+    ``BackpressureError``, the coordinator's delta log carries the entries,
+    and the next read resyncs the shard.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    Aggregate,
+    BackpressureError,
+    Database,
+    Having,
+    Query,
+    ShardedEngine,
+    execute,
+)
+from repro.core.datasets import make_crimes, make_tpch
+from repro.runtime.chaos import (
+    ChaosEvent,
+    ChaosHarness,
+    differential,
+    random_ops,
+    random_schedule,
+)
+
+
+def _crimes_queries(db):
+    base = Query("crimes", ("district", "year"), Aggregate("sum", "records"))
+    sums = execute(base, db).values
+    qs = [dataclasses.replace(base, having=Having(">", float(np.quantile(sums, qt))))
+          for qt in (0.5, 0.8)]
+    byear = Query("crimes", ("year",), Aggregate("sum", "records"))
+    qs.append(dataclasses.replace(byear, having=Having(
+        ">", float(np.quantile(execute(byear, db).values, 0.6)))))
+    return qs
+
+
+def _crimes_rows(rng, n):
+    t = make_crimes(n, seed=int(rng.integers(1 << 30)))
+    return {a: np.asarray(t[a]) for a in t.schema}
+
+
+def _engine(db, n_shards=3, **kw):
+    args = dict(n_ranges=16, theta=0.1, seed=0, min_selectivity_gain=2.0)
+    args.update(kw)
+    return ShardedEngine(db, "crimes", "district", n_shards=n_shards, **args)
+
+
+def _tpch_templates(db):
+    from repro.core import JoinSpec
+
+    def thresh(q, qt):
+        vals = execute(dataclasses.replace(q, having=None, outer_having=None),
+                       db).values
+        return float(np.quantile(vals, qt))
+
+    agh = Query("lineitem", ("l_suppkey",), Aggregate("sum", "l_quantity"))
+    agh = dataclasses.replace(agh, having=Having(">", thresh(agh, 0.8)))
+    ajgh = Query("lineitem", ("l_suppkey",), Aggregate("sum", "l_quantity"),
+                 join=JoinSpec("orders", "l_orderkey", "o_orderkey"))
+    ajgh = dataclasses.replace(ajgh, having=Having(">", thresh(ajgh, 0.8)))
+    aagh = Query("lineitem", ("l_partkey", "l_suppkey"),
+                 Aggregate("sum", "l_quantity"), having=Having(">", 0.0),
+                 outer_groupby=("l_suppkey",), outer_agg=Aggregate("sum", None))
+    aagh = dataclasses.replace(aagh, outer_having=Having(">", thresh(aagh, 0.8)))
+    aajgh = Query("lineitem", ("l_partkey", "l_suppkey"),
+                  Aggregate("count", None),
+                  join=JoinSpec("orders", "l_orderkey", "o_orderkey"),
+                  having=Having(">", 0.0),
+                  outer_groupby=("l_suppkey",), outer_agg=Aggregate("sum", None))
+    aajgh = dataclasses.replace(
+        aajgh, outer_having=Having(">", thresh(aajgh, 0.8)))
+    return [agh, ajgh, aagh, aajgh]
+
+
+def test_kill_degraded_serve_recover():
+    """The canonical chaos arc: kill -> degraded serving -> heal -> recovery
+    via checkpoint + delta replay, with no exception and no re-capture."""
+    db = Database({"crimes": make_crimes(4000, seed=2)})
+    q = _crimes_queries(db)[0]
+    se = _engine(db, 3)
+    ref, _ = se.run(q)  # capture + register
+    single = execute(q, se.db).canonical()
+    assert ref.canonical() == single
+
+    se.shards[1].inject("kill")
+    # Serving continues through the fault; the route is reported degraded.
+    res, info = se.run(q)
+    assert res.canonical() == single
+    assert info.reused and info.degraded
+    assert se.last_route.degraded
+    assert 1 in se.last_route.failed_shards
+    assert se.health[1] in ("suspect", "dead")
+
+    # Mutations while down: shipped to survivors, logged for the dead shard.
+    rows = _crimes_rows(np.random.default_rng(7), 300)
+    se.append_rows("crimes", rows)
+    expect = execute(q, se.db).canonical()
+    res, info = se.run(q)
+    assert res.canonical() == expect
+    assert info.degraded
+
+    misses_before = se.engine.index.misses
+    se.shards[1].heal()
+    res, info = se.run(q)  # probe -> adopt checkpoint -> replay -> re-register
+    assert res.canonical() == expect
+    assert se.health[1] == "healthy"
+    assert not info.degraded and not se.last_route.degraded
+    assert se.shards[1].version == se.version
+    # Recovery is delta-replay + re-registration — NEVER a re-capture.
+    assert se.engine.index.misses == misses_before
+    # The recovered shard's maintainer agrees with the survivors' protocol:
+    # the next serve needs no coordinator substitution.
+    res, info = se.run(q)
+    assert res.canonical() == expect and not info.degraded
+
+
+def test_partition_keeps_state_and_flaky_retries():
+    db = Database({"crimes": make_crimes(4000, seed=3)})
+    q = _crimes_queries(db)[0]
+    se = _engine(db, 3)
+    se.run(q)
+    single = execute(q, se.db).canonical()
+
+    se.shards[0].inject("partition")
+    res, info = se.run(q)
+    assert res.canonical() == single and info.degraded
+    se.shards[0].heal()
+    res, info = se.run(q)
+    assert res.canonical() == single
+    assert se.health[0] == "healthy" and not info.degraded
+
+    # A flaky shard drops one op then self-heals: the retry wrapper absorbs
+    # it without degrading the route.
+    se.shards[2].inject("flaky", 1)
+    res, info = se.run(q)
+    assert res.canonical() == single
+    assert se.last_route.n_retries >= 1
+    assert not info.degraded
+
+
+def test_stall_past_deadline_routes_around_straggler():
+    db = Database({"crimes": make_crimes(4000, seed=4)})
+    q = _crimes_queries(db)[0]
+    se = _engine(db, 3, op_deadline_s=0.002)
+    # Warm the per-op timing baselines (the straggler demotion needs a
+    # formed median so one-time compile spikes don't demote).
+    for _ in range(10):
+        se.run(q)
+    single = execute(q, se.db).canonical()
+    se.shards[1].inject("stall", 0.05)
+    res, _ = se.run(q)  # the stalled catch_up demotes the shard...
+    assert res.canonical() == single
+    res, info = se.run(q)  # ...and subsequent serves route around it
+    assert res.canonical() == single
+    assert se.health[1] == "suspect"
+    assert info.degraded and 1 in se.last_route.failed_shards
+    se.shards[1].heal()
+    res, info = se.run(q)
+    assert res.canonical() == single
+    assert se.health[1] == "healthy" and not info.degraded
+
+
+def test_rebalance_moves_dead_shards_fragments():
+    db = Database({"crimes": make_crimes(4000, seed=5)})
+    qs = _crimes_queries(db)
+    se = _engine(db, 3)
+    for q in qs:
+        se.run(q)
+    se.shards[2].inject("kill")
+    for _ in range(2):  # two failed contacts: suspect, then dead
+        se.run(qs[0])
+    assert se.health[2] == "dead"
+
+    rebuilt = se.rebalance()
+    assert set(rebuilt) <= {0, 1} and rebuilt
+    assert not (se.plan.owner == 2).any()  # shard 2 owns nothing now
+    for q in qs:
+        res, info = se.run(q)
+        assert res.canonical() == execute(q, se.db).canonical()
+        # A fully re-placed cluster serves clean: no degraded routes.
+        assert not info.degraded
+    # Mutations after the re-plan route by the new ownership.
+    se.append_rows("crimes", _crimes_rows(np.random.default_rng(11), 200))
+    mask = np.random.default_rng(12).random(se.db["crimes"].num_rows) < 0.05
+    se.delete_rows("crimes", mask)
+    for q in qs:
+        res, _ = se.run(q)
+        assert res.canonical() == execute(q, se.db).canonical()
+    # The emptied shard may rejoin later: harmless (it owns no fragments).
+    se.shards[2].heal()
+    res, info = se.run(qs[0])
+    assert res.canonical() == execute(qs[0], se.db).canonical()
+    assert se.health[2] == "healthy"
+
+
+def test_inbox_cap_backpressure_and_resync():
+    db = Database({"crimes": make_crimes(3000, seed=6)})
+    q = _crimes_queries(db)[0]
+    se = _engine(db, 2, inbox_cap=2)
+    se.run(q)
+    rng = np.random.default_rng(13)
+    for _ in range(5):  # 5 deltas > cap of 2: ship hits backpressure
+        se.append_rows("crimes", _crimes_rows(rng, 50))
+    assert all(s.backpressure_hits > 0 for s in se.shards)
+    assert all(s.lag <= 2 for s in se.shards)
+    with pytest.raises(BackpressureError):
+        se.shards[0].ship(99, "append", {})
+    # The read path drains the inbox AND replays the logged suffix.
+    res, info = se.run(q)
+    assert res.canonical() == execute(q, se.db).canonical()
+    assert not info.degraded
+    assert se.min_watermark() == se.version
+
+
+def test_chaos_differential_crimes():
+    """Seeded kill/stall/partition/flaky/heal replays, 1-4 shards: chaotic
+    traces must equal the fault-free traces exactly."""
+    db = Database({"crimes": make_crimes(3000, seed=7)})
+    qs = _crimes_queries(db)
+    for n_shards, seed in ((1, 0), (2, 1), (3, 2), (4, 3)):
+        ops = random_ops(seed, 14, qs, _crimes_rows)
+        events = random_schedule(seed + 50, 14, n_shards)
+        ok, chaotic, clean = differential(
+            lambda n=n_shards: _engine(db, n, op_deadline_s=0.02),
+            "crimes", ops, events)
+        assert ok, (
+            f"n_shards={n_shards} seed={seed}: chaotic trace diverged at op "
+            f"{next(i for i, (a, b) in enumerate(zip(chaotic, clean)) if a != b)}")
+
+
+def test_chaos_differential_tpch_templates():
+    """All four workload templates under scripted chaos on a join schema."""
+    db = make_tpch(2500, seed=8)
+    qs = _tpch_templates(db)
+
+    def rows(rng, n):
+        t = make_tpch(4 * n, seed=int(rng.integers(1 << 30)))["lineitem"]
+        return {a: np.asarray(t[a])[:n] for a in t.schema}
+
+    def make_engine():
+        return ShardedEngine(db, "lineitem", "l_suppkey", n_shards=3,
+                             n_ranges=16, theta=0.1, seed=0,
+                             min_selectivity_gain=1.0, op_deadline_s=0.02)
+
+    ops = random_ops(21, 12, qs, rows, p_query=0.5, p_batch=0.2, p_append=0.2)
+    events = [
+        ChaosEvent(1, 0, "kill"),
+        ChaosEvent(3, 2, "partition"),
+        ChaosEvent(5, 0, "heal"),
+        ChaosEvent(6, 1, "flaky", 2.0),
+        ChaosEvent(8, 2, "heal"),
+        ChaosEvent(9, 0, "stall", 0.05),
+        ChaosEvent(11, 0, "heal"),
+    ]
+    ok, chaotic, clean = differential(make_engine, "lineitem", ops, events)
+    assert ok, ("tpch chaotic trace diverged at op "
+                f"{next(i for i, (a, b) in enumerate(zip(chaotic, clean)) if a != b)}")
+
+
+def test_random_schedule_is_deterministic_and_heals():
+    ev1 = random_schedule(42, 30, 4)
+    ev2 = random_schedule(42, 30, 4)
+    assert ev1 == ev2
+    # Every persistent fault is healed by the end of the schedule.
+    state = {}
+    for e in ev1:
+        if e.kind == "heal":
+            state.pop(e.shard, None)
+        elif e.kind in ("kill", "stall", "partition"):
+            state[e.shard] = e.kind
+    assert state == {}
+
+
+def test_harness_replays_events_at_steps():
+    db = Database({"crimes": make_crimes(2000, seed=9)})
+    q = _crimes_queries(db)[0]
+    se = _engine(db, 2)
+    se.run(q)
+    h = ChaosHarness([ChaosEvent(1, 0, "kill"), ChaosEvent(2, 0, "heal")])
+    trace = h.run(se, "crimes", [("query", q)] * 4)
+    assert len(trace) == 4 and len(set(map(str, trace))) == 1
+    assert se.health[0] == "healthy"

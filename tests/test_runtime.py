@@ -1,0 +1,165 @@
+"""Unit coverage for the runtime resilience/elastic primitives.
+
+These are the building blocks the chaos-tolerant serving layer composes:
+``with_retries`` wraps every shard op, ``StragglerMonitor`` feeds shard
+health, ``plan_remesh``/``feasible_mesh_shape`` and ``plan_replacement``
+are the pure re-planning policies (device meshes and fragment placement
+respectively).  All are deterministic and tested without any engine.
+"""
+import time
+
+import numpy as np
+import pytest
+
+from repro.runtime import (
+    RetryPolicy,
+    StragglerMonitor,
+    feasible_mesh_shape,
+    plan_remesh,
+    plan_replacement,
+    with_retries,
+)
+
+
+class _Boom(RuntimeError):
+    pass
+
+
+class _Fatal(ValueError):
+    pass
+
+
+def _failing(n_failures, exc=_Boom):
+    """A callable that raises ``exc`` for the first ``n_failures`` calls."""
+    calls = {"n": 0}
+
+    def fn():
+        calls["n"] += 1
+        if calls["n"] <= n_failures:
+            raise exc(f"fail {calls['n']}")
+        return calls["n"]
+
+    fn.calls = calls
+    return fn
+
+
+def test_with_retries_backoff_sequencing(monkeypatch):
+    sleeps = []
+    monkeypatch.setattr(time, "sleep", sleeps.append)
+    fn = _failing(2)
+    policy = RetryPolicy(max_attempts=4, backoff_s=0.1, backoff_mult=3.0,
+                         retryable=(_Boom,))
+    assert with_retries(fn, policy) == 3
+    # One sleep per retry, geometric: 0.1 then 0.3.
+    assert sleeps == pytest.approx([0.1, 0.3])
+    assert fn.calls["n"] == 3
+
+
+def test_with_retries_on_retry_and_exhaustion(monkeypatch):
+    monkeypatch.setattr(time, "sleep", lambda _s: None)
+    seen = []
+    fn = _failing(10)
+    policy = RetryPolicy(max_attempts=3, backoff_s=0.01, retryable=(_Boom,))
+    with pytest.raises(_Boom):
+        with_retries(fn, policy, on_retry=lambda a, e: seen.append((a, str(e))))
+    # on_retry fires for every attempt EXCEPT the last (which re-raises).
+    assert seen == [(1, "fail 1"), (2, "fail 2")]
+    assert fn.calls["n"] == 3
+
+
+def test_with_retries_non_retryable_passthrough(monkeypatch):
+    sleeps = []
+    monkeypatch.setattr(time, "sleep", sleeps.append)
+    fn = _failing(1, exc=_Fatal)
+    policy = RetryPolicy(max_attempts=5, retryable=(_Boom,))
+    with pytest.raises(_Fatal):
+        with_retries(fn, policy)
+    # No retries, no sleeps: a non-retryable error surfaces immediately.
+    assert fn.calls["n"] == 1
+    assert sleeps == []
+
+
+def test_with_retries_deadline_stops_early(monkeypatch):
+    monkeypatch.setattr(time, "sleep", lambda _s: None)
+    fn = _failing(10)
+    policy = RetryPolicy(max_attempts=50, backoff_s=0.0,
+                         retryable=(_Boom,), deadline_s=0.0)
+    with pytest.raises(_Boom):
+        with_retries(fn, policy)
+    # Deadline already expired at the first failure: exactly one attempt.
+    assert fn.calls["n"] == 1
+
+
+def test_straggler_monitor_warmup_and_flagging():
+    mon = StragglerMonitor(window=32, threshold=2.0)
+    # Below max(4, window // 4) = 8 observations there is no baseline.
+    for _ in range(7):
+        assert mon.median() is None
+        assert mon.observe(0.01) is False
+    assert mon.median() is None  # 7 observed, still warming up
+    assert mon.observe(0.01) is False  # 8th observation forms the baseline
+    assert mon.median() == pytest.approx(0.01)
+    assert mon.observe(0.019) is False  # under 2x median: not a straggler
+    assert mon.observe(0.05) is True    # over 2x median: flagged
+    assert mon.flagged == 1
+    assert mon.observe(0.5) is True
+    assert mon.flagged == 2
+
+
+def test_straggler_monitor_small_window_floor():
+    # window // 4 < 4: the warmup floor is 4 observations.
+    mon = StragglerMonitor(window=8, threshold=2.0)
+    for _ in range(3):
+        mon.observe(1.0)
+    assert mon.median() is None
+    mon.observe(1.0)
+    assert mon.median() == pytest.approx(1.0)
+
+
+def test_feasible_mesh_shape_invariants():
+    assert feasible_mesh_shape(8, 2) == (4, 2)
+    assert feasible_mesh_shape(7, 2) == (3, 2)  # drops the odd device
+    assert feasible_mesh_shape(1, 2) is None    # cannot fit TP extent
+    assert feasible_mesh_shape(8, 2, prefer_pods=2) == (2, 2, 2)
+    # Pod preference degrades gracefully when it doesn't divide.
+    assert feasible_mesh_shape(6, 2, prefer_pods=2) == (3, 2)
+
+
+@pytest.mark.parametrize("n_devices", [8, 7, 6, 5, 4])
+def test_plan_remesh_preserves_global_batch(n_devices):
+    global_batch, model_parallel = 32, 2
+    plan = plan_remesh(n_devices, model_parallel, global_batch,
+                       old_n_micro=2, old_data_extent=4)
+    assert plan is not None
+    data_extent = plan.mesh_shape[-2] * (
+        plan.mesh_shape[0] if len(plan.mesh_shape) == 3 else 1)
+    # Global batch is always preserved exactly through grad accumulation.
+    assert global_batch % plan.n_micro == 0
+    # And splits evenly across the DP extent whenever that is achievable
+    # (a coprime extent, e.g. 3 devices for batch 32, cannot).
+    if global_batch % data_extent == 0:
+        assert (global_batch // plan.n_micro) % data_extent == 0
+    used = int(np.prod(plan.mesh_shape))
+    assert used + plan.dropped_devices == n_devices
+
+
+def test_plan_replacement_invariants():
+    sizes = np.array([10, 30, 20, 40, 10, 25])
+    owner = np.array([0, 0, 1, 1, 2, 2])
+    new = plan_replacement(sizes, owner, 3, dead=[1])
+    # Survivors keep every fragment they already owned.
+    assert (new[owner == 0] == 0).all()
+    assert (new[owner == 2] == 2).all()
+    # Orphans all land on survivors.
+    assert set(new[owner == 1].tolist()) <= {0, 2}
+    # Greedy LPT: the 40-row orphan goes to the lighter survivor (shard 2:
+    # 35 rows vs shard 0: 40), then the 20-row one to the other.
+    assert new[3] == 2 and new[2] == 0
+    # Deterministic and pure.
+    assert np.array_equal(new, plan_replacement(sizes, owner, 3, dead=[1]))
+    assert np.array_equal(owner, [0, 0, 1, 1, 2, 2])  # input untouched
+
+
+def test_plan_replacement_no_survivors():
+    with pytest.raises(ValueError):
+        plan_replacement(np.array([1.0]), np.array([0]), 2, dead=[0, 1])

@@ -201,6 +201,77 @@ def test_dimension_mutation_evicts_and_recaptures():
     assert res3.canonical() == execute(q, se.db).canonical()
 
 
+def test_dim_mutation_while_shards_lag_recaptures():
+    """MaintenanceError fallback under lag: a dimension mutation lands while
+    fact deltas are still in flight (every shard behind the watermark) and one
+    shard is partitioned.  The join sketch must be evicted everywhere, the
+    next read drains the lag and re-captures, and no stale-join result is
+    ever served."""
+    db = make_tpch(N_ROWS, seed=21)
+    q = Query("lineitem", ("l_suppkey",), Aggregate("sum", "l_quantity"),
+              join=JoinSpec("orders", "l_orderkey", "o_orderkey"))
+    q = dataclasses.replace(q, having=Having(">", _threshold(q, db, 0.8)))
+    se = ShardedEngine(db, "lineitem", "l_suppkey", n_shards=3, n_ranges=32,
+                       theta=0.1, seed=0, min_selectivity_gain=2.0)
+    se.run(q)
+    _, info = se.run(q)
+    assert info.reused
+    assert all(len(s.maintainers) == 1 for s in se.shards)
+
+    # Fact mutations ship lazily: every shard now lags the watermark.
+    rng = np.random.default_rng(0)
+    fact = se.db["lineitem"]
+    sel = rng.integers(0, fact.num_rows, 500)
+    se.append_rows("lineitem",
+                   {a: np.asarray(fact[a])[sel] for a in fact.schema})
+    assert se.min_watermark() < se.version
+
+    # Partition one shard, then mutate the dimension while the fact deltas
+    # are still unapplied: replication can't reach shard 0 (it keeps the
+    # stale dimension), but eviction must still drop the sketch everywhere.
+    se.shards[0].inject("partition")
+    orders = se.db["orders"]
+    new_keys = np.arange(orders.num_rows + 1, orders.num_rows + 51,
+                         dtype=np.int64)
+    dim_batch = {
+        "o_orderkey": new_keys,
+        "o_custkey": np.ones(50, dtype=np.int64),
+        "o_totalprice": np.full(50, 1000.0, dtype=np.float32),
+        "o_orderdate": np.full(50, 9000, dtype=np.int32),
+        "o_shippriority": np.zeros(50, dtype=np.int32),
+    }
+    se.append_rows("orders", dim_batch)
+    assert all(not s.maintainers for s in se.shards)
+
+    se.shards[0].heal()
+    res, info2 = se.run(q)
+    assert info2.created and not info2.reused  # evicted -> fresh capture
+    assert res.canonical() == execute(q, se.db).canonical()
+    assert se.min_watermark() == se.version
+    assert se.health[0] == "healthy"  # stale dim refreshed on the read path
+    res3, info3 = se.run(q)
+    assert info3.reused
+    assert res3.canonical() == execute(q, se.db).canonical()
+
+    # Shard-level fallback directly: a local dimension drift the coordinator
+    # hasn't reconciled makes the join maintainer unmaintainable; catch_up
+    # drops it (MaintenanceError) instead of advancing stale state, and
+    # bits_for then signals re-registration upstream.
+    s = se.shards[1]
+    key, _ = next(iter(s.maintainers.items()))
+    s.dims["orders"] = s.dims["orders"].append(dim_batch)
+    sel2 = rng.integers(0, se.db["lineitem"].num_rows, 100)
+    fact2 = se.db["lineitem"]
+    se.append_rows("lineitem",
+                   {a: np.asarray(fact2[a])[sel2] for a in fact2.schema})
+    s.catch_up(se.version)
+    assert key not in s.maintainers
+    assert s.bits_for(key) is None
+    # The next read reconciles the drifted dim and restores exact serving.
+    res4, _ = se.run(q)
+    assert res4.canonical() == execute(q, se.db).canonical()
+
+
 def test_single_shard_degenerates_to_full_routing():
     db = Database({"crimes": make_crimes(10_000, seed=17)})
     base = Query("crimes", ("district",), Aggregate("count", None))
@@ -215,7 +286,11 @@ def test_single_shard_degenerates_to_full_routing():
 
 
 def test_placement_glue_single_device():
-    from repro.parallel.placement import place_table, shard_devices
+    from repro.parallel.placement import (
+        failover_device,
+        place_table,
+        shard_devices,
+    )
 
     devs = shard_devices(3)
     assert len(devs) == 3  # one slot per shard, None = no pinning needed
@@ -223,6 +298,12 @@ def test_placement_glue_single_device():
     assert place_table(t, None) is t
     devs_forced = shard_devices(3, use_devices=False)
     assert devs_forced == [None, None, None]
+    # Failover placement: None pins stay None; with named devices the rebuilt
+    # shard keeps its own pin unless the device also backs another dead shard.
+    assert failover_device([None, None, None], 1, dead=[1, 2]) is None
+    assert failover_device(["d0", "d1", "d0"], 1, dead=[1]) == "d1"
+    assert failover_device(["d0", "d1", "d0"], 2, dead=[0, 2]) == "d1"
+    assert failover_device(["d0", "d0"], 1, dead=[0, 1]) == "d0"  # all implicated
 
 
 def test_sharded_engine_rejects_coordinator_permuting_kwargs():
