@@ -27,6 +27,18 @@ STRATEGIES = ("NO-PS", "RAND-PK", "RAND-GB", "CB-OPT-GB")
 
 SEED_BASELINE_PATH = os.path.join(os.path.dirname(__file__), "seed_fig9_baseline.json")
 
+# Acceptance gates, asserted at --quick (the scale CI's selection-smoke runs).
+# Cost-based selection must not dominate the admission pipeline it feeds:
+# cumulative CB-OPT-GB t_select stays within 2x of cumulative t_capture.  The
+# denominator gets a small absolute floor so a dataset whose captures are
+# near-free cannot fail the ratio on noise alone.
+GATE_SELECT_VS_CAPTURE = 2.0
+GATE_CAPTURE_FLOOR_S = 0.25
+# Reuse-aware admission exists so CB-OPT-GB stops declining recurring broad
+# templates (stars: ~all-pass HAVINGs estimate selectivity 1.0) and losing
+# the index-hit race to RAND-GB.
+GATE_HITS_DATASET = "stars"
+
 
 def run(scale: str = "quick", n_unique: int = 8, n_repeat: int = 5, json_path: str | None = None):
     rows = []
@@ -82,6 +94,7 @@ def run(scale: str = "quick", n_unique: int = 8, n_repeat: int = 5, json_path: s
     emit(rows, ("bench", "dataset", "strategy", "cum_s", "t_select_s", "t_capture_s",
                 "t_execute_s", "t_probe_s", "t_repair_s", "reused_exec_mean_s",
                 "idx_hits", "idx_misses", "cum_marks_every10"))
+    gates = _check_gates(results, scale)
     if json_path:
         payload = {
             "bench": "fig9",
@@ -89,6 +102,7 @@ def run(scale: str = "quick", n_unique: int = 8, n_repeat: int = 5, json_path: s
             "n_unique": n_unique,
             "n_repeat": n_repeat,
             "results": results,
+            "gates": gates,
         }
         if os.path.exists(SEED_BASELINE_PATH):
             with open(SEED_BASELINE_PATH) as f:
@@ -124,6 +138,35 @@ def run(scale: str = "quick", n_unique: int = 8, n_repeat: int = 5, json_path: s
             json.dump(payload, f, indent=2)
         print(f"# wrote {json_path}")
     return rows
+
+
+def _check_gates(results, scale: str) -> dict:
+    """Selection-smoke acceptance gates; hard asserts only at --quick."""
+    gates = {}
+    by_key = {(r["dataset"], r["strategy"]): r for r in results}
+    for ds in dict.fromkeys(r["dataset"] for r in results):
+        cb = by_key.get((ds, "CB-OPT-GB"))
+        if cb is None:
+            continue
+        ratio = cb["t_select_s"] / max(cb["t_capture_s"], GATE_CAPTURE_FLOOR_S)
+        gates[f"{ds}/select_vs_capture"] = round(ratio, 3)
+        if scale == "quick":
+            assert ratio <= GATE_SELECT_VS_CAPTURE, (
+                f"fig9 gate: {ds} CB-OPT-GB t_select {cb['t_select_s']:.2f}s is "
+                f"{ratio:.2f}x t_capture {cb['t_capture_s']:.2f}s "
+                f"(limit {GATE_SELECT_VS_CAPTURE}x) — selection cache / stats "
+                f"prefilter / single-candidate shortcut regressed")
+    cb = by_key.get((GATE_HITS_DATASET, "CB-OPT-GB"))
+    rnd = by_key.get((GATE_HITS_DATASET, "RAND-GB"))
+    if cb is not None and rnd is not None:
+        gates[f"{GATE_HITS_DATASET}/cb_opt_gb_hits"] = cb["idx_hits"]
+        gates[f"{GATE_HITS_DATASET}/rand_gb_hits"] = rnd["idx_hits"]
+        if scale == "quick":
+            assert cb["idx_hits"] >= rnd["idx_hits"], (
+                f"fig9 gate: CB-OPT-GB index hits {cb['idx_hits']} fell below "
+                f"RAND-GB {rnd['idx_hits']} on {GATE_HITS_DATASET} — "
+                f"reuse-aware admission regressed")
+    return gates
 
 
 if __name__ == "__main__":

@@ -107,9 +107,12 @@ t0 = time.perf_counter()
 outs = eng2.run_batch(batch)  # all 16 miss: shared selection + fused capture
 t_batch = time.perf_counter() - t0
 n_created = sum(1 for _, i in outs if i.created)
+# With default selection the whole batch may pay ZERO sampling work: the
+# stats pre-filter + single-candidate shortcut admit estimate-free when only
+# one candidate survives (see section 8).
 print(f"batched admission: {len(batch)} cold queries in {t_batch*1e3:.0f}ms "
-      f"({n_created} sketches created, 1 sample drawn: "
-      f"{eng2.samples.misses} sample miss / {eng2.aqr.misses} AQR pass)")
+      f"({n_created} sketches created, {eng2.samples.misses} sample draw(s), "
+      f"{eng2.aqr.misses} AQR pass(es))")
 for q, (r, _) in zip(batch, outs):
     assert r.canonical() == execute(q, big).canonical()
 outs2 = eng2.run_batch(batch)  # steady state: every query is an index hit
@@ -194,3 +197,37 @@ print(f"shard 1 rejoined: health={sharded.health} "
 # The same arc is scriptable: repro.runtime.chaos replays seeded fault
 # schedules (kill/stall/partition/flaky/heal) against seeded workloads and
 # asserts chaotic traces equal fault-free ones bit-for-bit (`differential`).
+
+# --- 8. Reuse-aware, stats-prefiltered, incremental selection ----------------
+# The selection critical path has four default-on layers (SelectionConfig):
+#   stats_prefilter       dominance-prune candidates from catalog fragment
+#                         statistics alone, before any sampling;
+#   skip_single_candidate a pool of one admits estimate-free (no sample, no
+#                         AQR pass, no estimate launch);
+#   cache                 whole selection passes memoized per (table version,
+#                         template) — repeat templates pay ~zero;
+#   reuse_aware           the worth-it rule discounts estimated coverage by
+#                         reuse_weight x (subsumption reach over the last
+#                         reuse_window misses): templates the workload shows
+#                         recurring get admitted even when broad, so repeats
+#                         become index hits instead of re-paying selection.
+from repro.core import SelectionConfig
+
+eng3 = PBDSEngine(big, strategy="CB-OPT-GB", n_ranges=100, theta=0.05,
+                  selection=SelectionConfig(reuse_window=256, reuse_weight=0.12))
+broad = Query("crimes", ("district",), Aggregate("count", None),
+              having=Having(">", 0.0))  # every group passes: coverage ~1.0
+_, b1 = eng3.run(broad)
+_, b2 = eng3.run(broad)
+print(f"reuse-aware: broad template first={'created' if b1.created else 'declined'}, "
+      f"repeat={'index hit' if b2.reused else 'miss'} "
+      f"(selection passes paid: {eng3.selection_cache.misses})")
+# Paper-faithful Sec. 8-9 selection (every safe candidate sampled and
+# estimated, admission by estimated coverage alone) is one switch away —
+# benchmarks comparing against the paper use exactly this:
+pf = PBDSEngine(big, strategy="CB-OPT-GB", n_ranges=100, theta=0.05,
+                selection=SelectionConfig.paper_faithful())
+_, p1 = pf.run(broad)
+print(f"paper-faithful: broad template "
+      f"{'created' if p1.created else 'declined (coverage 1.0 >= 0.9)'}")
+assert b1.created and b2.reused and not p1.created

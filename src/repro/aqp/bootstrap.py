@@ -76,10 +76,13 @@ def bootstrap_group_means(
     gid_sorted = jnp.asarray(gid[order])
     sizes_row = jnp.asarray(sizes[gid[order]].astype(np.float32))
     starts_row = jnp.asarray(starts[gid[order]].astype(np.int32))
+    # pow2 segment count: keeps the jitted resampler in one compiled size
+    # class across group-bys (padded segments get no rows, outputs sliced).
+    n_pad = 1 << max(0, (n_groups - 1)).bit_length()
     means = _resample_means(
-        vals_sorted, starts_row, sizes_row, gid_sorted, n_groups, key, n_resamples
+        vals_sorted, starts_row, sizes_row, gid_sorted, n_pad, key, n_resamples
     )
-    means = np.asarray(means)
+    means = np.asarray(means)[:, :n_groups]
     return BootstrapStats(
         mean=means.mean(axis=0),
         std=means.std(axis=0, ddof=1) if n_resamples > 1 else np.zeros(n_groups),

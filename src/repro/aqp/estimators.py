@@ -39,6 +39,10 @@ def _seg(vals: Array, gid: Array, n: int) -> Array:
     return jax.ops.segment_sum(vals, gid, num_segments=n)
 
 
+def _next_pow2(n: int) -> int:
+    return 1 << max(0, (n - 1)).bit_length()
+
+
 def group_estimates(
     fn: str,
     values: Optional[Array],  # v(t) per sampled row (None for COUNT)
@@ -48,11 +52,21 @@ def group_estimates(
     group_sizes: np.ndarray,  # #g over the full table
     z: float = Z_95,
 ) -> GroupEstimates:
+    # Pad the group axis to pow2 so every group-by of the same table lands in
+    # one compiled size class (segment ops specialise on num_segments; a
+    # workload whose signatures differ only in n_groups must not recompile
+    # the selection math).  Padding segments receive no rows, so the first
+    # n_groups outputs are bit-identical to the unpadded computation.
+    real_groups = n_groups
+    n_groups = _next_pow2(max(1, n_groups))
+    gs = np.asarray(group_sizes, dtype=np.float32)
+    if n_groups != real_groups:
+        gs = np.pad(gs, (0, n_groups - real_groups))
     gid = jnp.asarray(gid)
     u = jnp.asarray(pred).astype(jnp.float32)
     ns = _seg(jnp.ones_like(u), gid, n_groups)  # #s_g
     ns_safe = jnp.maximum(ns, 1.0)
-    sizes = jnp.asarray(group_sizes).astype(jnp.float32)
+    sizes = jnp.asarray(gs)
 
     if fn == "count":
         uv = u
@@ -84,10 +98,10 @@ def group_estimates(
     eps = z * sigma
     return GroupEstimates(
         fn=fn,
-        estimate=np.asarray(est),
-        sigma=np.asarray(sigma),
-        half_width=np.asarray(eps),
-        n_samples=np.asarray(ns).astype(np.int64),
+        estimate=np.asarray(est)[:real_groups],
+        sigma=np.asarray(sigma)[:real_groups],
+        half_width=np.asarray(eps)[:real_groups],
+        n_samples=np.asarray(ns).astype(np.int64)[:real_groups],
     )
 
 

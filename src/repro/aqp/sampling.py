@@ -275,6 +275,7 @@ class AQRCache:
         self.max_entries = max_entries
         self.hits = 0
         self.misses = 0
+        self.evictions = 0  # FIFO overflow pops (capacity, not invalidation)
 
     def get_or_compute(
         self,
@@ -298,6 +299,7 @@ class AQRCache:
         entry = (est, samples.sample_sizes > 0)
         if len(self._cache) >= self.max_entries:
             self._cache.pop(next(iter(self._cache)))
+            self.evictions += 1
         self._cache[ck] = entry
         return entry
 

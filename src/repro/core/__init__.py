@@ -21,7 +21,12 @@ from repro.core.queries import (
     provenance_mask,
 )
 from repro.core.ranges import RangeSet, equi_depth_ranges, equi_width_ranges, fragment_sizes
-from repro.core.safety import monotone_safe, prefilter_candidates, safe_attributes
+from repro.core.safety import (
+    monotone_safe,
+    prefilter_candidates,
+    safe_attributes,
+    stats_prefilter,
+)
 from repro.core.sketch import (
     ProvenanceSketch,
     apply_sketch,
@@ -36,10 +41,14 @@ from repro.core.strategies import (
     ALL_STRATEGIES,
     COST_STRATEGIES,
     RANDOM_STRATEGIES,
+    SelectionCache,
+    SelectionConfig,
     SelectionResult,
     candidate_pool,
     select_attribute,
+    selection_cache_key,
 )
+from repro.core.workload import WorkloadLog
 from repro.core.table import (
     ColumnTable,
     Database,

@@ -50,7 +50,6 @@ import numpy as np
 
 from repro.aqp.size_estimation import (
     EstimationSpec,
-    SizeEstimate,
     estimate_size_multi,
     satisfied_groups,
 )
@@ -63,12 +62,14 @@ from repro.core.queries import (
     provenance_from_inner,
     result_from_group_state,
 )
+from repro.core.safety import stats_prefilter
 from repro.core.sketch import apply_sketch, capture_sketches_batch
 from repro.core.strategies import (
     RANDOM_STRATEGIES,
     SelectionResult,
     candidate_pool,
     select_attribute,
+    selection_cache_key,
 )
 
 if TYPE_CHECKING:  # pragma: no cover - typing only
@@ -142,48 +143,98 @@ def _select_wave(
                 sample_cache=engine.samples, theta=engine.theta, cfg=engine.cfg,
                 ranges_for=lambda a, t=q.table: engine.ranges_for(t, a),
                 catalog=engine.catalog, aqr_cache=engine.aqr,
+                selection=engine.selection,
+                selection_cache=engine.selection_cache,
             )
         return out
 
+    sel_cfg = engine.selection
     specs: List[EstimationSpec] = []
-    spec_pos: List[int] = []
+    # Parallel to ``specs``: (selection-cache key or None, member positions).
+    spec_assign: List[Tuple[Optional[Tuple], List[int]]] = []
     groups: Dict[Tuple, List[Tuple[int, Query]]] = {}
     for pos, q, _ in wave:
         groups.setdefault(exec_group_key(q), []).append((pos, q))
     for members in groups.values():
-        pools = {pos: candidate_pool(strategy, q, db, engine.n_ranges,
-                                     catalog=engine.catalog)
-                 for pos, q in members}
+        # Bucket members by selection-cache key: members sharing a key share
+        # one pool + pre-filter + estimate pass and one memoized result —
+        # exactly what a sequential replay does (first member computes, the
+        # rest hit the SelectionCache).  With the cache disabled
+        # (paper-faithful) every member is its own bucket.
+        buckets: Dict[Tuple, List[Tuple[int, Query]]] = {}
+        order: List[Tuple] = []
         for pos, q in members:
-            if not pools[pos]:
-                out[pos] = SelectionResult(strategy, None, pools[pos], {})
-        with_cands = [(pos, q) for pos, q in members if pools[pos]]
-        if not with_cands:
+            bk = (selection_cache_key(strategy, q, db[q.table], engine.theta,
+                                      engine.n_ranges)
+                  if sel_cfg.cache else ("pos", pos))
+            if bk not in buckets:
+                buckets[bk] = []
+                order.append(bk)
+            buckets[bk].append((pos, q))
+        pending: List[Tuple[Optional[Tuple], List[Tuple[int, Query]],
+                            Tuple[str, ...]]] = []
+        for bk in order:
+            bmembers = buckets[bk]
+            ck = bk if sel_cfg.cache else None
+            if ck is not None:
+                hit = engine.selection_cache.get(ck)
+                if hit is not None:
+                    for pos, _ in bmembers:
+                        out[pos] = hit
+                    continue
+            q0 = bmembers[0][1]
+            cands = candidate_pool(strategy, q0, db, engine.n_ranges,
+                                   catalog=engine.catalog)
+            if sel_cfg.stats_prefilter:
+                cands = stats_prefilter(
+                    q0, db, cands,
+                    lambda a, t=q0.table: engine.ranges_for(t, a),
+                    catalog=engine.catalog)
+            if not cands:
+                res = SelectionResult(strategy, None, cands, {})
+            elif sel_cfg.skip_single_candidate and len(cands) == 1:
+                res = SelectionResult(strategy, cands[0], cands, {},
+                                      topk=cands)
+            else:
+                pending.append((ck, bmembers, cands))
+                continue
+            if ck is not None:
+                engine.selection_cache.put(ck, res)
+            for pos, _ in bmembers:
+                out[pos] = res
+        if not pending:
             continue
         # The sample/AQR key is the first member that actually reaches the
-        # sampling code — sequential ``run`` skips it for empty pools, so the
-        # first *viable* query's key is what the shared pass must use.
-        q0 = with_cands[0][1]
+        # sampling code — cache hits, empty pools and single-candidate
+        # shortcuts never do, so the first *pending* bucket's lead query is
+        # what a sequential replay would sample with.
+        q0 = pending[0][1][0][1]
         k_s, k_e = jax.random.split(engine._select_key(q0))
         samples = engine.samples.get_or_create(
             k_s, db[q0.table], q0.groupby_on_fact(db), engine.theta)
         est, sampled = engine.aqr.get_or_compute(
             k_e, q0, db, samples, engine.theta, engine.cfg)
-        for pos, q in with_cands:
+        for ck, bmembers, cands in pending:
+            bq = bmembers[0][1]
             specs.append(EstimationSpec(
-                q=q, samples=samples,
-                ranges_by_attr={a: engine.ranges_for(q.table, a)
-                                for a in pools[pos]},
-                aqr=(est, satisfied_groups(q, est, sampled)),
+                q=bq, samples=samples,
+                ranges_by_attr={a: engine.ranges_for(bq.table, a)
+                                for a in cands},
+                aqr=(est, satisfied_groups(bq, est, sampled)),
             ))
-            spec_pos.append(pos)
+            spec_assign.append((ck, [pos for pos, _ in bmembers]))
     if specs:
         all_estimates = estimate_size_multi(db, specs, engine.cfg, engine.catalog)
-        for spec, pos, estimates in zip(specs, spec_pos, all_estimates):
+        for spec, (ck, positions), estimates in zip(specs, spec_assign,
+                                                    all_estimates):
             ranking = tuple(sorted(estimates, key=lambda a: estimates[a].est_rows))
-            out[pos] = SelectionResult(
+            res = SelectionResult(
                 strategy, ranking[0], tuple(spec.ranges_by_attr), estimates,
                 topk=ranking[:1])
+            if ck is not None:
+                engine.selection_cache.put(ck, res)
+            for pos in positions:
+                out[pos] = res
     return out
 
 
@@ -203,15 +254,22 @@ def admit_wave(
     sels = _select_wave(engine, wave)
     t_select_each = (time.perf_counter() - t0) / max(len(wave), 1)
 
-    # Worth-it partition (problem definition (i), same rule as ``run``).
+    # Worth-it partition — ``PBDSEngine._worth_it``, the same rule as ``run``
+    # including the reuse-aware discount.  Misses are logged in wave order
+    # with their *reserved* batch-position stamps, so ``reach`` sees exactly
+    # the prefix a sequential replay would.  One carve-out: a miss deferred
+    # to a later wave is recorded after this wave's decisions, so a wave
+    # member at a higher batch position cannot count it — this can only
+    # shift a decision at a worth-it boundary under non-default weights
+    # (under the default weight, first-miss admission does not depend on the
+    # reach magnitude).
+    reuse = engine.selection.reuse_aware and engine.strategy != "NO-PS"
     admitted: Dict[int, object] = {}  # pos -> RangeSet of the chosen attr
     for pos, q, _ in wave:
-        sel = sels[pos]
-        est: Optional[SizeEstimate] = (
-            sel.estimates.get(sel.attr) if sel.estimates else None)
-        if sel.attr is not None and (
-                est is None or est.est_selectivity < engine.min_selectivity_gain):
-            admitted[pos] = engine.ranges_for(q.table, sel.attr)
+        stamp = (engine.workload.record(q, stamp=engine.workload.batch_stamp(pos))
+                 if reuse else None)
+        if engine._worth_it(sels[pos], q, stamp):
+            admitted[pos] = engine.ranges_for(q.table, sels[pos].attr)
 
     # Physical re-layout happens before the shared scans, mirroring the
     # sequential order (select -> cluster -> capture).

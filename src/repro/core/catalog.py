@@ -429,6 +429,25 @@ class Catalog:
         self._put(self._frag_sizes, key, (table, sizes))
         return sizes
 
+    def frag_stats(self, table: ColumnTable, ranges: "RangeSet") -> Tuple[int, float, float]:
+        """Summary statistics of a partition: ``(n_nonempty, max_frac,
+        min_frac)`` over the nonempty fragments (fractions of table rows).
+
+        The PS3-style pre-filter input: everything it needs to bound a
+        candidate's sketch size comes from the cached per-fragment counts, so
+        dominance pruning costs catalog metadata only — no sampling, no AQR
+        pass, no estimate launch.  Delta-refreshed along with
+        ``fragment_sizes``.
+        """
+        sizes = self.fragment_sizes(table, ranges)
+        total = max(int(sizes.sum()), 1)
+        nonempty = sizes[sizes > 0]
+        if nonempty.size == 0:
+            return (0, 0.0, 0.0)
+        return (int(nonempty.size),
+                float(nonempty.max()) / total,
+                float(nonempty.min()) / total)
+
     # -- predicate-pushdown WHERE masks --------------------------------------
     def where_mask(self, table: ColumnTable, pred) -> Array:
         """The row mask of ``pred`` over ``table``, cached per (table version,

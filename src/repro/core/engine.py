@@ -42,8 +42,14 @@ from repro.core.maintenance import build_maintainer, repair_sketch
 from repro.core.queries import Query, QueryResult, execute, execute_and_provenance
 from repro.core.ranges import RangeSet, equi_depth_ranges
 from repro.core.sketch import ProvenanceSketch, apply_sketch, capture_sketch, execute_with_sketch
-from repro.core.strategies import select_attribute
+from repro.core.strategies import (
+    SelectionCache,
+    SelectionConfig,
+    SelectionResult,
+    select_attribute,
+)
 from repro.core.table import Database
+from repro.core.workload import WorkloadLog
 
 
 @dataclasses.dataclass
@@ -94,6 +100,7 @@ class PBDSEngine:
         cluster_tables: bool = False,
         max_delta_chain: int = 64,
         compact_tail_frac: Optional[float] = None,
+        selection: Optional[SelectionConfig] = None,
     ):
         self.db = db
         self.strategy = strategy
@@ -104,6 +111,12 @@ class PBDSEngine:
         self.samples = SampleCache()
         self.aqr = AQRCache()
         self.catalog = Catalog()
+        # Selection-path knobs (stats pre-filter, single-candidate shortcut,
+        # reuse-aware worth-it, whole-pass memoization) — all ON by default;
+        # pass ``SelectionConfig.paper_faithful()`` for seed/Sec. 8-9 behavior.
+        self.selection = SelectionConfig() if selection is None else selection
+        self.selection_cache = SelectionCache()
+        self.workload = WorkloadLog(self.selection.reuse_window)
         self.cluster_tables = cluster_tables
         self._base_key = jax.random.PRNGKey(seed)
         self._ranges_cache: Dict[Tuple[str, str], RangeSet] = {}
@@ -152,6 +165,7 @@ class PBDSEngine:
             return
         self.db = self.db.with_table(table.cluster_by(ranges))
         self.samples.invalidate(table_name)
+        self.selection_cache.invalidate(table_name)
         self.catalog.invalidate_table(table)  # old object can never hit again
         self.catalog.stats["cluster"] += 1
 
@@ -188,6 +202,7 @@ class PBDSEngine:
         self.db = self.db.with_table(table.compact())
         self.catalog.invalidate_chain(table)
         self.samples.invalidate(table_name)
+        self.selection_cache.invalidate(table_name)
         self.catalog.stats["compact"] += 1
 
     def delete_rows(self, table_name: str, mask: np.ndarray) -> None:
@@ -220,6 +235,7 @@ class PBDSEngine:
         # collapsed chain's columns can actually be freed.
         self.catalog.invalidate_chain(table)
         self.samples.invalidate(table_name)
+        self.selection_cache.invalidate(table_name)
         self.catalog.stats["history_collapse"] += 1
 
     def _current_sketch(self, entry: IndexEntry) -> Tuple[ProvenanceSketch, bool]:
@@ -248,6 +264,26 @@ class PBDSEngine:
             t_execute=time.perf_counter() - tr, repaired=repaired,
         )
 
+    def _worth_it(self, sel: SelectionResult, q: Query,
+                  stamp: Optional[int]) -> bool:
+        """The admission rule (problem definition (i), Sec. 4.5), shared by
+        ``run`` and the batched planner.
+
+        Paper rule: create unless the estimate covers >= ``min_selectivity_gain``
+        of the table.  Reuse-aware (default): each recent-window query this
+        sketch would serve (``WorkloadLog.reach``, self-inclusive) discounts
+        the coverage by ``reuse_weight`` first — expected future index hits
+        buy back capture cost even for broad sketches."""
+        if sel.attr is None:
+            return False
+        est = sel.estimates.get(sel.attr) if sel.estimates else None
+        if est is None:
+            return True
+        gain = est.est_selectivity
+        if stamp is not None:
+            gain -= self.selection.reuse_weight * self.workload.reach(q, stamp)
+        return gain < self.min_selectivity_gain
+
     def run(self, q: Query) -> Tuple[QueryResult, RunInfo]:
         t0 = time.perf_counter()
         entry = self.index.lookup_entry(q) if self.strategy != "NO-PS" else None
@@ -260,19 +296,17 @@ class PBDSEngine:
             return res, RunInfo(False, False, None, "NO-PS", None,
                                 t_execute=time.perf_counter() - tp, t_probe=tp - t0)
 
+        stamp = self.workload.record(q) if self.selection.reuse_aware else None
         sel = select_attribute(
             self.strategy, self._select_key(q), q, self.db, self.n_ranges,
             sample_cache=self.samples, theta=self.theta, cfg=self.cfg,
             ranges_for=lambda a: self.ranges_for(q.table, a),
             catalog=self.catalog, aqr_cache=self.aqr,
+            selection=self.selection, selection_cache=self.selection_cache,
         )
         t1 = time.perf_counter()
 
-        est = sel.estimates.get(sel.attr) if sel.estimates else None
-        worth_it = sel.attr is not None and (
-            est is None or est.est_selectivity < self.min_selectivity_gain
-        )
-        if not worth_it:
+        if not self._worth_it(sel, q, stamp):
             res = execute(q, self.db, catalog=self.catalog)
             t2 = time.perf_counter()
             return res, RunInfo(False, False, None, self.strategy, None,
@@ -329,6 +363,11 @@ class PBDSEngine:
         """
         from repro.core.admission import admit_misses
 
+        if self.selection.reuse_aware and self.strategy != "NO-PS":
+            # Reserve workload-log stamps per batch position up front: wave
+            # deferral records misses out of arrival order, and the stamps
+            # keep ``reach`` order-exact with a sequential replay.
+            self.workload.begin_batch(len(qs))
         out: List[Optional[Tuple[QueryResult, RunInfo]]] = [None] * len(qs)
         pending: List[Tuple[int, Query]] = list(enumerate(qs))
         while pending:

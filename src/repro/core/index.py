@@ -82,12 +82,30 @@ class SketchIndex:
 
     def lookup_entry(self, q: Query) -> Optional[IndexEntry]:
         """The smallest stored sketch whose query subsumes ``q``, as an entry
-        (the engine needs the entry to repair/replace the sketch in place)."""
+        (the engine needs the entry to repair/replace the sketch in place).
+
+        ``size_rows`` ties break by (threshold tightness, recency) — NOT by
+        insertion order.  Batched admission can insert a wave's sketches in a
+        different order than a sequential replay (deferral reorders waves),
+        so insertion-position ties would let batched and sequential probes
+        serve the same query from *different* entries, diverging ``uses`` /
+        ``last_hit`` bookkeeping and hence prune decisions.  Tighter
+        thresholds mean less provenance beyond what ``q`` needs (and a
+        tighter future-reuse test), higher ``last_hit`` means the entry is
+        hot; both are insertion-order-independent, so equal-size probes pick
+        identically however the entries got there."""
         best: Optional[IndexEntry] = None
-        for e in self._entries.get(_pred_key(q), []):
+        best_rank: Optional[Tuple] = None
+        neg_inf = float("-inf")
+        for pos, e in enumerate(self._entries.get(_pred_key(q), [])):
             if subsumes(e.query, q):
-                if best is None or e.sketch.size_rows < best.sketch.size_rows:
-                    best = e
+                t1, t2 = _thresholds(e.query)
+                rank = (e.sketch.size_rows,
+                        -(t1 if t1 is not None else neg_inf),
+                        -(t2 if t2 is not None else neg_inf),
+                        -e.last_hit, pos)
+                if best_rank is None or rank < best_rank:
+                    best, best_rank = e, rank
         if best is None:
             self.misses += 1
             return None

@@ -17,7 +17,7 @@ map to one value) and [32]'s safety argument needs value-aligned bounds.
 """
 from __future__ import annotations
 
-from typing import Optional, Tuple
+from typing import Callable, Optional, Tuple
 
 from repro.core.catalog import Catalog, default_catalog
 from repro.core.queries import Query
@@ -124,3 +124,48 @@ def prefilter_candidates(
         if a in q.groupby or catalog.distinct_count(fact, a) >= n_ranges:
             out.append(a)
     return tuple(out)
+
+
+def stats_prefilter(
+    q: Query,
+    db: Database,
+    candidates: Tuple[str, ...],
+    ranges_for: Callable[[str], "object"],
+    catalog: Optional[Catalog] = None,
+) -> Tuple[str, ...]:
+    """Summary-statistics dominance prune (PS3-style), before any sampling.
+
+    For a fixed number of satisfied groups, a candidate's sketch covers the
+    fragments those groups land in — so its size is bounded by (#covered
+    fragments) x (fragment sizes).  A partition with *more* nonempty
+    fragments whose largest and smallest nonempty fragments are both
+    *smaller* (as fractions of the table) bounds every query's sketch no
+    larger than a coarser partition does: the same group set touches at most
+    as many rows.  Candidate ``a`` is pruned when some ``b`` dominates it on
+    ``(n_nonempty >=, max_frac <=, min_frac <=)`` with at least one strict
+    inequality — a product partial order, so maximal candidates always
+    survive and the pool never empties.  Equi-depth partitions of two
+    high-cardinality attributes tie on all three statistics and both survive
+    (the AQR estimate pass ranks them); the prune bites on low-cardinality
+    attributes whose deduplicated bounds collapse to few, fat fragments.
+
+    All statistics come from catalog-cached fragment counts
+    (``Catalog.frag_stats``): no sampling, no estimate launch.  Gated behind
+    ``SelectionConfig.stats_prefilter`` — paper-faithful CB-OPT runs disable
+    it and estimate every safe candidate.
+    """
+    if len(candidates) <= 1:
+        return candidates
+    catalog = catalog or default_catalog()
+    fact = db[q.table]
+    stats = {a: catalog.frag_stats(fact, ranges_for(a)) for a in candidates}
+
+    def dominates(b: str, a: str) -> bool:
+        nb, xb, mb = stats[b]
+        na, xa, ma = stats[a]
+        return (nb >= na and xb <= xa and mb <= ma
+                and (nb > na or xb < xa or mb < ma))
+
+    out = tuple(a for a in candidates
+                if not any(b != a and dominates(b, a) for b in candidates))
+    return out or candidates

@@ -1536,6 +1536,10 @@ class ShardedEngine:
         """
         from repro.core.admission import admit_misses
 
+        if self.engine.selection.reuse_aware and self.engine.strategy != "NO-PS":
+            # Same stamp reservation as single-node ``run_batch``: wave
+            # deferral records misses out of batch order.
+            self.engine.workload.begin_batch(len(qs))
         out: List[Optional[Tuple[QueryResult, RunInfo]]] = [None] * len(qs)
         pending: List[Tuple[int, Query]] = list(enumerate(qs))
         while pending:

@@ -1,17 +1,85 @@
 """Synthetic query workloads (Sec. 11.1): random instantiations of the
 Q-AGH / Q-AJGH / Q-AAJGH templates over the four datasets, with HAVING
 thresholds drawn from the actual group-aggregate quantiles so workloads mix
-selective and broad queries (like the paper's 1000-query batches)."""
+selective and broad queries (like the paper's 1000-query batches).
+
+Also home of the engine's :class:`WorkloadLog` — the bounded window of
+recently *missed* queries that reuse-aware selection scores candidate
+sketches against (subsumption reach ~ expected future index hits)."""
 from __future__ import annotations
 
+import collections
 import dataclasses
 import itertools
 from typing import List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from repro.core.index import subsumes
 from repro.core.queries import Aggregate, Having, JoinSpec, Query, execute
 from repro.core.table import Database
+
+
+class WorkloadLog:
+    """Bounded log of recent sketch-index *misses*, stamped in arrival order.
+
+    The reuse-aware cost model asks: had we captured a sketch for ``q``, how
+    many queries in the recent window would it have served?  ``reach(q)``
+    answers with the number of logged queries ``p`` that ``q`` subsumes — the
+    same predicate the index uses to serve hits — so the worth-it rule can
+    trade estimated coverage against expected future hits.
+
+    Stamps make batched admission order-exact: sequential ``run`` records one
+    miss at a time, while ``run_batch`` admits whole waves (and defers
+    subsumed members to later waves), so entries can be *inserted* out of
+    batch-position order.  Each entry carries the stamp of its batch position
+    and ``reach(q, stamp)`` only counts entries at or before ``stamp`` —
+    reproducing exactly what a sequential replay would have seen.  Only hits
+    never enter the log: a served query needs no new sketch in either path.
+    """
+
+    def __init__(self, window: int = 256):
+        self.window = window
+        self._log: collections.deque = collections.deque(maxlen=max(1, window))
+        self._clock = 0
+        self._batch_base: Optional[int] = None
+
+    def __len__(self) -> int:
+        return len(self._log)
+
+    @property
+    def clock(self) -> int:
+        return self._clock
+
+    def begin_batch(self, n: int) -> None:
+        """Reserve stamp slots for an ``n``-query batch: position ``i`` gets
+        stamp ``base + i + 1`` no matter which admission wave records it."""
+        self._batch_base = self._clock
+        self._clock += n
+
+    def batch_stamp(self, pos: int) -> Optional[int]:
+        """The reserved stamp of batch position ``pos`` (None outside a batch)."""
+        if self._batch_base is None:
+            return None
+        return self._batch_base + pos + 1
+
+    def record(self, q: Query, stamp: Optional[int] = None) -> int:
+        """Log one miss; returns its stamp (auto-incremented when not given)."""
+        if stamp is None:
+            self._clock += 1
+            stamp = self._clock
+        self._log.append((stamp, q))
+        return stamp
+
+    def reach(self, q: Query, stamp: Optional[int] = None) -> int:
+        """#logged queries at-or-before ``stamp`` that a sketch for ``q``
+        would serve (``subsumes(q, p)``); the whole window when no stamp."""
+        if stamp is None:
+            stamp = self._clock
+        return sum(1 for s, p in self._log if s <= stamp and subsumes(q, p))
+
+    def entries(self) -> List[Tuple[int, Query]]:
+        return list(self._log)
 
 
 @dataclasses.dataclass(frozen=True)

@@ -28,6 +28,7 @@ from repro.core import (
 )
 from repro.core.datasets import make_crimes, make_tpch
 from repro.core.engine import PBDSEngine
+from repro.core.strategies import SelectionConfig
 
 N_ROWS = 30_000
 
@@ -244,8 +245,12 @@ def test_shared_miss_path_work(tpch_db):
     """The whole point: a B-query miss batch pays one sample, one AQR pass,
     one group encoding and one WHERE/agg scan per signature group."""
     qs = _template_batches(tpch_db, (0.97, 0.95, 0.92, 0.9))["Q-AGH"]
+    # Q-AGH has a single group-by candidate: disable the single-candidate
+    # shortcut so the batch actually exercises the shared sample/AQR pass
+    # this test pins.
     eng = PBDSEngine(tpch_db, strategy="CB-OPT-GB", n_ranges=40, theta=0.1,
-                     seed=0, min_selectivity_gain=0.98)
+                     seed=0, min_selectivity_gain=0.98,
+                     selection=SelectionConfig(skip_single_candidate=False))
     out = eng.run_batch(qs)
     n_created = sum(1 for _, i in out if i.created)
     assert n_created >= 2

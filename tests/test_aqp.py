@@ -134,3 +134,66 @@ def test_sample_cache_reuse(db):
     assert s1 is s2 and cache.hits == 1 and cache.misses == 1
     assert s1.reusable_for("crimes", ("district",))
     assert not s1.reusable_for("crimes", ("year",))
+
+
+def test_aqr_cache_eviction_overflow_and_recompute():
+    """Satellite coverage: the max_entries FIFO overflow branch.  Evicted
+    passes recompute bit-identically and the hit/miss/eviction counters stay
+    consistent with the number of calls."""
+    from repro.aqp.sampling import AQRCache
+
+    db = Database({"crimes": make_crimes(8_000, seed=3)})
+    fact = db["crimes"]
+    cache = AQRCache(max_entries=2)
+    scache = SampleCache()
+    cfg = EstimationConfig()
+    key = jax.random.PRNGKey(0)
+    qs = [Query("crimes", (gb,), Aggregate("count", None), having=Having(">", 5.0))
+          for gb in ("district", "month", "year")]
+    outs = []
+    for q in qs:
+        samples = scache.get_or_create(key, fact, q.groupby_on_fact(db), 0.2)
+        outs.append(cache.get_or_compute(key, q, db, samples, 0.2, cfg))
+    assert cache.misses == 3 and cache.hits == 0
+    assert cache.evictions == 1 and len(cache._cache) == 2
+    # qs[0] was the FIFO victim: recomputing reproduces the identical pass.
+    samples0 = scache.get_or_create(key, fact, qs[0].groupby_on_fact(db), 0.2)
+    est2, sampled2 = cache.get_or_compute(key, qs[0], db, samples0, 0.2, cfg)
+    est1, sampled1 = outs[0]
+    np.testing.assert_array_equal(est1.estimate, est2.estimate)
+    np.testing.assert_array_equal(est1.sigma, est2.sigma)
+    np.testing.assert_array_equal(sampled1, sampled2)
+    assert cache.misses == 4 and cache.evictions == 2
+    # A hit neither evicts nor recomputes.
+    before = dict(cache._cache)
+    cache.get_or_compute(key, qs[0], db, samples0, 0.2, cfg)
+    assert cache.hits == 1 and cache.evictions == 2
+    assert list(cache._cache) == list(before)
+    assert cache.hits + cache.misses == 5
+
+
+def test_aqr_cache_version_churn_invalidation():
+    """A mutated table never serves a stale pass (key mismatch by version),
+    and ``invalidate`` drops every entry of the table."""
+    from repro.aqp.sampling import AQRCache
+
+    db = Database({"crimes": make_crimes(8_000, seed=3)})
+    fact = db["crimes"]
+    cache = AQRCache(max_entries=8)
+    scache = SampleCache()
+    cfg = EstimationConfig()
+    key = jax.random.PRNGKey(0)
+    q = Query("crimes", ("district",), Aggregate("count", None),
+              having=Having(">", 5.0))
+    samples = scache.get_or_create(key, fact, q.groupby_on_fact(db), 0.2)
+    cache.get_or_compute(key, q, db, samples, 0.2, cfg)
+    fact2 = fact.append({a: np.asarray(fact[a])[:16] for a in fact.schema})
+    db2 = db.with_table(fact2)
+    samples2 = scache.get_or_create(key, fact2, q.groupby_on_fact(db2), 0.2)
+    cache.get_or_compute(key, q, db2, samples2, 0.2, cfg)
+    assert cache.misses == 2 and cache.hits == 0  # no stale serve
+    assert len(cache._cache) == 2  # both versions resident until invalidated
+    cache.invalidate("crimes")
+    assert len(cache._cache) == 0
+    cache.get_or_compute(key, q, db2, samples2, 0.2, cfg)
+    assert cache.misses == 3  # invalidated entries recompute

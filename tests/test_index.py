@@ -133,3 +133,42 @@ def test_subsumed_query_reuses_wider_sketch_and_pruned_entry_recaptures():
     res2, info2 = eng.run(q_narrow)
     assert info2.created and not info2.reused
     assert res2.canonical() == execute(q_narrow, db).canonical()
+
+
+def test_lookup_tie_break_is_insertion_order_independent():
+    """Satellite regression: equal-size sketches must be served from the same
+    entry whatever order they were inserted in.  Batched admission can insert
+    a wave's sketches in a different order than a sequential replay, so
+    insertion-position ties would diverge ``uses``/``last_hit`` bookkeeping
+    (and hence prune decisions) between the two paths."""
+    qa, qb = _q(tau=10.0), _q(tau=12.0)  # both subsume tau>=30 probes
+    probe = _q(tau=30.0)
+    idx1, idx2 = SketchIndex(), SketchIndex()
+    idx1.insert(qa, _sk(size_rows=20))
+    idx1.insert(qb, _sk(size_rows=20))
+    idx2.insert(qb, _sk(size_rows=20))
+    idx2.insert(qa, _sk(size_rows=20))
+    e1, e2 = idx1.lookup_entry(probe), idx2.lookup_entry(probe)
+    # The tighter-threshold capture (tau=12) wins the size tie in both.
+    assert e1.query.having.value == e2.query.having.value == 12.0
+    # Bookkeeping landed on the same logical entry in both indexes.
+    assert e1.uses == e2.uses == 1
+
+
+def test_lookup_tie_break_prefers_tighter_outer_threshold():
+    """Ties on (size, inner threshold) break on the outer HAVING threshold."""
+    import dataclasses as dc
+
+    def _qq(t1, t2):
+        q = _q(tau=t1)
+        return dc.replace(q, outer_groupby=("a",),
+                          outer_agg=Aggregate("sum", None),
+                          outer_having=Having(">", t2))
+
+    probe = _qq(30.0, 9.0)
+    for order in ((5.0, 8.0), (8.0, 5.0)):
+        idx = SketchIndex()
+        for t2 in order:
+            idx.insert(_qq(10.0, t2), _sk(size_rows=20))
+        e = idx.lookup_entry(probe)
+        assert e.query.outer_having.value == 8.0, order

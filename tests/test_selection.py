@@ -1,0 +1,333 @@
+"""Reuse-aware, stats-prefiltered, incremental selection (tentpole suite).
+
+Covers the three new selection layers and their contracts:
+  * stats pre-filter — dominance pruning from catalog statistics alone,
+    never emptying the pool;
+  * reuse-aware worth-it — recurring broad templates get admitted (and repeat
+    queries become index hits) where paper-faithful admission declines forever;
+  * incremental selection — the SelectionCache makes repeat templates pay
+    ~zero selection work, invalidating on table mutation;
+plus the satellite regressions: the AQR/estimate PRNG key split (cached and
+uncached AQR paths must rank candidates identically) and paper-faithful mode
+being bit-identical to calling ``select_attribute`` with no config at all.
+"""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.aqp.sampling import AQRCache, SampleCache
+from repro.core import (
+    Aggregate,
+    Catalog,
+    Database,
+    Having,
+    Query,
+    SelectionCache,
+    SelectionConfig,
+    WorkloadLog,
+    execute,
+    select_attribute,
+    selection_cache_key,
+    stats_prefilter,
+)
+from repro.core.datasets import make_crimes
+from repro.core.engine import PBDSEngine
+from repro.core.strategies import PAPER_FAITHFUL
+from repro.core.table import from_numpy
+
+
+@pytest.fixture(scope="module")
+def db():
+    return Database({"crimes": make_crimes(15_000, seed=21)})
+
+
+def _broad_q():
+    # Every group passes HAVING -> estimated selectivity 1.0.
+    return Query("crimes", ("district",), Aggregate("count", None),
+                 having=Having(">", 0.0))
+
+
+def _two_cand_q():
+    return Query("crimes", ("district", "month"), Aggregate("count", None),
+                 having=Having(">", 50.0))
+
+
+# -- config / defaults ---------------------------------------------------------
+
+def test_config_defaults_and_paper_faithful():
+    cfg = SelectionConfig()
+    assert cfg.stats_prefilter and cfg.skip_single_candidate
+    assert cfg.reuse_aware and cfg.cache
+    pf = SelectionConfig.paper_faithful()
+    assert not (pf.stats_prefilter or pf.skip_single_candidate or
+                pf.reuse_aware or pf.cache)
+
+
+def test_no_config_is_paper_faithful(db):
+    """``select_attribute`` without a config == explicit paper-faithful mode:
+    same attribute, same candidate pool, same estimate values (bit-identical
+    seed behavior — acceptance gate)."""
+    q = _two_cand_q()
+    key = jax.random.PRNGKey(7)
+    kwargs = dict(sample_cache=SampleCache(), theta=0.1, catalog=Catalog())
+    a = select_attribute("CB-OPT-GB", key, q, db, 10, **kwargs)
+    b = select_attribute("CB-OPT-GB", key, q, db, 10, selection=PAPER_FAITHFUL,
+                         selection_cache=SelectionCache(), **kwargs)
+    assert a.attr == b.attr and a.candidates == b.candidates
+    assert set(a.estimates) == set(b.estimates)
+    for attr in a.estimates:
+        assert a.estimates[attr].est_rows == b.estimates[attr].est_rows
+        np.testing.assert_array_equal(a.estimates[attr].est_bits,
+                                      b.estimates[attr].est_bits)
+
+
+# -- stats pre-filter ----------------------------------------------------------
+
+def _skewed_db():
+    """'lo' has 2 distinct values (few fat fragments after bound dedupe),
+    'hi' is high-cardinality (many slim equi-depth fragments) -> 'hi'
+    dominates 'lo' on (n_nonempty, max_frac, min_frac)."""
+    n = 4000
+    rng = np.random.default_rng(3)
+    return Database({"t": from_numpy("t", {
+        "lo": (rng.random(n) < 0.5).astype(np.float32),
+        "hi": rng.permutation(n).astype(np.float32),
+        "v": rng.random(n).astype(np.float32),
+    })})
+
+
+def test_stats_prefilter_prunes_dominated():
+    db2 = _skewed_db()
+    q = Query("t", ("hi", "lo"), Aggregate("count", None), having=Having(">", 0.0))
+    cat = Catalog()
+    from repro.core.ranges import equi_depth_ranges
+    rf = lambda a: equi_depth_ranges(db2["t"], a, 16)
+    out = stats_prefilter(q, db2, ("hi", "lo"), rf, catalog=cat)
+    assert out == ("hi",)
+
+
+def test_stats_prefilter_never_empties():
+    db2 = _skewed_db()
+    q = Query("t", ("hi", "lo"), Aggregate("count", None), having=Having(">", 0.0))
+    from repro.core.ranges import equi_depth_ranges
+    rf = lambda a: equi_depth_ranges(db2["t"], a, 16)
+    # Identical statistics (same attr twice under different labels is not
+    # constructible; use two equal-cardinality permutations): neither
+    # dominates, both survive.
+    n = 4000
+    rng = np.random.default_rng(4)
+    db3 = Database({"t": from_numpy("t", {
+        "a1": rng.permutation(n).astype(np.float32),
+        "a2": rng.permutation(n).astype(np.float32),
+    })})
+    q3 = Query("t", ("a1", "a2"), Aggregate("count", None), having=Having(">", 0.0))
+    rf3 = lambda a: equi_depth_ranges(db3["t"], a, 16)
+    assert stats_prefilter(q3, db3, ("a1", "a2"), rf3, catalog=Catalog()) == ("a1", "a2")
+    # Single candidate short-circuits untouched.
+    assert stats_prefilter(q, db2, ("lo",), rf, catalog=Catalog()) == ("lo",)
+    assert stats_prefilter(q, db2, (), rf, catalog=Catalog()) == ()
+
+
+def test_stats_prefilter_in_engine_skips_estimation_of_dominated(db):
+    """End-to-end: with the pre-filter on, the dominated candidate never
+    reaches the estimate pass (it is absent from sel.estimates)."""
+    db2 = _skewed_db()
+    q = Query("t", ("hi", "lo"), Aggregate("count", None), having=Having(">", 2.0))
+    eng = PBDSEngine(db2, strategy="CB-OPT-GB", n_ranges=16, theta=0.2, seed=0,
+                     selection=SelectionConfig(skip_single_candidate=False))
+    res, info = eng.run(q)
+    assert res.canonical() == execute(q, db2).canonical()
+    pf = PBDSEngine(db2, strategy="CB-OPT-GB", n_ranges=16, theta=0.2, seed=0,
+                    selection=SelectionConfig.paper_faithful())
+    res_pf, _ = pf.run(q)
+    assert res_pf.canonical() == res.canonical()
+
+
+# -- single-candidate shortcut -------------------------------------------------
+
+def test_single_candidate_shortcut_skips_sampling(db):
+    q = Query("crimes", ("district",), Aggregate("count", None),
+              having=Having(">", 50.0))
+    eng = PBDSEngine(db, strategy="CB-OPT-GB", n_ranges=10, theta=0.1, seed=0)
+    res, info = eng.run(q)
+    assert info.created and info.attr == "district"
+    # The whole sample/AQR/estimate stack was skipped.
+    assert eng.samples.misses == 0 and eng.aqr.misses == 0
+    assert res.canonical() == execute(q, db).canonical()
+
+
+# -- reuse-aware admission -----------------------------------------------------
+
+def test_reuse_aware_creates_where_paper_declines(db):
+    q = _broad_q()
+    eng = PBDSEngine(db, strategy="CB-OPT-GB", n_ranges=10, theta=0.1,
+                     min_selectivity_gain=0.9, seed=0,
+                     selection=SelectionConfig(skip_single_candidate=False))
+    res, info = eng.run(q)
+    assert info.created  # paper-faithful admission declines this (sel == 1.0)
+    res2, info2 = eng.run(q)
+    assert info2.reused  # ...and the repeat is an index hit, not a re-selection
+    assert res.canonical() == res2.canonical() == execute(q, db).canonical()
+
+
+def test_reuse_discount_flips_admission_after_enough_repeats(db):
+    """With a low gain bar the discount needs reach to accumulate: the same
+    broad template is declined first, then admitted once the window shows it
+    recurring (1.0 - 0.12*reach < 0.5 at the 5th miss)."""
+    q = _broad_q()
+    eng = PBDSEngine(db, strategy="CB-OPT-GB", n_ranges=10, theta=0.1,
+                     min_selectivity_gain=0.5, seed=0,
+                     selection=SelectionConfig(skip_single_candidate=False))
+    outcomes = []
+    for _ in range(6):
+        _, info = eng.run(q)
+        outcomes.append((info.created, info.reused))
+    assert outcomes[:4] == [(False, False)] * 4   # declined while reach is low
+    assert outcomes[4] == (True, False)           # 5th miss: reach 5 flips it
+    assert outcomes[5] == (False, True)           # then ordinary index hits
+    # Declined repeats were selection-cache hits: one estimate pass total.
+    assert eng.aqr.misses == 1
+    assert eng.selection_cache.hits >= 3
+
+
+def test_workload_log_reach_window_and_stamps():
+    wl = WorkloadLog(window=3)
+    q1 = _broad_q()
+    q2 = dataclasses.replace(q1, having=Having(">", 10.0))  # q1 subsumes q2
+    s1 = wl.record(q1)
+    s2 = wl.record(q2)
+    assert (s1, s2) == (1, 2)
+    assert wl.reach(q1) == 2          # subsumes both
+    assert wl.reach(q2) == 1          # subsumes only itself
+    assert wl.reach(q1, stamp=s1) == 1  # prefix-exact
+    # Window eviction: 3 more records push q1/q2 out.
+    for _ in range(3):
+        wl.record(q1)
+    assert len(wl) == 3
+    assert wl.reach(q2) == 0
+    # Batch stamps are reserved per position, independent of record order.
+    wl2 = WorkloadLog()
+    wl2.record(q1)
+    wl2.begin_batch(4)
+    assert [wl2.batch_stamp(i) for i in range(4)] == [2, 3, 4, 5]
+    wl2.record(q2, stamp=wl2.batch_stamp(3))
+    wl2.record(q1, stamp=wl2.batch_stamp(1))
+    assert wl2.reach(q1, stamp=wl2.batch_stamp(1)) == 2  # q1@1 + earlier q1
+    assert wl2.reach(q1, stamp=wl2.batch_stamp(3)) == 3  # ...plus q2@3
+
+
+# -- incremental selection (SelectionCache) ------------------------------------
+
+def test_selection_cache_repeat_template_pays_zero(db):
+    """A repeat of the same template (different threshold) never re-enters
+    the sampling/estimate stack — the whole pass is memoized."""
+    q1 = _two_cand_q()
+    q2 = dataclasses.replace(q1, having=Having(">", 120.0))
+    eng = PBDSEngine(db, strategy="CB-OPT-GB", n_ranges=10, theta=0.1, seed=0,
+                     min_selectivity_gain=2.0,  # always create
+                     selection=SelectionConfig(skip_single_candidate=False))
+    eng.run(q1)
+    aqr_misses, sample_misses = eng.aqr.misses, eng.samples.misses
+    _, info2 = eng.run(q2)  # same template, tighter threshold -> index hit
+    assert info2.reused
+    # Force a genuine selection for a non-subsumed sibling: LOOSER threshold.
+    q3 = dataclasses.replace(q1, having=Having(">", 10.0))
+    _, info3 = eng.run(q3)
+    assert info3.created
+    assert eng.selection_cache.hits >= 1
+    assert eng.aqr.misses == aqr_misses and eng.samples.misses == sample_misses
+
+
+def test_selection_cache_invalidates_on_mutation(db):
+    q = _two_cand_q()
+    eng = PBDSEngine(db, strategy="CB-OPT-GB", n_ranges=10, theta=0.1, seed=0,
+                     min_selectivity_gain=2.0,
+                     selection=SelectionConfig(skip_single_candidate=False))
+    eng.run(q)
+    misses0 = eng.selection_cache.misses
+    fact = eng.db["crimes"]
+    batch = {a: np.asarray(fact[a])[:32] for a in fact.schema}
+    eng.append_rows("crimes", batch)
+    q2 = dataclasses.replace(q, having=Having(">", 10.0))
+    eng.run(q2)
+    # New table version -> new cache key -> the pass recomputed.
+    assert eng.selection_cache.misses > misses0
+
+
+def test_selection_cache_unit():
+    cache = SelectionCache(max_entries=2)
+    from repro.core.strategies import SelectionResult
+    r = SelectionResult("CB-OPT-GB", "a", ("a",), {})
+    k1, k2, k3 = (("s", 1, 1, 0.1, 10, (None, None), "t1"),
+                  ("s", 1, 1, 0.1, 10, (None, None), "t2"),
+                  ("s", 1, 1, 0.1, 10, (None, None), "t3"))
+    assert cache.get(k1) is None and cache.misses == 1
+    cache.put(k1, r)
+    assert cache.get(k1) is r and cache.hits == 1
+    cache.put(k2, r)
+    cache.put(k3, r)  # FIFO evicts k1
+    assert len(cache) == 2 and cache.get(k1) is None
+    # invalidate() matches the table name at key index 6.
+    cache.invalidate("t2")
+    assert len(cache) == 1 and cache.get(k2) is None
+
+
+def test_selection_cache_key_separates_having_ops(db):
+    q_gt = _two_cand_q()
+    q_eq = dataclasses.replace(q_gt, having=Having("==", 50.0))
+    t = db["crimes"]
+    assert (selection_cache_key("CB-OPT-GB", q_gt, t, 0.1, 10)
+            != selection_cache_key("CB-OPT-GB", q_eq, t, 0.1, 10))
+
+
+# -- satellite 1: AQR/estimate key split ---------------------------------------
+
+def test_cached_and_uncached_aqr_paths_rank_identically(db):
+    """Regression for the reused-``k_e`` bug: with the key split, running
+    selection through an AQRCache and without one must produce identical
+    candidate rankings and estimate values."""
+    q = _two_cand_q()
+    key = jax.random.PRNGKey(11)
+    common = dict(theta=0.1, catalog=Catalog())
+    uncached = select_attribute("CB-OPT-GB", key, q, db, 10,
+                                sample_cache=SampleCache(), aqr_cache=None,
+                                **common)
+    cached = select_attribute("CB-OPT-GB", key, q, db, 10,
+                              sample_cache=SampleCache(), aqr_cache=AQRCache(),
+                              **common)
+    assert uncached.attr == cached.attr
+    assert uncached.topk == cached.topk
+    assert set(uncached.estimates) == set(cached.estimates)
+    for a in uncached.estimates:
+        assert uncached.estimates[a].est_rows == cached.estimates[a].est_rows
+
+
+# -- batched admission parity under both configs -------------------------------
+
+@pytest.mark.parametrize("cfg", [None, "paper_faithful"])
+def test_run_batch_parity_with_selection_configs(db, cfg):
+    sel = SelectionConfig.paper_faithful() if cfg else None
+    from repro.core.workload import CRIMES_SPEC, generate_workload
+    qs = generate_workload(CRIMES_SPEC, db, 8, seed=5)
+    mk = lambda: PBDSEngine(db, strategy="CB-OPT-GB", n_ranges=10, theta=0.1,
+                            seed=0, selection=sel)
+    e_seq, e_bat = mk(), mk()
+    seq = [e_seq.run(q) for q in qs]
+    bat = e_bat.run_batch(qs)
+    for i, (s, b) in enumerate(zip(seq, bat)):
+        assert s[0].canonical() == b[0].canonical(), i
+        assert (s[1].reused, s[1].created, s[1].attr) == (
+            b[1].reused, b[1].created, b[1].attr), i
+    assert len(e_seq.index) == len(e_bat.index)
+    es = sorted(e_seq.index.entries(), key=lambda e: repr(e.query.signature()))
+    eb = sorted(e_bat.index.entries(), key=lambda e: repr(e.query.signature()))
+    for a, b in zip(es, eb):
+        assert a.query.signature() == b.query.signature()
+        np.testing.assert_array_equal(a.sketch.bits, b.sketch.bits)
+    # The two engines' workload logs agree entry-for-entry (stamp order).
+    if sel is None:
+        sa = sorted((s, repr(p.signature())) for s, p in e_seq.workload.entries())
+        sb = sorted((s, repr(p.signature())) for s, p in e_bat.workload.entries())
+        assert [x[1] for x in sa] == [x[1] for x in sb]

@@ -100,3 +100,95 @@ def test_apply_sketch_shrinks_db(db):
     assert int(np.asarray(inst[PAD_VALID]).sum()) == sk.size_rows
     assert inst.num_rows == 1 << (sk.size_rows - 1).bit_length()
     assert inst.num_rows < db["crimes"].num_rows
+
+
+# -- low-cardinality group-by attributes (satellite regression) ----------------
+# GB attrs are exempt from the distinct-count pre-filter, so an attribute with
+# fewer distinct values than n_ranges reaches ``equi_depth_ranges``: the
+# deduplicated bounds collapse to a few fat, value-aligned fragments.  Every
+# path downstream (capture, application, estimation, maintenance, the engine)
+# must handle the degenerate partition.
+
+def _lowcard_db(n=6_000, n_distinct=3, seed=11):
+    from repro.core.table import from_numpy
+
+    rng = np.random.default_rng(seed)
+    return Database({"t": from_numpy("t", {
+        "g": rng.integers(0, n_distinct, n).astype(np.float32),
+        "v": rng.random(n).astype(np.float32),
+    })})
+
+
+def _lowcard_q(tau=600.0):
+    return Query("t", ("g",), Aggregate("count", None), having=Having(">", tau))
+
+
+def test_lowcard_gb_ranges_dedupe_and_value_align():
+    db2 = _lowcard_db()
+    ranges = equi_depth_ranges(db2["t"], "g", 10)
+    # 3 distinct values -> at most 2 interior bounds survive dedupe.
+    assert ranges.n_ranges <= 3 + 1
+    assert np.all(np.diff(ranges.bounds) > 0)  # strictly increasing
+    # Value-aligned: every row of one group value lands in one fragment.
+    col = np.asarray(db2["t"]["g"])
+    frag = np.asarray(ranges.bucketize(col))
+    for v in np.unique(col):
+        assert len(np.unique(frag[col == v])) == 1
+
+
+def test_lowcard_gb_capture_apply_execute():
+    db2 = _lowcard_db()
+    q2 = _lowcard_q(tau=2100.0)  # ~one of three groups passes
+    ranges = equi_depth_ranges(db2["t"], "g", 10)
+    sk = capture_sketch(q2, db2, ranges)
+    assert is_safe_sketch(q2, db2, sk)
+    res = execute_with_sketch(q2, db2, sk)
+    assert res.canonical() == execute(q2, db2).canonical()
+    # The fat-fragment partition still skips: non-passing groups' fragments
+    # are not covered when the threshold splits the groups.
+    if 0 < int(np.asarray(sk.bits).sum()) < sk.ranges.n_ranges:
+        assert sk.selectivity < 1.0
+
+
+def test_lowcard_gb_estimate_path():
+    """The padded estimator accepts a candidate whose deduped n_ranges is far
+    below the requested count (ragged fragment axis)."""
+    import jax
+
+    from repro.aqp.sampling import SampleCache
+    from repro.aqp.size_estimation import EstimationConfig, estimate_size_batched
+
+    db2 = _lowcard_db()
+    q2 = _lowcard_q(tau=2100.0)
+    key = jax.random.PRNGKey(0)
+    samples = SampleCache().get_or_create(key, db2["t"], ("g",), 0.2)
+    ranges = equi_depth_ranges(db2["t"], "g", 10)
+    ests = estimate_size_batched(key, q2, db2, {"g": ranges}, samples,
+                                 EstimationConfig())
+    est = ests["g"]
+    assert est.est_bits.shape[0] == ranges.n_ranges
+    assert 0.0 <= est.est_selectivity <= 1.0
+
+
+def test_lowcard_gb_engine_end_to_end_with_maintenance():
+    """Engine admission + repeat hit + append/repair over the degenerate
+    partition: results stay exact throughout."""
+    from repro.core.engine import PBDSEngine
+
+    db2 = _lowcard_db()
+    q2 = _lowcard_q(tau=1000.0)
+    eng = PBDSEngine(db2, strategy="CB-OPT-GB", n_ranges=10, theta=0.2, seed=0,
+                     min_selectivity_gain=2.0)
+    res, info = eng.run(q2)
+    assert info.created
+    assert res.canonical() == execute(q2, db2).canonical()
+    _, info2 = eng.run(q2)
+    assert info2.reused
+    # Mutate: append rows biased into one group, then re-run -> repair path.
+    fact = eng.db["t"]
+    batch = {"g": np.full(500, 1.0, np.float32),
+             "v": np.linspace(0, 1, 500, dtype=np.float32)}
+    eng.append_rows("t", batch)
+    res3, info3 = eng.run(q2)
+    assert info3.reused and info3.repaired
+    assert res3.canonical() == execute(q2, eng.db).canonical()

@@ -12,6 +12,7 @@ import pytest
 from repro.core import Database, execute
 from repro.core.datasets import make_crimes, make_tpch
 from repro.core.engine import PBDSEngine
+from repro.core.strategies import SelectionConfig
 from repro.core.workload import CRIMES_SPEC, TPCH_JOIN_SPEC, generate_workload
 
 STRATEGIES = ("NO-PS", "RAND-ALL", "RAND-GB", "RAND-PK", "RAND-AGG",
@@ -79,8 +80,11 @@ def test_engine_skips_useless_sketches(db):
     from repro.core import Aggregate, Having, Query
 
     q = Query("crimes", ("district",), Aggregate("count", None), having=Having(">", 0.0))
+    # Paper-faithful selection: the default reuse-aware config deliberately
+    # admits broad sketches when the workload window shows them recurring.
     eng = PBDSEngine(db, strategy="CB-OPT-GB", n_ranges=10, theta=0.1,
-                     min_selectivity_gain=0.9, seed=0)
+                     min_selectivity_gain=0.9, seed=0,
+                     selection=SelectionConfig.paper_faithful())
     res, info = eng.run(q)
     assert not info.created  # every group passes -> selectivity 1.0 -> skip
     assert res.canonical() == execute(q, db).canonical()
