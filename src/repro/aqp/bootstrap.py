@@ -82,7 +82,7 @@ def bootstrap_group_means(
     means = _resample_means(
         vals_sorted, starts_row, sizes_row, gid_sorted, n_pad, key, n_resamples
     )
-    means = np.asarray(means)[:, :n_groups]
+    means = np.asarray(means)[:, :n_groups]  # analyze: waive[SYNC01]: deliberate merge: bootstrap spreads return to the host cost model once per admission-time estimate
     return BootstrapStats(
         mean=means.mean(axis=0),
         std=means.std(axis=0, ddof=1) if n_resamples > 1 else np.zeros(n_groups),

@@ -61,7 +61,7 @@ def stratified_reservoir_sample(
     if not stratified:
         return uniform_reservoir_sample(key, table, groupby, theta, gid, n_groups, group_values)
 
-    u = np.asarray(jax.random.uniform(key, (n,), dtype=jnp.float32))
+    u = np.asarray(jax.random.uniform(key, (n,), dtype=jnp.float32))  # analyze: waive[SYNC01]: deliberate merge: uniform draws feed host lexsort/reservoir index math, once per sample build
     # Sort by (group, descending key): the first k_g rows of each segment are
     # a uniform k_g-reservoir of that group.
     order = np.lexsort((-u, gid))
@@ -103,7 +103,7 @@ def uniform_reservoir_sample(
     if gid is None:
         gid, n_groups, group_values = encode_groups(table, groupby)
     k = max(1, int(theta * n))
-    u = np.asarray(jax.random.uniform(key, (n,), dtype=jnp.float32))
+    u = np.asarray(jax.random.uniform(key, (n,), dtype=jnp.float32))  # analyze: waive[SYNC01]: deliberate merge: uniform draws feed host argpartition, once per sample build
     idx = np.argpartition(-u, k - 1)[:k] if k < n else np.arange(n)
     idx = np.sort(idx)
     return SampleSet(
@@ -166,7 +166,7 @@ def extend_sample_for_append(
             sample_sizes = np.concatenate([sample_sizes, np.zeros(pad, dtype=sample_sizes.dtype)])
         np.add.at(group_sizes, gid_b, 1)
         key, k_b = jax.random.split(key)
-        take = np.asarray(jax.random.uniform(k_b, (m,))) < s.theta
+        take = np.asarray(jax.random.uniform(k_b, (m,))) < s.theta  # analyze: waive[SYNC01]: deliberate merge: per-batch draws feed host reservoir bookkeeping during appends
         # Unsampled groups keep their first batch row (the stratified floor).
         uniq_g, first_idx = np.unique(gid_b, return_index=True)
         force = first_idx[sample_sizes[uniq_g] == 0]

@@ -26,6 +26,8 @@ from repro.aqp.bootstrap import BootstrapStats, bootstrap_group_means
 from repro.aqp.estimators import GroupEstimates, group_estimates, pass_probability
 from repro.aqp.sampling import SampleSet
 from repro.aqp.wander_join import JoinIndex, join_sample_values
+from repro.runtime import guards
+from repro.runtime.guards import hot_path
 
 if TYPE_CHECKING:  # pragma: no cover - typing only
     from repro.core.catalog import Catalog
@@ -116,9 +118,9 @@ def aqr_estimates(
     if cfg.use_bootstrap and samples.stratified:
         # Bootstrap the per-group mean statistic; fold its spread into sigma
         # (max of CLT and bootstrap spreads -> conservative CI, Sec. 7.2).
-        uv = np.asarray(pred, dtype=np.float32)
+        uv = np.asarray(pred, dtype=np.float32)  # analyze: waive[SYNC01]: deliberate merge: bootstrap folds spreads on host copies, once per admission-time estimate
         if values is not None:
-            uv = uv * np.asarray(values, dtype=np.float32)
+            uv = uv * np.asarray(values, dtype=np.float32)  # analyze: waive[SYNC01]: deliberate merge: bootstrap folds spreads on host copies, once per admission-time estimate
         bs = bootstrap_group_means(kb, uv, samples.sample_gid, samples.n_groups, cfg.n_resamples)
         if fn in ("sum", "count"):
             scale = samples.group_sizes.astype(np.float64)
@@ -153,6 +155,7 @@ def satisfied_groups(q: "Query", est: GroupEstimates, sampled: np.ndarray) -> np
     return satisfied & sampled
 
 
+@hot_path
 def approximate_query_result(
     key: jax.Array,
     q: "Query",
@@ -207,7 +210,7 @@ def _sample_incidence(
         frag = None
         take = jnp.asarray(rows)
         for r in parts:
-            b = np.asarray(r.bucketize(fact[r.attr][take]))
+            b = np.asarray(r.bucketize(fact[r.attr][take]))  # analyze: waive[SYNC01]: deliberate merge: np.unique pair-dedup of (fragment, group) runs on host
             frag = b if frag is None else frag * r.n_ranges + b
     pairs = np.unique(np.stack([frag, gids], axis=1), axis=0)
     return pairs[:, 0], pairs[:, 1]
@@ -261,7 +264,9 @@ def _candidate_incidence(
 # Retrace telemetry: the counter bumps at *trace* time only, so tests can
 # assert that pow2 padding keeps differently-shaped candidate sets inside one
 # compiled size class (a steady workload must not retrace the selection math).
-TRACE_COUNTS: collections.Counter = collections.Counter()
+# Shared registry in ``runtime.guards`` (this module owns the
+# "incidence_pass" key); the module-level name stays for existing callers.
+TRACE_COUNTS: collections.Counter = guards.TRACE_COUNTS
 
 
 def _incidence_pass(frag, valid, p_pair, sizes):
@@ -304,6 +309,7 @@ class EstimationSpec:
     aqr: Tuple[GroupEstimates, np.ndarray]  # (estimates, satisfied mask)
 
 
+@hot_path
 def estimate_size_multi(
     db: "Database",
     specs: Sequence[EstimationSpec],

@@ -51,7 +51,7 @@ def walk(
     hi = np.searchsorted(index.sorted_keys, fact_keys, side="right")
     fanout = hi - lo
     m = fact_keys.shape[0]
-    u = np.asarray(jax.random.uniform(key, (m,), dtype=jnp.float32))
+    u = np.asarray(jax.random.uniform(key, (m,), dtype=jnp.float32))  # analyze: waive[SYNC01]: deliberate merge: join picks feed host searchsorted/index arithmetic
     pick = lo + np.minimum((u * np.maximum(fanout, 1)).astype(np.int64), np.maximum(fanout - 1, 0))
     right_rows = np.where(fanout > 0, index.order[np.minimum(pick, len(index.order) - 1)], -1)
     return right_rows, fanout

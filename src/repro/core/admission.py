@@ -71,6 +71,7 @@ from repro.core.strategies import (
     select_attribute,
     selection_cache_key,
 )
+from repro.runtime.guards import hot_path
 
 if TYPE_CHECKING:  # pragma: no cover - typing only
     from repro.core.engine import PBDSEngine, RunInfo
@@ -106,6 +107,7 @@ def plan_wave(misses: List[Miss]) -> Tuple[List[Miss], List[Miss]]:
     return wave, deferred
 
 
+@hot_path
 def admit_misses(
     engine: "PBDSEngine", misses: List[Miss]
 ) -> Tuple[Dict[int, Tuple[QueryResult, "RunInfo"]], List[Tuple[int, Query]]]:
@@ -227,7 +229,11 @@ def _select_wave(
         all_estimates = estimate_size_multi(db, specs, engine.cfg, engine.catalog)
         for spec, (ck, positions), estimates in zip(specs, spec_assign,
                                                     all_estimates):
-            ranking = tuple(sorted(estimates, key=lambda a: estimates[a].est_rows))
+            # Tuple tie-break (attr name second): must match the sequential
+            # path in strategies.select_attribute, or batched admission and
+            # replay pick different winners at equal estimates.
+            ranking = tuple(sorted(estimates,
+                                   key=lambda a: (estimates[a].est_rows, a)))
             res = SelectionResult(
                 strategy, ranking[0], tuple(spec.ranges_by_attr), estimates,
                 topk=ranking[:1])

@@ -370,7 +370,7 @@ class Catalog:
         parts = getattr(ranges, "parts", (ranges,))
         frag = None
         for r in parts:
-            b = np.asarray(r.bucketize(jnp.asarray(group_values[r.attr])))
+            b = np.asarray(r.bucketize(jnp.asarray(group_values[r.attr])))  # analyze: waive[SYNC01]: deliberate merge: fragment-of-group cache stores host arrays, computed once per (table, ranges)
             frag = b if frag is None else frag * r.n_ranges + b
         if len(self._frag_groups) >= self.max_entries:
             self._frag_groups.pop(next(iter(self._frag_groups)))
@@ -420,7 +420,7 @@ class Catalog:
             return sizes
         self.stats["fragment_sizes"] += 1
         bucket = self.bucketize(table, ranges)
-        sizes = np.asarray(
+        sizes = np.asarray(  # analyze: waive[SYNC01]: deliberate merge: fragment-size histogram is cached as a host array, once per (table, ranges)
             jax.ops.segment_sum(
                 jnp.ones_like(bucket, dtype=jnp.int32), bucket,
                 num_segments=ranges.n_ranges,

@@ -28,7 +28,6 @@ from __future__ import annotations
 
 import dataclasses
 import time
-import zlib
 from typing import Dict, List, Mapping, Optional, Sequence, Tuple
 
 import jax
@@ -50,6 +49,8 @@ from repro.core.strategies import (
 )
 from repro.core.table import Database
 from repro.core.workload import WorkloadLog
+from repro.runtime.guards import hot_path
+from repro.runtime.stable_hash import stable_hash32
 
 
 @dataclasses.dataclass
@@ -141,8 +142,16 @@ class PBDSEngine:
         the seed key instead makes sequential ``run`` and batched
         ``run_batch`` admission draw identical randomness for identical
         queries — the invariant the differential admission suite pins.
+
+        The hash must also be identical in every *process*: once shards are
+        real processes, a coordinator and replica deriving different keys
+        for the same query would draw different selection randomness.
+        ``stable_hash32`` is repr-compatible for plain-python signatures
+        (same key stream as before) but immune to ``PYTHONHASHSEED``, numpy
+        scalar reprs and set iteration order — pinned by the subprocess
+        determinism test in ``tests/test_guards.py``.
         """
-        h = zlib.crc32(repr(q.signature()).encode()) & 0x7FFFFFFF
+        h = stable_hash32(q.signature())
         return jax.random.fold_in(self._base_key, h)
 
     def ranges_for(self, table: str, attr: str) -> RangeSet:
@@ -249,6 +258,7 @@ class PBDSEngine:
         entry.maintainer = maintainer
         return result.sketch, True
 
+    @hot_path
     def _serve_hit(
         self, q: Query, entry: IndexEntry, t_probe: float
     ) -> Tuple[QueryResult, RunInfo]:
@@ -284,6 +294,7 @@ class PBDSEngine:
             gain -= self.selection.reuse_weight * self.workload.reach(q, stamp)
         return gain < self.min_selectivity_gain
 
+    @hot_path
     def run(self, q: Query) -> Tuple[QueryResult, RunInfo]:
         t0 = time.perf_counter()
         entry = self.index.lookup_entry(q) if self.strategy != "NO-PS" else None
@@ -337,6 +348,7 @@ class PBDSEngine:
             t_select=t1 - tp, t_capture=(tc - t1) + (t3 - t2), t_execute=t2 - tc,
         )
 
+    @hot_path
     def run_batch(self, qs: Sequence[Query]) -> List[Tuple[QueryResult, RunInfo]]:
         """Batched admission: serve index hits immediately, admit the misses
         through the shared-selection / fused-capture pipeline.

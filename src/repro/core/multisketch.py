@@ -159,18 +159,23 @@ def select_composite_gb(
     catalog = catalog or default_catalog()
     fact = db[q.table]
     gb = [a for a in q.groupby if fact.has(a)]
-    samples = stratified_reservoir_sample(key, fact, tuple(gb), theta)
-    aqr = approximate_query_result(key, q, db, samples)
+    # Distinct keys per random pass (the PR 7 select_attribute fix): sampling
+    # and the AQR drawing from one key correlates their randomness.
+    k_s, k_e = jax.random.split(key)
+    samples = stratified_reservoir_sample(k_s, fact, tuple(gb), theta)
+    aqr = approximate_query_result(k_e, q, db, samples)
 
     cands: List[Tuple[str, ...]] = [(a,) for a in gb]
     cands += [tuple(sorted(p)) for p in itertools.combinations(gb, 2)][:max_pair_candidates]
     ranges_by = {attrs: composite_ranges(fact, attrs, n_ranges) for attrs in cands}
 
     total = max(fact.num_rows, 1)
-    ests = estimate_size_batched(key, q, db, ranges_by, samples,
-                                 aqr=aqr, catalog=catalog)
+    ests = estimate_size_batched(jax.random.fold_in(k_e, 1), q, db, ranges_by,
+                                 samples, aqr=aqr, catalog=catalog)
     sizes: Dict[Tuple[str, ...], float] = {
         attrs: ests[attrs].est_rows / total for attrs in cands}
 
-    best = min(sizes, key=sizes.get)
+    # Tuple tie-break: equal estimates fall back to the lexically smallest
+    # candidate, not dict insertion order.
+    best = min(sizes, key=lambda attrs: (sizes[attrs], attrs))
     return best, composite_ranges(fact, best, n_ranges), sizes

@@ -26,6 +26,7 @@ import numpy as np
 
 from repro.core.catalog import Catalog, default_catalog
 from repro.core.table import PAD_VALID, ColumnTable, Database
+from repro.runtime.guards import hot_path
 
 Array = jax.Array
 
@@ -214,6 +215,7 @@ def _finalize_aggregate(fn: str, sums: Array, counts: Array) -> Array:
     raise ValueError(f"unknown aggregate {fn!r}")
 
 
+@hot_path
 def segment_aggregate(
     values: Array, gid: Array, n_groups: int, fn: str, weights: Optional[Array] = None
 ) -> Array:
@@ -369,7 +371,7 @@ def result_from_group_state(
         n_outer,
         q.outer_agg.fn if q.outer_agg else "sum",
     )
-    outer_np = np.asarray(outer_vals)
+    outer_np = np.asarray(outer_vals)  # analyze: waive[SYNC01]: deliberate merge: outer-query HAVING filters on host, once per query result
     keep = np.ones(n_outer, dtype=bool)
     if q.outer_having is not None:
         keep &= np.asarray(q.outer_having.mask(outer_np))
@@ -411,7 +413,7 @@ def provenance_group_keep(
                 [group_values[a][inner_idx] for a in q.outer_groupby], axis=1
             )
             uniq, ogid = np.unique(stacked, axis=0, return_inverse=True)
-            outer_vals = np.asarray(
+            outer_vals = np.asarray(  # analyze: waive[SYNC01]: deliberate merge: nested-aggregate outer pass filters on host, once per query result
                 segment_aggregate(
                     jnp.asarray(agg_np[inner_idx]),
                     jnp.asarray(ogid.astype(np.int32)),
@@ -450,6 +452,7 @@ result_from_inner = _result_from_inner
 provenance_from_inner = _provenance_from_inner
 
 
+@hot_path
 def execute(q: Query, db: Database, catalog: Optional[Catalog] = None) -> QueryResult:
     return _result_from_inner(q, _inner_block(db, q, catalog))
 
@@ -465,6 +468,7 @@ def provenance_mask(q: Query, db: Database, catalog: Optional[Catalog] = None) -
     return _provenance_from_inner(q, ib, db[q.table].num_rows)
 
 
+@hot_path
 def execute_and_provenance(
     q: Query, db: Database, catalog: Optional[Catalog] = None
 ) -> Tuple[QueryResult, np.ndarray]:

@@ -91,9 +91,9 @@ def capture_sketch(
     if use_kernel:
         from repro.kernels import ops as kops
 
-        bits = np.asarray(kops.fragment_bitmap(jnp.asarray(prov), bucket, ranges.n_ranges))
+        bits = np.asarray(kops.fragment_bitmap(jnp.asarray(prov), bucket, ranges.n_ranges))  # analyze: waive[SYNC01]: deliberate merge: sketch bits materialize to host once at capture (admission-time)
     else:
-        bits = np.asarray(
+        bits = np.asarray(  # analyze: waive[SYNC01]: deliberate merge: sketch bits materialize to host once at capture (admission-time)
             jax.ops.segment_max(
                 jnp.asarray(prov).astype(jnp.int32), bucket, num_segments=ranges.n_ranges
             )
@@ -147,10 +147,10 @@ def capture_sketches_batch(
         if use_kernel:
             from repro.kernels import ops as kops
 
-            bits_b = np.asarray(
+            bits_b = np.asarray(  # analyze: waive[SYNC01]: deliberate merge: batched capture materializes the whole wave's bits in one transfer
                 kops.fragment_bitmap_batch(jnp.asarray(stacked), bucket, ranges.n_ranges))
         else:
-            bits_b = np.asarray(
+            bits_b = np.asarray(  # analyze: waive[SYNC01]: deliberate merge: batched capture materializes the whole wave's bits in one transfer
                 jax.vmap(
                     lambda p: jax.ops.segment_max(
                         p.astype(jnp.int32), bucket, num_segments=ranges.n_ranges)

@@ -221,13 +221,13 @@ def select_attribute(
         return done(SelectionResult(strategy, None, cands, {}))
 
     if strategy in RANDOM_STRATEGIES:
-        i = int(jax.random.randint(key, (), 0, len(cands)))
+        i = int(jax.random.randint(key, (), 0, len(cands)))  # analyze: waive[SYNC01]: deliberate merge: RANDOM strategies draw one scalar index per selection
         return SelectionResult(strategy, cands[i], cands, {})
 
     if strategy == "OPT":
         sizes = {a: actual_size(q, db, ranges_for(a)) for a in cands}
-        best = min(sizes, key=sizes.get)
-        ranking = tuple(sorted(sizes, key=sizes.get))
+        best = min(sizes, key=lambda a: (sizes[a], a))
+        ranking = tuple(sorted(sizes, key=lambda a: (sizes[a], a)))
         return SelectionResult(strategy, best, cands, {}, topk=ranking[:topk])
 
     if cost_based and sel_cfg.skip_single_candidate and len(cands) == 1:
@@ -258,6 +258,8 @@ def select_attribute(
         jax.random.fold_in(k_e, 1), q, db, {a: ranges_for(a) for a in cands},
         samples, cfg, aqr=aqr, catalog=catalog,
     )
-    ranking = tuple(sorted(estimates, key=lambda a: estimates[a].est_rows))
+    # Tuple tie-break, mirrored by the batched path in admission.py: equal
+    # estimates resolve by attribute name, never by dict insertion order.
+    ranking = tuple(sorted(estimates, key=lambda a: (estimates[a].est_rows, a)))
     return done(SelectionResult(strategy, ranking[0], cands, estimates,
                                 topk=ranking[:topk]))

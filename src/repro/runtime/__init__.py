@@ -1,3 +1,18 @@
+from repro.runtime.guards import (
+    LAUNCH_COUNTS,
+    TRACE_COUNTS,
+    GuardViolation,
+    LaunchCountError,
+    RetraceError,
+    hot_path,
+    launch_guard,
+    retrace_guard,
+    sanitize_enabled,
+    sanitized,
+    tracer_leak_guard,
+    transfer_guard,
+)
+from repro.runtime.stable_hash import canonical_repr, stable_hash32
 from repro.runtime.chaos import (
     ChaosEvent,
     ChaosHarness,

@@ -1,0 +1,69 @@
+"""Process-stable hashing of query signatures and cache keys.
+
+``hash()`` is salted per process (``PYTHONHASHSEED``), and ``repr()`` is
+only *accidentally* stable: ``repr(np.float64(4.0))`` differs across numpy
+major versions (``4.0`` vs ``np.float64(4.0)``), set/frozenset iteration
+order follows the salted string hash, and interning can make two equal
+strings print identically while hashing differently elsewhere.  Selection
+keys (``PBDSEngine._select_key``) must be derived from query *content*
+identically in every process — once shards are real processes, a
+coordinator and a replica folding different hashes for the same query would
+draw different selection randomness and diverge.
+
+``canonical_repr`` is a deterministic serialization that equals ``repr``
+for the plain-python values signatures are built from today (str, int,
+float, bool, None, tuples) — so adopting it changed no existing key — while
+normalizing the ways repr goes unstable: numpy scalars collapse to their
+python value, sets/frozensets/dicts serialize in sorted canonical order,
+and unknown objects are rejected loudly instead of falling back to a
+default ``repr`` that embeds ``id()``.
+"""
+from __future__ import annotations
+
+import zlib
+from typing import Any
+
+
+def canonical_repr(obj: Any) -> str:
+    """Deterministic, process-stable repr for signature-shaped values.
+
+    Supported: None, bool, int, float, str, bytes, tuple/list, dict,
+    set/frozenset, and numpy scalars (normalized to their python value so
+    ``Having(">", np.float64(4.0))`` and ``Having(">", 4.0)`` hash alike).
+    Anything else raises ``TypeError`` — silently falling back to ``repr``
+    would reintroduce exactly the instability this function removes.
+    """
+    if obj is None or obj is True or obj is False:
+        return repr(obj)
+    # numpy scalars (np.float64, np.int32, ...) before the exact-type
+    # checks: bool/int/float subclasses with version-dependent reprs.
+    item = getattr(obj, "item", None)
+    if item is not None and getattr(obj, "shape", None) == ():
+        return canonical_repr(obj.item())
+    t = type(obj)
+    if t is int or t is float or t is str or t is bytes:
+        return repr(obj)
+    if t is tuple:
+        inner = ", ".join(canonical_repr(x) for x in obj)
+        return f"({inner},)" if len(obj) == 1 else f"({inner})"
+    if t is list:
+        return "[" + ", ".join(canonical_repr(x) for x in obj) + "]"
+    if t is dict:
+        items = sorted((canonical_repr(k), canonical_repr(v)) for k, v in obj.items())
+        return "{" + ", ".join(f"{k}: {v}" for k, v in items) + "}"
+    if t is set or t is frozenset:
+        tag = "set" if t is set else "frozenset"
+        return tag + "{" + ", ".join(sorted(canonical_repr(x) for x in obj)) + "}"
+    raise TypeError(
+        f"canonical_repr: unsupported type {t.__name__!r} — extend the "
+        f"canonical encoding rather than falling back to repr()")
+
+
+def stable_hash32(obj: Any) -> int:
+    """31-bit non-negative content hash, identical in every process.
+
+    crc32 over :func:`canonical_repr` — matches the former
+    ``zlib.crc32(repr(...))`` bit-for-bit on plain-python signatures, so
+    switching the engine's ``_select_key`` over was behavior-preserving.
+    """
+    return zlib.crc32(canonical_repr(obj).encode()) & 0x7FFFFFFF

@@ -1,0 +1,18 @@
+"""CACHE01 positive fixture: incomplete lineage keys and threshold leaks."""
+import dataclasses
+
+
+def result_cache_key(q, table):
+    # Misses version: serves stale state after append/delete mutations.
+    return (q.table, table.uid, q.groupby)
+
+
+def aqr_cache_key(q, table, theta):
+    # Leaks the HAVING threshold: same-template queries stop sharing the
+    # pass the cache exists to share.  (Also misses uid/version.)
+    return (q.table, q.having.value, theta)
+
+
+def probe_cache_key(q, table):
+    # astuple embeds the threshold value wholesale.
+    return (table.uid, table.version, dataclasses.astuple(q.having))

@@ -1,0 +1,12 @@
+"""CACHE01 negative fixture: complete lineage keys, ops-only HAVING."""
+
+
+def selection_cache_key(strategy, q, table, theta, n_ranges):
+    ops = (q.having.op if q.having else None,
+           q.outer_having.op if q.outer_having else None)
+    return (strategy, table.uid, table.version, theta, n_ranges, ops)
+
+
+def not_a_key_builder(q):
+    # Reading having.value outside a key builder is fine (e.g. executors).
+    return q.having.value

@@ -1,0 +1,16 @@
+"""CMP01 positive fixture: the PR 3 subsumes bug (threshold comparison
+blind to operator strictness) and order-dependent selections."""
+
+
+def subsumes_reconstruction(a, b):
+    # PR 3: `agg > tau` vs `agg >= tau` treated as interchangeable at equal
+    # thresholds — the boundary groups' provenance was never captured.
+    if a.table != b.table:
+        return False
+    return a.having.value <= b.having.value
+
+
+def pick_entry(entries, sizes):
+    best = min(entries, key=sizes.get)  # ties -> insertion order
+    ranking = sorted(entries, key=sizes.get)
+    return best, ranking

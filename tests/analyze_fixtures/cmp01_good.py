@@ -1,0 +1,20 @@
+"""CMP01 negative fixture: strictness-aware subsumption (the PR 3 fix
+shape) and tuple tie-breaks."""
+
+
+def subsumes_fixed(a, b):
+    if a.table != b.table:
+        return False
+    if a.having.op == b.having.op:
+        return a.having.value <= b.having.value
+    # Mixed strictness: '>' at tau covers '>=' at tau only when strictly
+    # dominated (boundary groups differ at equality).
+    if a.having.op == ">=" and b.having.op == ">":
+        return a.having.value <= b.having.value
+    return a.having.value < b.having.value
+
+
+def pick_entry(entries, sizes):
+    best = min(entries, key=lambda e: (sizes[e], e))
+    ranking = sorted(entries, key=lambda e: (sizes[e], e))
+    return best, ranking

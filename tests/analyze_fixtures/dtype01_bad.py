@@ -1,0 +1,17 @@
+"""DTYPE01 positive fixture: 64-bit dtypes under x64-disabled jax,
+including the PR 1 ones_like-on-host-array class."""
+import jax.numpy as jnp
+import numpy as np
+
+
+def weights_like(counts):
+    # The PR 1 bug: host numpy defaults to int64 on linux, ones_like copies
+    # it, x64-disabled jax silently truncates to int32.
+    return jnp.ones_like(np.bincount(counts))
+
+
+def explicit_wide(n):
+    a = jnp.zeros(n, dtype=np.int64)
+    b = jnp.full(n, 1.0, dtype="float64")
+    c = jnp.asarray(np.arange(n)).astype(jnp.int64)
+    return a, b, c

@@ -1,0 +1,15 @@
+"""DTYPE01 negative fixture: explicit 32-bit dtypes, host-side 64-bit
+numpy (fine — numpy is not under the x64 flag)."""
+import jax.numpy as jnp
+import numpy as np
+
+
+def weights_like(counts):
+    return jnp.ones_like(np.bincount(counts), dtype=jnp.float32)
+
+
+def explicit_narrow(n, arr):
+    a = jnp.zeros(n, dtype=jnp.int32)
+    b = jnp.asarray(arr, dtype=jnp.float32)
+    host = np.zeros(n, dtype=np.int64)  # host numpy: 64-bit is fine
+    return a, b, host

@@ -1,0 +1,23 @@
+"""KEY01 positive fixture: minimized reconstruction of the PR 7
+``select_attribute`` bug — one key drawn on by the AQR pass and the
+estimate pass, correlating their randomness."""
+import jax
+
+
+def select_attribute_reconstruction(key, q, db, samples):
+    # Both passes consume the SAME key: correlated draws ranked candidates
+    # off correlated noise until the fold_in fix.
+    aqr = approximate_query_result(key, q, db, samples)
+    estimates = estimate_size_batched(key, q, db, samples, aqr=aqr)
+    return aqr, estimates
+
+
+def loop_reuse(key, items):
+    out = []
+    for item in items:
+        out.append(jax.random.uniform(key, (4,)))  # same draw every iteration
+    return out
+
+
+def comprehension_reuse(key, items):
+    return [jax.random.normal(key, (2,)) for _ in items]

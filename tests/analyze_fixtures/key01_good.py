@@ -1,0 +1,40 @@
+"""KEY01 negative fixture: the fixed shapes — split/fold_in per pass,
+per-iteration derivation, guard-clause early returns, non-PRNG 'key'
+parameters."""
+import jax
+
+
+def select_attribute_fixed(key, q, db, samples):
+    k_s, k_e = jax.random.split(key)
+    aqr = approximate_query_result(k_s, q, db, samples)
+    estimates = estimate_size_batched(jax.random.fold_in(k_e, 1), q, db,
+                                      samples, aqr=aqr)
+    return aqr, estimates
+
+
+def loop_fixed(key, items):
+    out = []
+    for i, item in enumerate(items):
+        k_i = jax.random.fold_in(key, i)
+        out.append(jax.random.uniform(k_i, (4,)))
+    return out
+
+
+def split_iteration(key, items):
+    out = []
+    for k in jax.random.split(key, len(items)):
+        out.append(jax.random.uniform(k, (4,)))
+    return out
+
+
+def guard_clause(key, stratified, table):
+    if not stratified:
+        return uniform_sample(key, table)  # early return: exclusive branch
+    return reservoir_sample(key, table)
+
+
+def registration_id(key: int, entries):
+    # 'key' here is an integer registration id, not a PRNG key.
+    first = entries.get(key)
+    second = entries.pop(key)
+    return first, second

@@ -1,0 +1,13 @@
+"""PAD01 positive fixture: hot-path constructors sized by raw data —
+every distinct size compiles a fresh XLA program (the retrace-bomb class
+the pow2 helpers exist to prevent)."""
+import jax.numpy as jnp
+
+from repro.runtime.guards import hot_path
+
+
+@hot_path
+def serve(rows, n_groups):
+    acc = jnp.zeros(len(rows))  # raw row count: one size class per len
+    mask = jnp.ones(n_groups + 1)  # raw parameter arithmetic
+    return acc, mask

@@ -1,0 +1,27 @@
+"""PAD01 negative fixture: literal shapes, pow2-routed sizes, inherited
+shapes, host-side numpy, and non-hot functions are all fine."""
+import jax.numpy as jnp
+import numpy as np
+
+from repro.runtime.guards import hot_path
+
+
+def _next_pow2(n):
+    return 1 << max(0, (n - 1)).bit_length()
+
+
+@hot_path
+def serve(rows, n_groups, arr, table):
+    literal = jnp.zeros(64)
+    padded = jnp.zeros(_next_pow2(len(rows)))
+    n_pad = _next_pow2(n_groups)
+    via_local = jnp.ones(n_pad)
+    inherited = jnp.zeros(arr.shape[0])
+    row_count = jnp.ones(table.num_rows)  # table row count: existing class
+    host = np.zeros(len(rows))  # host numpy compiles nothing
+    return literal, padded, via_local, inherited, row_count, host
+
+
+def cold(rows):
+    # Not in the hot closure: data-dependent sizes are fine off-path.
+    return jnp.zeros(len(rows))

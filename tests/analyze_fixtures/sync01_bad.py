@@ -1,0 +1,27 @@
+"""SYNC01 positive fixture: host-device syncs inside hot-path functions —
+.item(), float()/int() and np.asarray() on device values."""
+import jax.numpy as jnp
+import numpy as np
+
+from repro.runtime.guards import hot_path
+
+
+@hot_path
+def serve(table, threshold):
+    total = jnp.sum(table)
+    if total.item() > threshold:  # sync in the hot path
+        return None
+    scale = float(jnp.max(table))  # sync
+    host = np.asarray(jnp.cumsum(table))  # transfer
+    return scale, host
+
+
+def helper_called_from_hot(vals):
+    # In the closure via ``serve_helper`` below even without the decorator.
+    s = jnp.dot(vals, vals)
+    return int(s)
+
+
+@hot_path
+def serve_helper(vals):
+    return helper_called_from_hot(vals)

@@ -1,0 +1,20 @@
+"""SYNC01 negative fixture: shape metadata, host copies, and syncs in
+cold functions are all fine."""
+import jax.numpy as jnp
+import numpy as np
+
+from repro.runtime.guards import hot_path
+
+
+@hot_path
+def serve(table, values):
+    n = int(values.shape[0])  # static metadata, not a sync
+    dev = jnp.cumsum(table)
+    host = np.asarray(dev)  # analyze: waive[SYNC01]: deliberate merge point for the fixture
+    scalar = float(host[0])  # host copy: free
+    return n, scalar
+
+
+def cold_merge(table):
+    # Not hot: materializing results here is nobody's business.
+    return np.asarray(jnp.sum(table))

@@ -29,26 +29,17 @@ from repro.core import (
 from repro.core.datasets import make_crimes, make_tpch
 from repro.core.engine import PBDSEngine
 from repro.core.strategies import SelectionConfig
+from repro.runtime.guards import retrace_guard
 
 N_ROWS = 30_000
 
 
 @contextlib.contextmanager
 def count_xla_compiles():
-    """Count real backend compilations (cached executions emit no event)."""
-    from jax._src import monitoring
-
-    events = []
-
-    def listener(name, duration_secs, **kw):
-        if name == "/jax/core/compile/backend_compile_duration":
-            events.append(name)
-
-    monitoring.register_event_duration_secs_listener(listener)
-    try:
-        yield events
-    finally:
-        monitoring._unregister_event_duration_listener_by_callback(listener)
+    """Count real backend compilations via the shared retrace guard
+    (cached executions emit no event)."""
+    with retrace_guard(allowed=None) as watch:
+        yield watch.events
 
 
 @pytest.fixture(scope="module")

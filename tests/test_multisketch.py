@@ -154,8 +154,11 @@ def test_cb_opt_gb2_sizes_match_exact_membership(db, q):
     key = jax.random.PRNGKey(0)
     fact = db["crimes"]
     gb = ("district", "year")
-    samples = stratified_reservoir_sample(key, fact, gb, 0.1)
-    _, satisfied = approximate_query_result(key, q, db, samples)
+    # Mirror select_composite_gb's internal key discipline: one key per
+    # random pass (sampling vs. AQR), split from the caller's key.
+    k_s, k_e = jax.random.split(key)
+    samples = stratified_reservoir_sample(k_s, fact, gb, 0.1)
+    _, satisfied = approximate_query_result(k_e, q, db, samples)
     best, cr_best, sizes = select_composite_gb(key, q, db, 100, theta=0.1)
     total = fact.num_rows
     for attrs in [("district",), ("year",), ("district", "year")]:

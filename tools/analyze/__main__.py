@@ -1,0 +1,7 @@
+"""``python -m tools.analyze src/ [--strict]`` — see tools/analyze/__init__.py."""
+import sys
+
+from tools.analyze.driver import main
+
+if __name__ == "__main__":
+    sys.exit(main())

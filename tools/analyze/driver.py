@@ -1,0 +1,318 @@
+"""Analyzer driver: file walking, call-graph construction, waivers, report.
+
+Two passes over the analyzed fileset:
+
+1. parse every file, index its functions (qualname, decorators, simple-name
+   call edges) and compute the hot-path closure — every function reachable
+   from a ``@hot_path``-decorated root by following call edges, matched by
+   simple name across the fileset (coarse by design: over-approximation
+   costs a waiver, under-approximation misses a bug);
+2. run each rule module over each file with the shared context.
+
+Waivers are in-source comments (``# analyze: waive[RULE]: reason``) on the
+offending line or the line directly above; ``--strict`` additionally fails
+on *stale* waivers so justifications cannot outlive the code they excuse.
+"""
+from __future__ import annotations
+
+import argparse
+import ast
+import dataclasses
+import re
+import sys
+from pathlib import Path
+from typing import Dict, Iterable, List, Optional, Sequence, Set, Tuple
+
+WAIVER_RE = re.compile(
+    r"#\s*analyze:\s*waive\[([A-Za-z0-9_,\s]+)\]\s*:\s*(\S.*)")
+BARE_WAIVER_RE = re.compile(r"#\s*analyze:\s*waive\[([A-Za-z0-9_,\s]+)\]\s*(?::\s*)?$")
+
+
+@dataclasses.dataclass
+class Finding:
+    rule: str
+    path: str
+    line: int
+    message: str
+    waived: bool = False
+    waive_reason: str = ""
+
+    def format(self) -> str:
+        tag = f" (waived: {self.waive_reason})" if self.waived else ""
+        return f"{self.path}:{self.line}: {self.rule}: {self.message}{tag}"
+
+
+@dataclasses.dataclass
+class Waiver:
+    path: str
+    line: int
+    rules: Tuple[str, ...]
+    reason: str
+    used: bool = False
+
+
+@dataclasses.dataclass
+class FunctionInfo:
+    """One function/method definition, as the rules see it."""
+
+    qualname: str
+    node: ast.AST  # FunctionDef | AsyncFunctionDef
+    decorators: Tuple[str, ...]  # dotted decorator names
+    calls: Set[str] = dataclasses.field(default_factory=set)  # simple names
+    nested: bool = False  # defined inside another function (not importable)
+
+    @property
+    def name(self) -> str:
+        return self.qualname.rsplit(".", 1)[-1]
+
+    @property
+    def is_hot_root(self) -> bool:
+        return any(d == "hot_path" or d.endswith(".hot_path")
+                   for d in self.decorators)
+
+
+@dataclasses.dataclass
+class ModuleInfo:
+    path: str
+    source: str
+    tree: ast.Module
+    functions: List[FunctionInfo]
+
+    @property
+    def lines(self) -> List[str]:
+        return self.source.splitlines()
+
+
+class Context:
+    """Shared analysis state: all modules + the hot-path closure."""
+
+    def __init__(self, modules: Sequence[ModuleInfo]):
+        self.modules = list(modules)
+        self.hot: Set[Tuple[str, str]] = set()  # (path, qualname)
+        self._compute_hot_closure()
+
+    def is_hot(self, module: ModuleInfo, fn: FunctionInfo) -> bool:
+        return (module.path, fn.qualname) in self.hot
+
+    def _compute_hot_closure(self) -> None:
+        by_name: Dict[str, List[Tuple[str, FunctionInfo]]] = {}
+        by_module: Dict[Tuple[str, str], List[Tuple[str, FunctionInfo]]] = {}
+        for m in self.modules:
+            for fn in m.functions:
+                # Nested defs are only callable from their enclosing scope, so
+                # they are never valid *cross-module* call targets.
+                if not fn.nested:
+                    by_name.setdefault(fn.name, []).append((m.path, fn))
+                by_module.setdefault((m.path, fn.name), []).append((m.path, fn))
+        work: List[Tuple[str, FunctionInfo]] = [
+            (m.path, fn) for m in self.modules for fn in m.functions
+            if fn.is_hot_root]
+        seen: Set[Tuple[str, str]] = set()
+        while work:
+            path, fn = work.pop()
+            key = (path, fn.qualname)
+            if key in seen:
+                continue
+            seen.add(key)
+            for callee in fn.calls:
+                # Same-module definitions shadow same-named functions
+                # elsewhere (nested helpers, methods like ``__init__``):
+                # only fall back to the global by-name match when the
+                # caller's module has no definition of that name.
+                targets = by_module.get((path, callee)) or by_name.get(callee, ())
+                for tgt in targets:
+                    work.append(tgt)
+        self.hot = seen
+
+
+# Call-graph edges through these roots would alias external functions onto
+# same-named repo defs (``np.stack`` is not ``models.params.stack``).
+EXTERNAL_ROOTS = {
+    "np", "numpy", "jnp", "jax", "lax", "ast", "os", "sys", "math", "time",
+    "re", "json", "zlib", "dataclasses", "collections", "functools",
+    "itertools", "contextlib", "logging", "pathlib", "typing", "pytest",
+}
+
+
+def _external_call(dotted: str) -> bool:
+    return "." in dotted and dotted.split(".", 1)[0] in EXTERNAL_ROOTS
+
+
+def dotted_name(node: ast.AST) -> Optional[str]:
+    """``jax.random.uniform`` for an Attribute/Name chain, else None."""
+    parts: List[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+def call_name(call: ast.Call) -> Optional[str]:
+    return dotted_name(call.func)
+
+
+class _FunctionIndexer(ast.NodeVisitor):
+    def __init__(self) -> None:
+        self.stack: List[str] = []
+        self.kinds: List[str] = []  # "class" | "function", parallel to stack
+        self.functions: List[FunctionInfo] = []
+
+    def _visit_def(self, node) -> None:
+        qual = ".".join(self.stack + [node.name])
+        decos = tuple(
+            d for d in (dotted_name(dec.func if isinstance(dec, ast.Call) else dec)
+                        for dec in node.decorator_list)
+            if d is not None)
+        calls: Set[str] = set()
+        for sub in ast.walk(node):
+            if isinstance(sub, ast.Call):
+                name = call_name(sub)
+                if name is not None and not _external_call(name):
+                    calls.add(name.rsplit(".", 1)[-1])
+        nested = "function" in self.kinds
+        self.functions.append(FunctionInfo(qual, node, decos, calls, nested=nested))
+        self.stack.append(node.name)
+        self.kinds.append("function")
+        self.generic_visit(node)
+        self.kinds.pop()
+        self.stack.pop()
+
+    def visit_FunctionDef(self, node: ast.FunctionDef) -> None:
+        self._visit_def(node)
+
+    def visit_AsyncFunctionDef(self, node: ast.AsyncFunctionDef) -> None:
+        self._visit_def(node)
+
+    def visit_ClassDef(self, node: ast.ClassDef) -> None:
+        self.stack.append(node.name)
+        self.kinds.append("class")
+        self.generic_visit(node)
+        self.kinds.pop()
+        self.stack.pop()
+
+
+def parse_module(path: str, source: Optional[str] = None) -> ModuleInfo:
+    src = Path(path).read_text() if source is None else source
+    tree = ast.parse(src, filename=path)
+    idx = _FunctionIndexer()
+    idx.visit(tree)
+    return ModuleInfo(path=path, source=src, tree=tree, functions=idx.functions)
+
+
+def collect_waivers(module: ModuleInfo) -> List[Waiver]:
+    out: List[Waiver] = []
+    for i, line in enumerate(module.lines, start=1):
+        m = WAIVER_RE.search(line)
+        reason = None
+        if m:
+            reason = m.group(2).strip()
+        else:
+            m = BARE_WAIVER_RE.search(line)
+            if m:
+                reason = ""  # missing reason: waiver counts as unexplained
+        if m:
+            rules = tuple(r.strip().upper() for r in m.group(1).split(",") if r.strip())
+            out.append(Waiver(module.path, i, rules, reason or ""))
+    return out
+
+
+def _rule_modules():
+    from tools.analyze.rules import ALL_RULES
+
+    return ALL_RULES
+
+
+def analyze_modules(modules: Sequence[ModuleInfo]) -> Tuple[List[Finding], List[Waiver]]:
+    ctx = Context(modules)
+    findings: List[Finding] = []
+    waivers: List[Waiver] = []
+    for m in modules:
+        mod_waivers = collect_waivers(m)
+        mod_findings: List[Finding] = []
+        for rule in _rule_modules():
+            mod_findings.extend(rule.check(m, ctx))
+        # Nested defs are visited standalone AND inside their enclosing
+        # function's walk; keep one finding per (rule, line).
+        dedup: Dict[Tuple[str, int], Finding] = {}
+        for f in mod_findings:
+            dedup.setdefault((f.rule, f.line), f)
+        mod_findings = list(dedup.values())
+        # A waiver on the finding's line or the line above covers it; a
+        # waiver with an empty reason never explains anything.  Same-line
+        # waivers match first so consecutive flagged lines don't cascade
+        # onto each other's comments.
+        for f in mod_findings:
+            for offset in (0, 1):
+                w = next((w for w in mod_waivers
+                          if f.rule in w.rules and w.line == f.line - offset
+                          and w.reason), None)
+                if w is not None:
+                    f.waived, f.waive_reason = True, w.reason
+                    w.used = True
+                    break
+        findings.extend(mod_findings)
+        waivers.extend(mod_waivers)
+    findings.sort(key=lambda f: (f.path, f.line, f.rule))
+    return findings, waivers
+
+
+def analyze_source(source: str, path: str = "<memory>") -> List[Finding]:
+    """Analyze one in-memory module (the fixture-test entry point)."""
+    return analyze_modules([parse_module(path, source)])[0]
+
+
+def iter_py_files(paths: Iterable[str]) -> List[str]:
+    out: List[str] = []
+    for p in paths:
+        path = Path(p)
+        if path.is_dir():
+            out.extend(str(f) for f in sorted(path.rglob("*.py")))
+        elif path.suffix == ".py":
+            out.append(str(path))
+    return out
+
+
+def analyze_paths(paths: Sequence[str]) -> Tuple[List[Finding], List[Waiver]]:
+    return analyze_modules([parse_module(f) for f in iter_py_files(paths)])
+
+
+def main(argv: Optional[Sequence[str]] = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m tools.analyze",
+        description="Hot-path invariant linter (see tools/analyze/__init__.py).")
+    ap.add_argument("paths", nargs="+", help="files or directories to analyze")
+    ap.add_argument("--strict", action="store_true",
+                    help="also fail on stale or reasonless waivers")
+    ap.add_argument("--quiet", action="store_true",
+                    help="suppress waived findings in the report")
+    args = ap.parse_args(argv)
+
+    findings, waivers = analyze_paths(args.paths)
+    unwaived = [f for f in findings if not f.waived]
+    stale = [w for w in waivers if not w.used]
+    reasonless = [w for w in waivers if not w.reason]
+
+    for f in findings:
+        if f.waived and args.quiet:
+            continue
+        print(f.format())
+    if args.strict:
+        for w in stale:
+            print(f"{w.path}:{w.line}: STALE-WAIVER: waive[{','.join(w.rules)}] "
+                  f"matches no finding")
+        for w in reasonless:
+            print(f"{w.path}:{w.line}: WAIVER-NO-REASON: waive[{','.join(w.rules)}] "
+                  f"has no justification")
+
+    n_waived = sum(1 for f in findings if f.waived)
+    print(f"analyze: {len(findings)} finding(s) "
+          f"({n_waived} waived, {len(unwaived)} unexplained), "
+          f"{len(stale)} stale waiver(s)")
+    if unwaived:
+        return 1
+    if args.strict and (stale or reasonless):
+        return 1
+    return 0

@@ -1,0 +1,7 @@
+"""Rule registry: each rule module exposes ``RULE`` (its id) and
+``check(module: ModuleInfo, ctx: Context) -> List[Finding]``."""
+from tools.analyze.rules import cache01, cmp01, dtype01, key01, pad01, sync01
+
+ALL_RULES = (key01, pad01, sync01, cache01, dtype01, cmp01)
+
+__all__ = ["ALL_RULES"]

@@ -1,0 +1,100 @@
+"""CACHE01 — cache-key completeness.
+
+Every cross-query cache in this repo keys on table lineage: a bare object
+id or name-based key serves stale state after ``append``/``delete`` mints a
+new version, and an id-based key resurrects on id reuse.  Conversely,
+*threshold values* must stay OUT of signature-derived keys — the AQR and
+selection caches exist precisely because queries differing only in HAVING
+thresholds share one pass; leaking ``having.value`` into the key silently
+disables the sharing (and leaking it into an index predicate key would
+split entries that must compare).
+
+The rule checks every declared key-builder (functions whose name contains
+``cache_key``, plus the explicitly registered schemas below) against its
+schema:
+
+* ``require``: attribute reads that MUST appear (default: ``uid`` AND
+  ``version`` — one without the other is the classic incomplete key);
+* threshold exclusion: no ``<having>.value`` reads and no
+  ``astuple(x.having)`` / ``astuple(x.outer_having)`` (astuple embeds the
+  threshold value wholesale).
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, List, Optional, Tuple
+
+from tools.analyze.driver import Context, Finding, ModuleInfo, call_name, dotted_name
+
+RULE = "CACHE01"
+
+# Declared schemas: function name -> required attribute reads.  Any other
+# function whose name contains "cache_key" gets the default schema.
+SCHEMAS: Dict[str, Tuple[str, ...]] = {
+    "aqr_cache_key": ("uid", "version"),
+    "selection_cache_key": ("uid", "version"),
+}
+DEFAULT_REQUIRE: Tuple[str, ...] = ("uid", "version")
+
+HAVING_NAMES = ("having", "outer_having")
+
+
+def _attr_reads(fn_node: ast.AST) -> set:
+    return {sub.attr for sub in ast.walk(fn_node) if isinstance(sub, ast.Attribute)}
+
+
+def _having_value_read(fn_node: ast.AST) -> Optional[int]:
+    """Line of a ``<...>.having.value`` / ``<...>.outer_having.value`` read."""
+    for sub in ast.walk(fn_node):
+        if isinstance(sub, ast.Attribute) and sub.attr == "value":
+            base = sub.value
+            if isinstance(base, ast.Attribute) and base.attr in HAVING_NAMES:
+                return sub.lineno
+            if isinstance(base, ast.Name) and base.id in HAVING_NAMES:
+                return sub.lineno
+    return None
+
+
+def _having_astuple(fn_node: ast.AST) -> Optional[int]:
+    for sub in ast.walk(fn_node):
+        if isinstance(sub, ast.Call):
+            name = call_name(sub)
+            if name is None or name.rsplit(".", 1)[-1] != "astuple":
+                continue
+            for arg in sub.args:
+                dn = dotted_name(arg)
+                if dn is not None and dn.rsplit(".", 1)[-1] in HAVING_NAMES:
+                    return sub.lineno
+                # astuple(x.having) guarded by a conditional still embeds
+                # the value; the IfExp form `astuple(h) if h else None` with
+                # h bound to a having is beyond one-level resolution.
+    return None
+
+
+def check(module: ModuleInfo, ctx: Context) -> List[Finding]:
+    out: List[Finding] = []
+    for fn in module.functions:
+        name = fn.name
+        if name in SCHEMAS:
+            require = SCHEMAS[name]
+        elif "cache_key" in name:
+            require = DEFAULT_REQUIRE
+        else:
+            continue
+        reads = _attr_reads(fn.node)
+        missing = [a for a in require if a not in reads]
+        if missing:
+            out.append(Finding(
+                RULE, module.path, fn.node.lineno,
+                f"cache key builder {name!r} omits {'/'.join(missing)} — a "
+                f"table-keyed cache must key on uid AND version or it serves "
+                f"stale state after mutations"))
+        line = _having_value_read(fn.node) or _having_astuple(fn.node)
+        if line is not None:
+            out.append(Finding(
+                RULE, module.path, line,
+                f"cache key builder {name!r} embeds a HAVING threshold "
+                f"value — signature-derived keys must be "
+                f"threshold-independent (ops only) so same-template queries "
+                f"share one pass"))
+    return out

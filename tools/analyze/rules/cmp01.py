@@ -1,0 +1,121 @@
+"""CMP01 — comparator/tie-break totality on index-lookup paths.
+
+Two bug classes, both shipped and fixed by hand before this pass existed:
+
+* **Order-dependent selection** (PR 7, ``SketchIndex.lookup_entry``): a
+  ``max``/``min``/``sorted`` over index entries or candidates whose key
+  does not totally order them lets insertion order break ties — batched
+  admission inserts a wave's sketches in a different order than sequential
+  replay, so probes served *different* entries and bookkeeping diverged.
+  The fix is an explicit deterministic tie-break tuple; this rule demands
+  one syntactically: selections over entry/candidate collections must pass
+  a ``key=`` whose lambda returns a tuple.
+
+* **Subsumption strictness** (PR 3, ``subsumes``): comparing HAVING
+  thresholds with ``<=``/``>=`` while ignoring operator strictness treated
+  ``agg > tau`` and ``agg >= tau`` as interchangeable at equal thresholds —
+  silent wrong results on reuse (the boundary groups' provenance was never
+  captured).  Any function named like a subsumption/domination test that
+  compares ``.value`` attributes but never reads ``.op`` repeats that bug.
+"""
+from __future__ import annotations
+
+import ast
+from typing import List, Optional
+
+from tools.analyze.driver import Context, Finding, ModuleInfo, call_name
+
+RULE = "CMP01"
+
+ORDERED_COLLECTION_HINTS = ("entries", "entry", "cand", "candidates", "sizes",
+                            "estimates", "ranking")
+SUBSUME_HINTS = ("subsum", "dominat")
+
+
+def _mentions_hint(expr: ast.AST) -> bool:
+    for sub in ast.walk(expr):
+        name = None
+        if isinstance(sub, ast.Name):
+            name = sub.id
+        elif isinstance(sub, ast.Attribute):
+            name = sub.attr
+        if name is not None and any(h in name.lower()
+                                    for h in ORDERED_COLLECTION_HINTS):
+            return True
+    return False
+
+
+def _key_is_total(kw: Optional[ast.keyword]) -> bool:
+    """A key that syntactically ends in a tuple is an explicit tie-break."""
+    if kw is None:
+        return False
+    v = kw.value
+    if isinstance(v, ast.Lambda):
+        body = v.body
+        return isinstance(body, (ast.Tuple, ast.List))
+    return False  # sizes.get etc.: cannot prove totality
+
+
+def _check_selections(module: ModuleInfo, fn_node: ast.AST, out: List[Finding]) -> None:
+    for sub in ast.walk(fn_node):
+        if not isinstance(sub, ast.Call):
+            continue
+        name = call_name(sub)
+        if name is None:
+            continue
+        last = name.rsplit(".", 1)[-1]
+        if last not in ("max", "min", "sorted", "sort"):
+            continue
+        iterable: Optional[ast.AST]
+        if last == "sort" and isinstance(sub.func, ast.Attribute):
+            iterable = sub.func.value
+        elif sub.args:
+            iterable = sub.args[0]
+        else:
+            continue
+        if last in ("max", "min") and len(sub.args) > 1:
+            continue  # max(a, b) over scalars, not a collection pick
+        if not _mentions_hint(iterable):
+            continue
+        kw = next((k for k in sub.keywords if k.arg == "key"), None)
+        if not _key_is_total(kw):
+            out.append(Finding(
+                RULE, module.path, sub.lineno,
+                f"{last}() over an entry/candidate collection without an "
+                f"explicit tuple tie-break key — equal primary keys fall "
+                f"back to iteration/insertion order, which batched and "
+                f"sequential execution do not share"))
+
+
+def _check_subsumption(module: ModuleInfo, fn, out: List[Finding]) -> None:
+    if not any(h in fn.name.lower() for h in SUBSUME_HINTS):
+        return
+    reads_op = any(isinstance(s, ast.Attribute) and s.attr == "op"
+                   for s in ast.walk(fn.node))
+    if reads_op:
+        return
+    for sub in ast.walk(fn.node):
+        if not isinstance(sub, ast.Compare):
+            continue
+        exprs = [sub.left] + list(sub.comparators)
+        value_reads = sum(
+            1 for e in exprs for a in ast.walk(e)
+            if isinstance(a, ast.Attribute) and a.attr in ("value", "threshold"))
+        if value_reads >= 1 and any(
+                isinstance(op, (ast.LtE, ast.GtE, ast.Lt, ast.Gt))
+                for op in sub.ops):
+            out.append(Finding(
+                RULE, module.path, sub.lineno,
+                f"{fn.name}() compares thresholds without consulting "
+                f"operator strictness (.op) — '>' and '>=' captured sketches "
+                f"differ at the boundary, so threshold dominance alone is "
+                f"not containment (the PR 3 subsumes bug)"))
+            return
+
+
+def check(module: ModuleInfo, ctx: Context) -> List[Finding]:
+    out: List[Finding] = []
+    for fn in module.functions:
+        _check_selections(module, fn.node, out)
+        _check_subsumption(module, fn, out)
+    return out

@@ -1,0 +1,86 @@
+"""DTYPE01 — 64-bit dtypes under x64-disabled jax.
+
+This repo runs jax with the default ``jax_enable_x64=False``: any int64 /
+float64 reaching a jax constructor is silently truncated to 32 bits.  The
+historical exemplar (fixed in PR 1): ``jnp.ones_like`` on a host numpy
+array — numpy's default integer is int64 on linux, ``ones_like`` copies the
+dtype, and jax then truncates it with only a one-time warning, so weight
+vectors quietly became int32 while the surrounding math assumed wider.
+
+Flags:
+
+* ``jnp.int64`` / ``jnp.float64`` / ``jnp.uint64`` attribute reads, and
+  64-bit dtype string/attribute arguments (``dtype=np.int64``,
+  ``dtype="float64"``) in jnp/jax-rooted calls — the dtype cannot survive;
+* ``jnp.{ones,zeros,full}_like`` / ``jnp.asarray`` applied directly to an
+  ``np.``-rooted expression — the host array's platform-dependent 64-bit
+  dtype is inherited and then truncated; convert explicitly instead.
+"""
+from __future__ import annotations
+
+import ast
+from typing import List
+
+from tools.analyze.driver import Context, Finding, ModuleInfo, call_name, dotted_name
+
+RULE = "DTYPE01"
+
+WIDE = {"int64", "float64", "uint64"}
+LIKE = {"ones_like", "zeros_like", "full_like", "asarray"}
+
+
+def _np_rooted(expr: ast.AST) -> bool:
+    if isinstance(expr, ast.Call):
+        name = call_name(expr)
+    else:
+        name = dotted_name(expr)
+    return name is not None and name.split(".", 1)[0] in ("np", "numpy")
+
+
+def check(module: ModuleInfo, ctx: Context) -> List[Finding]:
+    out: List[Finding] = []
+    # jnp.int64 and friends, anywhere: under x64-disabled these are traps.
+    for sub in ast.walk(module.tree):
+        if isinstance(sub, ast.Attribute) and sub.attr in WIDE:
+            root = dotted_name(sub)
+            if root is not None and root.split(".", 1)[0] == "jnp":
+                out.append(Finding(
+                    RULE, module.path, sub.lineno,
+                    f"{root}: 64-bit jax dtype under x64-disabled — "
+                    f"silently truncated to 32 bits"))
+    for sub in ast.walk(module.tree):
+        if not isinstance(sub, ast.Call):
+            continue
+        name = call_name(sub)
+        if name is None:
+            continue
+        parts = name.split(".")
+        jax_rooted = parts[0] in ("jnp", "jax")
+        # dtype=np.int64 / dtype="float64" flowing into a jax call.
+        if jax_rooted:
+            for kw in sub.keywords:
+                if kw.arg != "dtype":
+                    continue
+                dn = dotted_name(kw.value)
+                if dn is not None and dn.rsplit(".", 1)[-1] in WIDE \
+                        and not dn.startswith("jnp."):
+                    out.append(Finding(
+                        RULE, module.path, kw.value.lineno,
+                        f"{name}(dtype={dn}): 64-bit dtype under "
+                        f"x64-disabled jax — silently truncated"))
+                if isinstance(kw.value, ast.Constant) and kw.value.value in WIDE:
+                    out.append(Finding(
+                        RULE, module.path, kw.value.lineno,
+                        f"{name}(dtype={kw.value.value!r}): 64-bit dtype "
+                        f"under x64-disabled jax — silently truncated"))
+        # jnp.ones_like(np.<...>): dtype inherited from a host array.
+        if jax_rooted and parts[-1] in LIKE and sub.args \
+                and _np_rooted(sub.args[0]) \
+                and not any(kw.arg == "dtype" for kw in sub.keywords):
+            out.append(Finding(
+                RULE, module.path, sub.lineno,
+                f"{name}() on a host numpy value inherits a "
+                f"platform-dependent (often 64-bit) dtype that x64-disabled "
+                f"jax truncates — pass dtype= explicitly (the PR 1 "
+                f"ones_like bug class)"))
+    return out

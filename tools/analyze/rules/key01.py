@@ -1,0 +1,270 @@
+"""KEY01 — PRNG key reuse.
+
+The bug class (PR 7, ``select_attribute``): one PRNG key object flowing into
+two ``jax.random.*`` consumers (or two key-consuming repo functions) without
+an intervening ``split``/``fold_in``.  Two passes drawing from the same key
+produce *correlated* randomness — the AQR pass and the estimate pass ranked
+candidates off correlated draws until the fold_in fix.
+
+Analysis: per function, path-sensitive consumption counting.
+
+* Key variables: parameters named like keys (``key``, ``k_s``, ``*_key``,
+  ``rng``) and locals assigned from ``PRNGKey``/``split``/``fold_in`` (or
+  any call whose name ends with ``key``).
+* A call consuming a key var as an argument counts once — unless the callee
+  is a deriver (``split``/``fold_in``/``PRNGKey``), which is how new keys
+  are minted.
+* Reassignment resets the count.  ``if``/``else`` branches count
+  independently (a key consumed once in each arm is used once per path).
+* Consumption inside a loop or comprehension whose key is not re-derived
+  each iteration is an immediate finding: every iteration draws the same
+  randomness.
+"""
+from __future__ import annotations
+
+import ast
+import re
+from typing import Dict, List, Optional, Set
+
+from tools.analyze.driver import Context, Finding, FunctionInfo, ModuleInfo, call_name
+
+RULE = "KEY01"
+
+KEY_PARAM_RE = re.compile(r"^(key|rng|k|k_[a-z0-9_]+|[a-z0-9_]*_key)$")
+DERIVERS = {"split", "fold_in", "PRNGKey", "key"}  # jax.random.key too
+
+
+def _is_deriver(call: ast.Call) -> bool:
+    name = call_name(call)
+    if name is None:
+        return False
+    return name.rsplit(".", 1)[-1] in DERIVERS
+
+
+def _non_key_annotation(arg: ast.arg) -> bool:
+    """A key-looking parameter annotated as a plain host type (``key: int``
+    registration ids, ``k: str`` cache keys) is not a PRNG key."""
+    ann = arg.annotation
+    if ann is None:
+        return False
+    if isinstance(ann, ast.Constant) and isinstance(ann.value, str):
+        text = ann.value
+    else:
+        try:
+            text = ast.unparse(ann)
+        except Exception:  # pragma: no cover - malformed annotation
+            return False
+    return not any(tok in text for tok in ("Array", "array", "PRNGKey", "Key"))
+
+
+def _terminates(stmts: List[ast.stmt]) -> bool:
+    """True when control cannot fall through this statement list."""
+    if not stmts:
+        return False
+    last = stmts[-1]
+    if isinstance(last, (ast.Return, ast.Raise, ast.Continue, ast.Break)):
+        return True
+    if isinstance(last, ast.If):
+        return bool(last.orelse) and _terminates(last.body) and _terminates(last.orelse)
+    return False
+
+
+def _assigned_names(target: ast.AST) -> List[str]:
+    if isinstance(target, ast.Name):
+        return [target.id]
+    if isinstance(target, (ast.Tuple, ast.List)):
+        out: List[str] = []
+        for elt in target.elts:
+            out.extend(_assigned_names(elt))
+        return out
+    return []
+
+
+class _FnAnalysis:
+    def __init__(self, module: ModuleInfo, fn: FunctionInfo):
+        self.module = module
+        self.fn = fn
+        self.findings: List[Finding] = []
+        self.key_vars: Set[str] = set()
+        args = fn.node.args
+        for a in (args.posonlyargs + args.args + args.kwonlyargs):
+            if KEY_PARAM_RE.match(a.arg) and not _non_key_annotation(a):
+                self.key_vars.add(a.arg)
+        for sub in ast.walk(fn.node):
+            if isinstance(sub, ast.Assign) and isinstance(sub.value, ast.Call) \
+                    and _is_deriver(sub.value):
+                for t in sub.targets:
+                    self.key_vars.update(_assigned_names(t))
+
+    def _flag(self, var: str, line: int, why: str) -> None:
+        self.findings.append(Finding(
+            RULE, self.module.path, line,
+            f"PRNG key {var!r} {why} — derive a fresh key with "
+            f"jax.random.split/fold_in instead"))
+
+    # -- expression-level consumption ---------------------------------------
+    def _consume_expr(self, expr: ast.AST, counts: Dict[str, int],
+                      loop_vars: Optional[Set[str]] = None) -> None:
+        for sub in ast.walk(expr):
+            if isinstance(sub, (ast.ListComp, ast.SetComp, ast.DictComp,
+                                ast.GeneratorExp)):
+                self._consume_comp(sub, counts)
+            elif isinstance(sub, ast.Call):
+                deriver = _is_deriver(sub)
+                consumed_here: Set[str] = set()
+                for arg in list(sub.args) + [kw.value for kw in sub.keywords]:
+                    if isinstance(arg, ast.Name) and arg.id in self.key_vars:
+                        if deriver:
+                            continue
+                        var = arg.id
+                        if loop_vars is not None and var in loop_vars:
+                            self._flag(var, sub.lineno,
+                                       "consumed inside a loop without "
+                                       "per-iteration derivation")
+                            loop_vars.discard(var)  # one finding per var
+                            continue
+                        counts[var] = counts.get(var, 0) + 1
+                        if counts[var] == 2 and var not in consumed_here:
+                            self._flag(var, sub.lineno,
+                                       "consumed by a second consumer "
+                                       "without split/fold_in")
+                        consumed_here.add(var)
+
+    def _consume_comp(self, comp: ast.AST, counts: Dict[str, int]) -> None:
+        targets: Set[str] = set()
+        for gen in comp.generators:  # type: ignore[attr-defined]
+            targets.update(_assigned_names(gen.target))
+        live = {v for v in self.key_vars if v not in targets}
+        self._consume_expr_nodes_in_comp(comp, counts, live)
+
+    def _consume_expr_nodes_in_comp(self, comp, counts, live: Set[str]) -> None:
+        for sub in ast.walk(comp):
+            if isinstance(sub, ast.Call) and not _is_deriver(sub):
+                for arg in list(sub.args) + [kw.value for kw in sub.keywords]:
+                    if isinstance(arg, ast.Name) and arg.id in live:
+                        self._flag(arg.id, sub.lineno,
+                                   "consumed inside a comprehension without "
+                                   "per-iteration derivation")
+                        live.discard(arg.id)
+
+    # -- statement-level walk -----------------------------------------------
+    def run(self) -> List[Finding]:
+        self._walk(self.fn.node.body, {})
+        return self.findings
+
+    def _walk(self, stmts, counts: Dict[str, int]) -> Dict[str, int]:
+        for stmt in stmts:
+            counts = self._stmt(stmt, counts)
+        return counts
+
+    def _stmt(self, stmt: ast.AST, counts: Dict[str, int]) -> Dict[str, int]:
+        if isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef, ast.ClassDef)):
+            return counts  # nested defs are analyzed as their own functions
+        if isinstance(stmt, ast.Assign):
+            self._consume_expr(stmt.value, counts)
+            for t in stmt.targets:
+                for name in _assigned_names(t):
+                    if name in self.key_vars:
+                        counts[name] = 0  # rebound: fresh object
+            return counts
+        if isinstance(stmt, ast.AugAssign):
+            self._consume_expr(stmt.value, counts)
+            return counts
+        if isinstance(stmt, ast.If):
+            self._consume_expr(stmt.test, counts)
+            after_body = self._walk(stmt.body, dict(counts))
+            after_else = self._walk(stmt.orelse, dict(counts))
+            # A branch that terminates (guard-clause return/raise/...) never
+            # reaches the code after the If — its counts don't merge.
+            if _terminates(stmt.body):
+                return after_else
+            if stmt.orelse and _terminates(stmt.orelse):
+                return after_body
+            merged = dict(counts)
+            for v in set(after_body) | set(after_else):
+                merged[v] = max(after_body.get(v, 0), after_else.get(v, 0))
+            return merged
+        if isinstance(stmt, (ast.For, ast.AsyncFor, ast.While)):
+            return self._loop(stmt, counts)
+        if isinstance(stmt, (ast.With, ast.AsyncWith)):
+            for item in stmt.items:
+                self._consume_expr(item.context_expr, counts)
+            return self._walk(stmt.body, counts)
+        if isinstance(stmt, ast.Try):
+            counts = self._walk(stmt.body, counts)
+            for h in stmt.handlers:
+                counts = self._walk(h.body, dict(counts))
+            counts = self._walk(stmt.orelse, counts)
+            return self._walk(stmt.finalbody, counts)
+        # Return / Expr / Assert / Raise / ...: count any consumption inside.
+        for value in ast.iter_child_nodes(stmt):
+            if isinstance(value, ast.expr):
+                self._consume_expr(value, counts)
+        return counts
+
+    def _loop(self, stmt, counts: Dict[str, int]) -> Dict[str, int]:
+        # Vars re-derived each iteration: the for-target (when iterating a
+        # deriver, e.g. ``for k in jax.random.split(key, n)``) and anything
+        # assigned from a deriver call inside the body.
+        rebound: Set[str] = set()
+        if isinstance(stmt, (ast.For, ast.AsyncFor)):
+            self._consume_expr(stmt.iter, counts)
+            if isinstance(stmt.iter, ast.Call) or any(
+                    isinstance(s, ast.Call) and _is_deriver(s)
+                    for s in ast.walk(stmt.iter)):
+                rebound.update(_assigned_names(stmt.target))
+        else:
+            self._consume_expr(stmt.test, counts)
+        for sub in ast.walk(stmt):
+            if isinstance(sub, ast.Assign) and isinstance(sub.value, ast.Call) \
+                    and _is_deriver(sub.value):
+                for t in sub.targets:
+                    rebound.update(_assigned_names(t))
+        loop_vars = {v for v in self.key_vars if v not in rebound}
+        body_counts = dict(counts)
+        for s in stmt.body:
+            body_counts = self._stmt_with_loopvars(s, body_counts, loop_vars)
+        return self._walk(stmt.orelse, counts)
+
+    def _stmt_with_loopvars(self, stmt, counts, loop_vars: Set[str]):
+        # Same as _stmt but expression consumption knows which vars are
+        # loop-carried (consuming one = per-iteration reuse = finding).
+        if isinstance(stmt, ast.Assign):
+            self._consume_expr(stmt.value, counts, loop_vars)
+            for t in stmt.targets:
+                for name in _assigned_names(t):
+                    if name in self.key_vars:
+                        counts[name] = 0
+                        loop_vars.discard(name)
+            return counts
+        if isinstance(stmt, ast.If):
+            self._consume_expr(stmt.test, counts, loop_vars)
+            b = dict(counts)
+            for s in stmt.body:
+                b = self._stmt_with_loopvars(s, b, loop_vars)
+            e = dict(counts)
+            for s in stmt.orelse:
+                e = self._stmt_with_loopvars(s, e, loop_vars)
+            if _terminates(stmt.body):
+                return e
+            if stmt.orelse and _terminates(stmt.orelse):
+                return b
+            merged = dict(counts)
+            for v in set(b) | set(e):
+                merged[v] = max(b.get(v, 0), e.get(v, 0))
+            return merged
+        if isinstance(stmt, (ast.For, ast.AsyncFor, ast.While)):
+            return self._loop(stmt, counts)
+        for value in ast.iter_child_nodes(stmt):
+            if isinstance(value, ast.expr):
+                self._consume_expr(value, counts, loop_vars)
+        return counts
+
+
+def check(module: ModuleInfo, ctx: Context) -> List[Finding]:
+    out: List[Finding] = []
+    for fn in module.functions:
+        analysis = _FnAnalysis(module, fn)
+        if analysis.key_vars:
+            out.extend(analysis.run())
+    return out
