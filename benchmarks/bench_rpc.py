@@ -1,0 +1,361 @@
+"""RPC-transport gates: cross-backend differential at scale, transport tax,
+process-kill recovery cost.
+
+Three contracts from the RPC PR's acceptance criteria, enforced at quick
+scale (the CI multiprocess-smoke job runs the pytest smoke; this bench is
+the full-size version):
+
+  * **differential** — >= 100 seeded-random replay sequences (kill / stall /
+    partition / flaky / heal interleaved with queries, query batches, appends
+    and deletes) across 1-8 shards on the crimes schema AND all four workload
+    templates (A-GH, A-JGH, AA-GH, AA-JGH) on the TPC-H join schema, with the
+    chaotic engine on the **real subprocess backend** (every shard a separate
+    OS process; kill is SIGKILL, partition a dropped socket) and the
+    fault-free reference running **in-process fused**.  Every chaotic
+    multi-process trace must be bit-identical to the single-process replay.
+  * **overhead** — warm reuse over the subprocess backend must cost <= 1.3x
+    the in-process routed warm hit, measured interleaved so runner drift hits
+    both sides equally.  (The client caches state tokens and sketch bits off
+    RPC response metadata, so a warm hit pays no per-query round trips — this
+    gate pins that.)
+  * **recovery** — SIGKILL a shard server, heal, and time the coordinator's
+    recovery (respawn + checkpoint ship + delta replay + maintainer
+    re-registration over RPC) against cold re-capture (rebuild the shard
+    from the current table — a killed process has no state either way —
+    then evict the index and re-admit every sketch: selection + capture +
+    registration on all shards).  Recovery must be >= 3x cheaper.
+
+``--json`` (via ``benchmarks.run``) writes ``BENCH_rpc.json``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import time
+
+import numpy as np
+
+from benchmarks.common import emit
+from repro.core import Aggregate, Database, Having, Query, ShardedEngine, execute
+from repro.core.datasets import make_crimes, make_tpch
+from repro.runtime.chaos import differential, random_ops, random_schedule
+
+#: (shard_counts, seeds_per_count, ops_per_sequence) for the two schemas.
+SEQ_PLAN = {
+    "quick": {"crimes": (tuple(range(1, 9)), 10, 8), "tpch": ((2, 4, 6, 8), 6, 8)},
+    "full": {"crimes": (tuple(range(1, 9)), 16, 10), "tpch": ((2, 4, 6, 8), 10, 8)},
+}
+MIN_SEQUENCES = 100
+MAX_TRANSPORT_OVERHEAD = 1.3
+MIN_RECOVERY_SPEEDUP = 3.0
+RECOVERY_CYCLES = 3
+OVERHEAD_REPEATS = 20
+#: Engine op deadline on the subprocess backend: real RPCs have real latency,
+#: so the deadline sits well above a round trip but low enough that a stalled
+#: or killed server is detected within a replayed sequence.
+RPC_OP_DEADLINE_S = 0.5
+
+
+def _crimes_queries(db):
+    base = Query("crimes", ("district", "year"), Aggregate("sum", "records"))
+    sums = execute(base, db).values
+    qs = [dataclasses.replace(base, having=Having(">", float(np.quantile(sums, qt))))
+          for qt in (0.5, 0.8)]
+    byear = Query("crimes", ("year",), Aggregate("sum", "records"))
+    qs.append(dataclasses.replace(byear, having=Having(
+        ">", float(np.quantile(execute(byear, db).values, 0.6)))))
+    return qs
+
+
+def _crimes_rows(rng, n):
+    t = make_crimes(n, seed=int(rng.integers(1 << 30)))
+    return {a: np.asarray(t[a]) for a in t.schema}
+
+
+def _tpch_templates(db):
+    from repro.core import JoinSpec
+
+    def thresh(q, qt):
+        vals = execute(dataclasses.replace(q, having=None, outer_having=None),
+                       db).values
+        return float(np.quantile(vals, qt))
+
+    agh = Query("lineitem", ("l_suppkey",), Aggregate("sum", "l_quantity"))
+    agh = dataclasses.replace(agh, having=Having(">", thresh(agh, 0.8)))
+    ajgh = Query("lineitem", ("l_suppkey",), Aggregate("sum", "l_quantity"),
+                 join=JoinSpec("orders", "l_orderkey", "o_orderkey"))
+    ajgh = dataclasses.replace(ajgh, having=Having(">", thresh(ajgh, 0.8)))
+    aagh = Query("lineitem", ("l_partkey", "l_suppkey"),
+                 Aggregate("sum", "l_quantity"), having=Having(">", 0.0),
+                 outer_groupby=("l_suppkey",), outer_agg=Aggregate("sum", None))
+    aagh = dataclasses.replace(aagh, outer_having=Having(">", thresh(aagh, 0.8)))
+    aajgh = Query("lineitem", ("l_partkey", "l_suppkey"), Aggregate("count", None),
+                  join=JoinSpec("orders", "l_orderkey", "o_orderkey"),
+                  having=Having(">", 0.0),
+                  outer_groupby=("l_suppkey",), outer_agg=Aggregate("sum", None))
+    aajgh = dataclasses.replace(
+        aajgh, outer_having=Having(">", thresh(aajgh, 0.8)))
+    return [agh, ajgh, aagh, aajgh]
+
+
+def _subprocess_engine(db, table, attr, n_shards, **kw):
+    return ShardedEngine(db, table, attr, n_shards=n_shards, n_ranges=16,
+                         theta=0.1, seed=0, transport="subprocess",
+                         op_deadline_s=RPC_OP_DEADLINE_S, **kw)
+
+
+def _loopback_engine(db, table, attr, n_shards, **kw):
+    return ShardedEngine(db, table, attr, n_shards=n_shards, n_ranges=16,
+                         theta=0.1, seed=0, transport="loopback", **kw)
+
+
+def _run_differential(scale: str):
+    plan = SEQ_PLAN[scale]
+    total = identical = 0
+    failures = []
+
+    crimes_db = Database({"crimes": make_crimes(2500, seed=17)})
+    crimes_qs = _crimes_queries(crimes_db)
+    counts, seeds, n_ops = plan["crimes"]
+    for n_shards in counts:
+        for seed in range(seeds):
+            ops = random_ops(seed * 31 + n_shards, n_ops, crimes_qs, _crimes_rows)
+            events = random_schedule(seed * 97 + n_shards + 1000, n_ops, n_shards)
+            ok, _, _ = differential(
+                lambda n=n_shards: _subprocess_engine(
+                    crimes_db, "crimes", "district", n,
+                    min_selectivity_gain=2.0),
+                "crimes", ops, events,
+                make_clean=lambda n=n_shards: _loopback_engine(
+                    crimes_db, "crimes", "district", n,
+                    min_selectivity_gain=2.0))
+            total += 1
+            identical += ok
+            if not ok:
+                failures.append(("crimes", n_shards, seed))
+        print(f"#   crimes n_shards={n_shards}: {total} sequences, "
+              f"{total - identical} diverged", flush=True)
+
+    tpch_db = make_tpch(2000, seed=8)
+    tpch_qs = _tpch_templates(tpch_db)
+
+    def tpch_rows(rng, n):
+        t = make_tpch(4 * n, seed=int(rng.integers(1 << 30)))["lineitem"]
+        return {a: np.asarray(t[a])[:n] for a in t.schema}
+
+    counts, seeds, n_ops = plan["tpch"]
+    for n_shards in counts:
+        for seed in range(seeds):
+            ops = random_ops(seed * 53 + n_shards + 7, n_ops, tpch_qs, tpch_rows,
+                             p_query=0.5, p_batch=0.2, p_append=0.2)
+            events = random_schedule(seed * 41 + n_shards + 2000, n_ops, n_shards)
+            ok, _, _ = differential(
+                lambda n=n_shards: _subprocess_engine(
+                    tpch_db, "lineitem", "l_suppkey", n,
+                    min_selectivity_gain=1.0),
+                "lineitem", ops, events,
+                make_clean=lambda n=n_shards: _loopback_engine(
+                    tpch_db, "lineitem", "l_suppkey", n,
+                    min_selectivity_gain=1.0))
+            total += 1
+            identical += ok
+            if not ok:
+                failures.append(("tpch", n_shards, seed))
+        print(f"#   tpch n_shards={n_shards}: {total} sequences, "
+              f"{total - identical} diverged", flush=True)
+    return total, identical, failures
+
+
+def _run_overhead(n_rows: int):
+    """Fault-free warm reuse latency, subprocess vs in-process routed,
+    interleaved best-of-N so load drift hits both engines equally."""
+    db = Database({"crimes": make_crimes(n_rows, seed=29)})
+    q = _crimes_queries(db)[0]
+    engines = {
+        "subprocess": _subprocess_engine(db, "crimes", "district", 4,
+                                         min_selectivity_gain=2.0),
+        "loopback": _loopback_engine(db, "crimes", "district", 4,
+                                     min_selectivity_gain=2.0),
+    }
+    try:
+        for se in engines.values():
+            se.run(q)
+            se.run(q)  # warm the fused stack + compile (+ bits/token caches)
+        best = {"subprocess": float("inf"), "loopback": float("inf")}
+        for _ in range(OVERHEAD_REPEATS):
+            for name, se in engines.items():
+                t0 = time.perf_counter()
+                _, info = se.run(q)
+                best[name] = min(best[name], time.perf_counter() - t0)
+                assert info.reused and not info.degraded
+    finally:
+        for se in engines.values():
+            se.shutdown()
+    return best["subprocess"], best["loopback"]
+
+
+def _recovery_queries(db):
+    """A sketch-rich workload: eight distinct group-by templates, each
+    admitting its own sketch — the regime the recovery protocol exists for
+    (re-registration replays maintainers; re-capture re-scans per sketch)."""
+    def q_for(gb, qt=0.7):
+        q = Query("crimes", gb, Aggregate("sum", "records"))
+        vals = execute(q, db).values
+        return dataclasses.replace(
+            q, having=Having(">", float(np.quantile(vals, qt))))
+
+    return [q_for(("district", "year")), q_for(("year",)),
+            q_for(("district", "month")), q_for(("ward", "year")),
+            q_for(("community",)), q_for(("beat",)),
+            q_for(("month", "year")), q_for(("zipcode",))]
+
+
+def _run_recovery(n_rows: int):
+    """Process-kill recovery vs cold re-capture, both paths starting from
+    the same state: shard 1 SIGKILLed, healthy shards current, a delta
+    batch logged while it was down, and a fresh (compile-cold) server
+    process just healed in from the pool.
+
+      * recovery — what ``_catch_up_all`` does: ship the checkpoint, replay
+        the delta log, re-register every maintainer (one batched wave).
+      * re-capture — what the engine would pay without the protocol: the
+        shard must still be rebuilt from the coordinator's current table
+        (a killed process has NO state — this cost is not optional), then
+        the index is evicted and every sketch re-admitted from scratch
+        (selection + full-table capture + registration on all shards).
+    """
+    db = Database({"crimes": make_crimes(n_rows, seed=23)})
+    qs = _recovery_queries(db)
+    t = make_crimes(200, seed=77)
+    batch = {a: np.asarray(t[a]) for a in t.schema}
+
+    def setup():
+        se = _subprocess_engine(db, "crimes", "district", 4,
+                                min_selectivity_gain=0.5)
+        created = 0
+        for q in qs:
+            _, info = se.run(q)
+            created += info.created
+            se.run(q)
+        assert created >= 4  # a sketch-rich index, not one shared sketch
+        se.shards[1].inject("kill")  # a real SIGKILL
+        se.run(qs[0])  # degraded serve: suspect
+        se.run(qs[0])  # degraded serve: dead
+        se.append_rows("crimes", batch)  # logged for the dead shard
+        se._catch_up_all()  # healthy shards apply the batch (both paths pay
+        se.shards[1].heal()  # this); then respawn from the pool
+        return se
+
+    t_recover = float("inf")
+    for _ in range(RECOVERY_CYCLES):
+        se = setup()
+        try:
+            t0 = time.perf_counter()
+            applied, down = se._catch_up_all()  # ckpt -> replay -> re-reg
+            t_recover = min(t_recover, time.perf_counter() - t0)
+            assert not down and se.health[1] == "healthy"
+            res, info = se.run(qs[0])
+            assert not info.degraded
+            assert res.canonical() == execute(qs[0], se.db).canonical()
+        finally:
+            se.shutdown()
+
+    t_recapture = float("inf")
+    for _ in range(RECOVERY_CYCLES):
+        se = setup()
+        try:
+            for e in list(se.engine.index.entries()):
+                se.engine.index.remove(e)
+                se._unregister(id(e))
+            t0 = time.perf_counter()
+            se._rebuild_shard(1)  # mandatory either way: the state is gone
+            created = 0
+            for q in qs:
+                _, info = se.run(q)
+                created += info.created
+            t_recapture = min(t_recapture, time.perf_counter() - t0)
+            assert created >= 4
+            res, info = se.run(qs[0])
+            assert not info.degraded
+            assert res.canonical() == execute(qs[0], se.db).canonical()
+        finally:
+            se.shutdown()
+    return t_recover, t_recapture
+
+
+def run(scale: str = "quick", json_path: str | None = None):
+    from repro.core import shard_rpc
+
+    shard_rpc.POOL.prewarm(4)  # overlap server spawns with dataset setup
+    try:
+        total, identical, failures = _run_differential(scale)
+        t_sub, t_loop = _run_overhead(60_000 if scale == "quick" else 120_000)
+        # Recovery needs a table where capture cost is visible against the
+        # fixed cold-respawn tax (trace/compile in a fresh process).
+        t_recover, t_recapture = _run_recovery(
+            200_000 if scale == "quick" else 400_000)
+    finally:
+        shard_rpc.POOL.shutdown_all()
+
+    overhead = t_sub / max(t_loop, 1e-9)
+    recovery_speedup = t_recapture / max(t_recover, 1e-9)
+    rows = [
+        ("rpc_differential", total, identical, len(failures), "", ""),
+        ("rpc_overhead", "", "", "", f"{t_sub*1e3:.3f}", f"{overhead:.3f}"),
+        ("rpc_recovery", "", "", "", f"{t_recover*1e3:.3f}",
+         f"{recovery_speedup:.2f}"),
+    ]
+    emit(rows, ("bench", "sequences", "identical", "diverged", "ms", "ratio"))
+
+    if json_path:  # write before the gates: the artifact lands either way
+        with open(json_path, "w") as f:
+            json.dump({
+                "bench": "rpc", "scale": scale,
+                "differential": {
+                    "sequences": total, "identical": identical,
+                    "min_sequences": MIN_SEQUENCES,
+                    "backend": "subprocess-vs-loopback-fused",
+                    "failures": failures,
+                },
+                "overhead": {
+                    "t_subprocess_ms": round(t_sub * 1e3, 3),
+                    "t_loopback_ms": round(t_loop * 1e3, 3),
+                    "ratio": round(overhead, 4),
+                    "max_ratio": MAX_TRANSPORT_OVERHEAD,
+                },
+                "recovery": {
+                    "t_recover_ms": round(t_recover * 1e3, 3),
+                    "t_recapture_ms": round(t_recapture * 1e3, 3),
+                    "speedup": round(recovery_speedup, 2),
+                    "min_speedup": MIN_RECOVERY_SPEEDUP,
+                },
+            }, f, indent=2)
+        print(f"# wrote {json_path}")
+
+    if scale == "quick":
+        assert total >= MIN_SEQUENCES, (
+            f"only {total} replay sequences (gate: >= {MIN_SEQUENCES})")
+        assert identical == total, (
+            f"{len(failures)} multi-process traces diverged from the "
+            f"single-process fused replay: {failures[:5]}")
+        assert overhead <= MAX_TRANSPORT_OVERHEAD, (
+            f"subprocess warm hit costs {overhead:.3f}x the in-process routed "
+            f"warm hit ({t_sub*1e3:.3f}ms vs {t_loop*1e3:.3f}ms); gate <= "
+            f"{MAX_TRANSPORT_OVERHEAD}x")
+        assert recovery_speedup >= MIN_RECOVERY_SPEEDUP, (
+            f"process-kill recovery ({t_recover*1e3:.2f}ms) is only "
+            f"{recovery_speedup:.2f}x cheaper than cold re-capture "
+            f"({t_recapture*1e3:.2f}ms); gate >= {MIN_RECOVERY_SPEEDUP}x")
+    return rows
+
+
+if __name__ == "__main__":
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--scale", choices=["quick", "full"], default="quick")
+    ap.add_argument("--json", action="store_true")
+    args = ap.parse_args()
+    run(scale="quick" if args.quick else args.scale,
+        json_path="BENCH_rpc.json" if args.json else None)

@@ -7,8 +7,11 @@ Emits CSV per benchmark.  ``--json`` additionally writes ``BENCH_fig9.json``
 means and the speedup over ``benchmarks/seed_fig9_baseline.json``),
 ``BENCH_maintenance.json``, ``BENCH_shard.json``, ``BENCH_admission.json``
 (batched vs sequential admission, >= 3x per-query miss-path floor enforced at
-quick scale) and ``BENCH_chaos.json`` (>= 100 chaos-differential replay
-sequences, >= 3x recovery-vs-recapture, <= 5% health-tracking tax) so
+quick scale), ``BENCH_chaos.json`` (>= 100 chaos-differential replay
+sequences, >= 3x recovery-vs-recapture, <= 5% health-tracking tax) and
+``BENCH_rpc.json`` (>= 100 cross-backend replays: real subprocess shards vs
+in-process fused, <= 1.3x transport tax on warm hits, >= 3x process-kill
+recovery vs cold re-capture) so
 successive PRs have a perf trajectory to compare against.  The dry-run/roofline artifacts are
 produced by ``repro.launch.dryrun`` + ``benchmarks.roofline`` (they need the
 512-device XLA flag and hence their own process).
@@ -43,6 +46,7 @@ def main() -> None:
         bench_fig8_accuracy,
         bench_fig9_endtoend,
         bench_maintenance,
+        bench_rpc,
         bench_shard,
         bench_table1,
     )
@@ -72,6 +76,10 @@ def main() -> None:
         "chaos": functools.partial(
             bench_chaos.run,
             json_path="BENCH_chaos.json" if args.json else None,
+        ),
+        "rpc": functools.partial(
+            bench_rpc.run,
+            json_path="BENCH_rpc.json" if args.json else None,
         ),
     }
     failed = []

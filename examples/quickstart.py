@@ -231,3 +231,44 @@ _, p1 = pf.run(broad)
 print(f"paper-faithful: broad template "
       f"{'created' if p1.created else 'declined (coverage 1.0 >= 0.9)'}")
 assert b1.created and b2.reused and not p1.created
+
+# --- 9. Real process-boundary shards: RPC transport, genuine failures --------
+# Everything above ran shards in-process (transport="loopback").  Flip one
+# switch and each FragmentShard becomes a separate OS process serving over a
+# unix-socket RPC (length-prefixed pickle-5 frames, per-op deadlines).  The
+# failure semantics stop being simulated: "kill" is a real SIGKILL — the
+# process and ALL its state are gone — and recovery really does respawn a
+# server, ship the checkpoint, replay the coordinator's delta log and
+# re-register maintainers.  Results stay bit-identical throughout.
+import os
+
+rpc = ShardedEngine(big, "crimes", "district", n_shards=2, n_ranges=100,
+                    theta=0.05, min_selectivity_gain=0.98,
+                    transport="subprocess")
+try:
+    rpc.run(q2)                          # cold: capture + register over RPC
+    res_p, info_p = rpc.run(q2)          # warm: routed over RPC
+    pids = [s.pid for s in rpc.shards]
+    print(f"subprocess shards: coordinator pid={os.getpid()} "
+          f"servers={pids} reused={info_p.reused}")
+    assert res_p.canonical() == execute(q2, rpc.db).canonical()
+
+    pid0 = rpc.shards[1].pid
+    rpc.shards[1].inject("kill")         # SIGKILL: the OS process is gone
+    try:
+        os.kill(pid0, 0)
+        raise AssertionError("server survived the kill?")
+    except ProcessLookupError:
+        pass
+    res_k, info_k = rpc.run(q2)          # serving continues, degraded
+    assert info_k.degraded
+    assert res_k.canonical() == execute(q2, rpc.db).canonical()
+
+    rpc.shards[1].heal()                 # respawn from the warm server pool
+    res_h, info_h = rpc.run(q2)          # ckpt ship -> replay -> re-register
+    print(f"killed pid {pid0} -> respawned pid {rpc.shards[1].pid}: "
+          f"degraded={info_h.degraded} health={rpc.health}")
+    assert not info_h.degraded and rpc.shards[1].pid != pid0
+    assert res_h.canonical() == execute(q2, rpc.db).canonical()
+finally:
+    rpc.shutdown()                       # servers return to the warm pool

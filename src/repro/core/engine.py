@@ -134,6 +134,27 @@ class PBDSEngine:
         # and drops row-position caches, the same trade as cluster_by.
         self.compact_tail_frac = compact_tail_frac
 
+    def selection_state(self) -> dict:
+        """Picklable snapshot of the reuse-aware selection state: the
+        ``WorkloadLog`` miss window (the reuse-aware cost model's input)
+        plus the ``SelectionCache`` hit/miss counters.  A coordinator
+        restart that drops this silently reverts CB-OPT-GB to reuse-blind
+        declines — checkpoint it alongside the table state."""
+        return {
+            "workload": self.workload.snapshot(),
+            "selection_cache": {"hits": self.selection_cache.hits,
+                                "misses": self.selection_cache.misses},
+        }
+
+    def restore_selection_state(self, state: Mapping) -> None:
+        """Inverse of ``selection_state`` (cache *stats* restore; cached
+        selection results themselves rebuild on first use)."""
+        self.workload = WorkloadLog.from_snapshot(state["workload"])
+        sc = state.get("selection_cache")
+        if sc is not None:
+            self.selection_cache.hits = int(sc["hits"])
+            self.selection_cache.misses = int(sc["misses"])
+
     def _select_key(self, q: Query) -> jax.Array:
         """Per-query selection randomness, derived from query *content*.
 

@@ -660,6 +660,7 @@ class ShardedEngine:
         op_deadline_s: float = 5.0,
         inbox_cap: Optional[int] = 4096,
         retry_policy: Optional[RetryPolicy] = None,
+        transport: str = "loopback",
         **engine_kwargs,
     ):
         for k in ("cluster_tables", "compact_tail_frac"):
@@ -683,11 +684,31 @@ class ShardedEngine:
         dims = {k: v for k, v in self.engine.db.tables.items() if k != table}
         self._devices = shard_devices(n_shards, use_devices)
         self._inbox_cap = inbox_cap
-        self.shards: List[FragmentShard] = [
-            FragmentShard(s, self.plan, self.ranges, clustered, dims,
-                          self._devices[s], inbox_cap=inbox_cap)
-            for s in range(n_shards)
-        ]
+        # Shard surface: every shard op goes through a ShardClient.  The
+        # loopback backend wraps in-process FragmentShards (zero-copy,
+        # today's behavior); the subprocess backend runs each shard as a
+        # separate OS process behind a socket RPC channel — same failure
+        # vocabulary (ShardUnavailableError / BackpressureError), so the
+        # health machine and degraded routing below are backend-blind.
+        from repro.core import shard_rpc  # deferred: shard_rpc imports us
+
+        self.transport = transport
+        if transport == "loopback":
+            self.shards = [
+                shard_rpc.LoopbackShardClient(
+                    FragmentShard(s, self.plan, self.ranges, clustered, dims,
+                                  self._devices[s], inbox_cap=inbox_cap))
+                for s in range(n_shards)
+            ]
+        elif transport == "subprocess":
+            self.shards = [
+                shard_rpc.SubprocessShardClient(
+                    s, self.plan, self.ranges, clustered, dims,
+                    inbox_cap=inbox_cap, op_deadline_s=op_deadline_s)
+                for s in range(n_shards)
+            ]
+        else:
+            raise ValueError(f"unknown transport {transport!r}")
         # Global-row -> (shard, local-row) map, maintained across mutations so
         # coordinator delete masks translate to shard-local masks.
         n = clustered.num_rows
@@ -726,14 +747,15 @@ class ShardedEngine:
         self.health: List[str] = ["healthy"] * n_shards
         self._monitors: Dict[Tuple[int, str], StragglerMonitor] = {}
         self._route_retries = 0
-        # Coordinator-durable recovery state: per-shard checkpoint (a
-        # reference to the shard's immutable local table as of its last fully
-        # drained read — the in-process stand-in for a durable snapshot) plus
+        # Coordinator-durable recovery state: per-shard checkpoint (loopback:
+        # a reference to the shard's immutable local table as of its last
+        # fully drained read; subprocess: the coordinator's clustered table
+        # at the watermark, from which the shard rebuilds server-side) plus
         # the delta log of everything shipped past it.  Recovery of a lost
-        # shard is checkpoint-adopt + delta-replay + maintainer
+        # shard is checkpoint-restore + delta-replay + maintainer
         # re-registration — never a from-scratch re-capture.
-        self._ckpt: List[Optional[ColumnTable]] = [
-            s.table for s in self.shards]
+        self._ckpt: List[Optional["shard_rpc.ShardCheckpoint"]] = [
+            c.make_checkpoint(clustered, 0) for c in self.shards]
         self._log: List[List[Tuple[int, str, object]]] = [
             [] for _ in range(n_shards)]
 
@@ -930,6 +952,27 @@ class ShardedEngine:
                 self._unregister(key)
         return evicted
 
+    def shutdown(self) -> None:
+        """Release shard resources: loopback clients no-op, subprocess
+        clients return their server process to the warm pool (or reap it).
+        Safe to call more than once."""
+        for c in self.shards:
+            try:
+                c.close_client()
+            except Exception:
+                pass
+
+    # -- coordinator selection-state checkpointing ----------------------------
+    def selection_state(self) -> dict:
+        """The coordinator's reuse-aware selection state (WorkloadLog window
+        + SelectionCache stats), picklable — shards never see it, so ONE
+        log survives a coordinator restart even when shards are separate
+        processes."""
+        return self.engine.selection_state()
+
+    def restore_selection_state(self, state: Mapping) -> None:
+        self.engine.restore_selection_state(state)
+
     # -- health tracking / failover -------------------------------------------
     def _shard_call(self, sid: int, op: str, fn):
         """One guarded shard op: bounded retries with backoff + a deadline
@@ -974,11 +1017,14 @@ class ShardedEngine:
         return out
 
     def _checkpoint(self, sid: int) -> None:
-        """Advance one shard's durable recovery point.  Local tables are
-        immutable, so a checkpoint is one reference + a log prune."""
-        shard = self.shards[sid]
-        self._ckpt[sid] = shard.table
-        v = shard.table.version
+        """Advance one shard's durable recovery point.  Called only when the
+        shard is at version parity with the coordinator, so both checkpoint
+        kinds (loopback: shard-table reference; subprocess: coordinator-table
+        snapshot) are one immutable reference + a log prune."""
+        ckpt = self.shards[sid].make_checkpoint(
+            self.db[self.table_name], self.version)
+        self._ckpt[sid] = ckpt
+        v = ckpt.version
         if self._log[sid] and self._log[sid][0][0] <= v:
             self._log[sid] = [e for e in self._log[sid] if e[0] > v]
 
@@ -990,8 +1036,7 @@ class ShardedEngine:
         for name, t in self.engine.db.tables.items():
             if name == self.table_name:
                 continue
-            cur = shard.dims.get(name)
-            if cur is None or cur.uid != t.uid or cur.version != t.version:
+            if shard.dim_token(name) != (t.uid, t.version):
                 shard.update_dim(t)
         applied = shard.catch_up(self.version)
         while shard.version < self.version:
@@ -1023,7 +1068,7 @@ class ShardedEngine:
         shard = self.shards[sid]
         self.health[sid] = "recovering"
         applied = 0
-        if shard.table is None:  # killed: all local state lost
+        if shard.state_lost:  # killed: all local state lost
             if self._ckpt[sid] is None:
                 # No coherent checkpoint (placement changed while it was
                 # gone): rebuild from the coordinator's table outright.
@@ -1032,7 +1077,8 @@ class ShardedEngine:
                 return 0
             dims = {k: v for k, v in self.engine.db.tables.items()
                     if k != self.table_name}
-            shard.adopt(self._ckpt[sid], dims)
+            shard.restore_checkpoint(self._ckpt[sid], dims, self.plan,
+                                     self.ranges)
         applied += self._sync_shard(sid)
         self._reregister_shard(sid)
         self._checkpoint(sid)
@@ -1046,7 +1092,7 @@ class ShardedEngine:
         for key, reg in self._registered.items():
             if not reg.group_local or not self.engine.index.contains(reg.entry):
                 continue
-            if key not in shard.maintainers:
+            if not shard.has_maintainer(key):
                 shard.register(key, reg.entry.query, reg.ranges)
 
     def _rebuild_shard(self, sid: int) -> int:
@@ -1060,9 +1106,9 @@ class ShardedEngine:
                 if k != self.table_name}
         dead = [s for s, h in enumerate(self.health) if h == "dead"]
         self._devices[sid] = failover_device(self._devices, sid, dead)
-        self.shards[sid] = FragmentShard(
-            sid, self.plan, self.ranges, ctable, dims, self._devices[sid],
-            inbox_cap=self._inbox_cap, version=self.version)
+        self.shards[sid].rebuild(
+            self.plan, self.ranges, ctable, dims, self._devices[sid],
+            self._inbox_cap, self.version)
         self._log[sid] = []
         self._reregister_shard(sid)
         self._checkpoint(sid)
@@ -1148,6 +1194,17 @@ class ShardedEngine:
                         self.health[sid] = "dead"
                         down.add(sid)
                 else:
+                    down.add(sid)
+                continue
+            if shard.state_lost and shard.reachable:
+                # Healed after a kill without ever being demoted to dead (no
+                # serve happened in between): recover on the spot instead of
+                # burning a serve discovering the loss through a failing
+                # catch_up.
+                try:
+                    applied += self._recover_shard(sid)
+                except (ShardUnavailableError, BackpressureError):
+                    self.health[sid] = "dead"
                     down.add(sid)
                 continue
             try:
@@ -1267,15 +1324,9 @@ class ShardedEngine:
     def _shard_arrays(
         self, sid: int, key: int, reg: _Registered, bits: np.ndarray, q: Query
     ):
-        """One shard's inner-block arrays for the stacked layout (live path)."""
-        shard = self.shards[sid]
-        inst = shard._instance(key, reg.ranges, bits)
-        if q.join is not None:
-            flat, _ = shard.catalog.join(
-                inst, shard.dims[q.join.right], q.join.left_key, q.join.right_key)
-        else:
-            flat = inst
-        return inner_block_arrays(q, flat, shard.catalog)
+        """One shard's inner-block arrays for the stacked layout (live path:
+        zero-copy on loopback, one RPC on the subprocess backend)."""
+        return self.shards[sid].block_arrays(key, reg.ranges, bits, q)
 
     def _stacked_token(self, degraded: Set[int], bits: np.ndarray) -> Tuple:
         """Freshness token for the stacked arrays.  Degraded shards' slices
@@ -1289,8 +1340,7 @@ class ShardedEngine:
             ("coord", ctable.uid, ctable.version) if sid in degraded
             # A state-less shard outside the degraded set owns no fragments
             # (re-placed away) — it contributes no slice, any sentinel works.
-            else ("lost",) if s.table is None
-            else (s.table.uid, s.table.version)
+            else (s.state_token() or ("lost",))
             for sid, s in enumerate(self.shards))
         return (per, bits.tobytes())
 

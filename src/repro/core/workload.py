@@ -11,7 +11,7 @@ from __future__ import annotations
 import collections
 import dataclasses
 import itertools
-from typing import List, Optional, Sequence, Tuple
+from typing import List, Mapping, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -80,6 +80,22 @@ class WorkloadLog:
 
     def entries(self) -> List[Tuple[int, Query]]:
         return list(self._log)
+
+    def snapshot(self) -> dict:
+        """Picklable state (queries are frozen value dataclasses): the
+        coordinator checkpoints this so a restart keeps the reuse-aware
+        cost model's miss window instead of reverting to reuse-blind
+        declines."""
+        return {"window": self.window, "clock": self._clock,
+                "entries": list(self._log)}
+
+    @classmethod
+    def from_snapshot(cls, snap: Mapping) -> "WorkloadLog":
+        log = cls(snap["window"])
+        for stamp, q in snap["entries"]:
+            log._log.append((stamp, q))
+        log._clock = snap["clock"]
+        return log
 
 
 @dataclasses.dataclass(frozen=True)

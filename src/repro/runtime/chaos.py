@@ -1,10 +1,12 @@
 """Deterministic fault injection for chaos-testing the sharded engine.
 
 The harness replays a workload (queries, batches, appends, deletes) against a
-``ShardedEngine`` while injecting faults into its ``FragmentShard``s at
-scripted or seeded-random points: ``kill`` (all local state lost), ``stall``
-(every op sleeps — a straggler), ``partition`` (unreachable, state intact),
-``flaky`` (the next N ops fail, then self-heal), and ``heal``.
+``ShardedEngine`` while injecting faults into its shards at scripted or
+seeded-random points: ``kill`` (all local state lost — a SIGKILL of the
+server process on the subprocess backend), ``stall`` (every op sleeps — a
+straggler), ``partition`` (unreachable, state intact — a dropped socket),
+``flaky`` (the next N ops fail, then self-heal — injected RPC errors), and
+``heal``.
 
 Everything is seeded and replayable: ``random_schedule`` and ``random_ops``
 derive all randomness from ``numpy.random.default_rng(seed)``, and delete
@@ -161,10 +163,12 @@ def run_ops(
 class ChaosHarness:
     """Applies a fault schedule while replaying a workload.
 
-    The harness pokes faults straight into the engine's shard objects —
-    ``FragmentShard.inject``/``heal`` are the in-process stand-ins for
-    killing/partitioning a real shard process — and otherwise drives the
-    engine through its public serving API only.
+    The harness pokes faults through the engine's shard clients —
+    ``inject``/``heal`` on a loopback client flips in-process flags, on a
+    subprocess client it delivers the real mechanism (``kill`` SIGKILLs the
+    shard server, ``stall`` makes it sleep per op, ``partition`` drops the
+    socket, ``flaky`` injects RPC error responses) — and otherwise drives
+    the engine through its public serving API only.
     """
 
     def __init__(self, events: Sequence[ChaosEvent]):
@@ -173,7 +177,7 @@ class ChaosHarness:
         for e in self.events:
             self._by_step.setdefault(e.step, []).append(e)
 
-    def apply(self, engine, step: int) -> None:
+    def apply_events(self, engine, step: int) -> None:
         for e in self._by_step.get(step, []):
             shard = engine.shards[e.shard]
             if e.kind == "heal":
@@ -183,7 +187,7 @@ class ChaosHarness:
 
     def run(self, engine, table: str, ops: Sequence[Tuple[str, object]]) -> List:
         return run_ops(engine, table, ops,
-                       on_step=lambda s: self.apply(engine, s))
+                       on_step=lambda s: self.apply_events(engine, s))
 
 
 def differential(
@@ -191,6 +195,7 @@ def differential(
     table: str,
     ops: Sequence[Tuple[str, object]],
     events: Sequence[ChaosEvent],
+    make_clean: Optional[Callable[[], object]] = None,
 ) -> Tuple[bool, List, List]:
     """The chaos differential gate for one replay sequence.
 
@@ -199,7 +204,26 @@ def differential(
     Identity is exact (``==`` on canonical traces): degraded-mode serving
     substitutes coordinator-side slices that are bit-identical to the lost
     shard's, so chaos may change *routing* but never *results*.
+
+    ``make_clean`` lets the fault-free reference come from a different
+    engine configuration than the chaotic run — the cross-backend gate
+    (subprocess shards under real kills/stalls/socket drops vs fault-free
+    in-process fused serving) uses exactly this.  Engines exposing
+    ``shutdown()`` are shut down before returning, so subprocess-backed
+    replays never leak shard servers.
     """
-    clean = run_ops(make_engine(), table, ops)
-    chaotic = ChaosHarness(events).run(make_engine(), table, ops)
+
+    def _run(factory, trace_fn):
+        eng = factory()
+        try:
+            return trace_fn(eng)
+        finally:
+            close = getattr(eng, "shutdown", None)
+            if close is not None:
+                close()
+
+    clean = _run(make_clean or make_engine,
+                 lambda e: run_ops(e, table, ops))
+    chaotic = _run(make_engine,
+                   lambda e: ChaosHarness(events).run(e, table, ops))
     return chaotic == clean, chaotic, clean

@@ -9,6 +9,8 @@ import time
 from collections import deque
 from typing import Callable, Deque, Optional, Tuple, TypeVar
 
+import numpy as np
+
 T = TypeVar("T")
 
 
@@ -19,14 +21,26 @@ class RetryPolicy:
     backoff_mult: float = 2.0
     retryable: Tuple[type, ...] = (RuntimeError, OSError)
     # Wall-clock budget for the whole retry loop: once exceeded, the next
-    # retryable failure re-raises even with attempts left.  ``None`` = no
-    # deadline (the original behavior).
+    # retryable failure re-raises even with attempts left, and every sleep
+    # is capped to the remaining budget so the loop can never overrun it
+    # asleep.  ``None`` = no deadline (the original behavior).
     deadline_s: Optional[float] = None
+    # Decorrelated jitter (AWS-style): each sleep is drawn uniformly from
+    # ``[backoff_s, prev_sleep * backoff_mult * (1 + jitter))`` so a fleet
+    # of clients retrying against one recovering shard spreads out instead
+    # of hammering it in lockstep.  ``jitter=0`` reproduces the exact
+    # geometric sequence (tests pin it); ``seed`` makes the draw
+    # deterministic for replayable chaos runs.
+    jitter: float = 0.5
+    seed: Optional[int] = None
 
 
 def with_retries(fn: Callable[[], T], policy: RetryPolicy = RetryPolicy(),
                  on_retry: Optional[Callable[[int, Exception], None]] = None) -> T:
     delay = policy.backoff_s
+    rng = None
+    if policy.jitter > 0:
+        rng = np.random.default_rng(policy.seed)
     t0 = time.perf_counter()
     for attempt in range(1, policy.max_attempts + 1):
         try:
@@ -34,13 +48,22 @@ def with_retries(fn: Callable[[], T], policy: RetryPolicy = RetryPolicy(),
         except policy.retryable as e:  # noqa: PERF203
             if attempt == policy.max_attempts:
                 raise
-            if policy.deadline_s is not None \
-                    and time.perf_counter() - t0 >= policy.deadline_s:
-                raise
+            remaining = None
+            if policy.deadline_s is not None:
+                remaining = policy.deadline_s - (time.perf_counter() - t0)
+                if remaining <= 0:
+                    raise
             if on_retry:
                 on_retry(attempt, e)
-            time.sleep(delay)
-            delay *= policy.backoff_mult
+            sleep = delay
+            if rng is not None:
+                hi = delay * (1.0 + policy.jitter)
+                sleep = float(rng.uniform(policy.backoff_s, hi)) \
+                    if hi > policy.backoff_s else delay
+            if remaining is not None:
+                sleep = min(sleep, remaining)
+            time.sleep(max(sleep, 0.0))
+            delay = sleep * policy.backoff_mult
     raise AssertionError("unreachable")
 
 

@@ -1,0 +1,213 @@
+"""Shard transport: length-prefixed message framing over stream sockets.
+
+The serving layer's process boundary.  ``repro.core.shard`` routes every
+shard op through a ``ShardClient``; the subprocess backend
+(``repro.core.shard_rpc``) carries those ops over a unix-domain socket using
+the frame codec here.  Design constraints, in order:
+
+1. **Zero-copy-ish array payloads.**  Messages are pickled with protocol 5
+   and out-of-band buffers, so ``TableDelta`` row batches, sketch bit
+   vectors, and per-shard partial-aggregate tensors travel as raw buffer
+   frames after a small pickle header — no base64, no per-element
+   serialization.  ``jax.Array`` values are transparently lowered to host
+   ``numpy`` at pickling time (the serialization point IS the host sync;
+   the receiving side re-devices lazily on first use).
+2. **Per-op deadlines.**  Every send/recv takes a deadline in seconds and
+   raises ``RpcTimeout`` when the peer does not complete the transfer in
+   time — the subprocess client maps that onto the serving layer's
+   ``ShardUnavailableError`` so the PR 6 health machine sees a real stall
+   exactly like an injected one.
+3. **Bounded frames.**  A frame larger than ``max_frame_bytes`` is refused
+   before allocation on the receive side and refused before send on the
+   send side — a corrupt length prefix cannot OOM the coordinator, and a
+   runaway payload fails loudly at the boundary it crossed.
+
+Framing (all integers big-endian):
+
+    magic  4s   b"RPS1"
+    seq    u64  request/response correlation id
+    nbufs  u32  number of out-of-band buffers
+    lens   u64 * (nbufs + 1)   pickle byte-length, then each buffer's
+    pickle bytes
+    buffer bytes ...
+
+The codec is symmetric: servers and clients share ``send_msg``/``recv_msg``.
+"""
+from __future__ import annotations
+
+import io
+import pickle
+import socket
+import struct
+import time
+from typing import Any, List, Optional, Tuple
+
+import numpy as np
+
+MAGIC = b"RPS1"
+_HDR = struct.Struct("!4sQI")  # magic, seq, nbufs
+
+#: Refuse frames beyond this size (64 MiB default): a corrupted length
+#: prefix must not turn into an unbounded allocation.
+MAX_FRAME_BYTES = 64 << 20
+
+
+class TransportError(RuntimeError):
+    """Base class for transport failures."""
+
+
+class RpcTimeout(TransportError):
+    """The peer did not complete the transfer inside the deadline."""
+
+
+class RpcClosed(TransportError):
+    """The connection was closed (EOF / reset / broken pipe) mid-message."""
+
+
+class FrameError(TransportError):
+    """Malformed or oversized frame — a protocol violation, not a fault."""
+
+
+class RemoteError(TransportError):
+    """An exception raised on the server whose type could not be mapped
+    back to a local class; carries the remote type name and message."""
+
+    def __init__(self, remote_type: str, message: str):
+        super().__init__(f"{remote_type}: {message}")
+        self.remote_type = remote_type
+        self.remote_message = message
+
+
+# ---------------------------------------------------------------------------
+# Codec: pickle protocol 5 with out-of-band buffers, jax -> numpy lowering
+# ---------------------------------------------------------------------------
+
+
+def _is_jax_array(obj: Any) -> bool:
+    # Imported lazily so the transport stays usable (and testable) in
+    # processes that never touch jax.
+    mod = getattr(type(obj), "__module__", "") or ""
+    if not (mod.startswith("jax") or mod.startswith("jaxlib")):
+        return False
+    import jax
+
+    return isinstance(obj, jax.Array)
+
+
+class _Pickler(pickle.Pickler):
+    """Protocol-5 pickler that lowers ``jax.Array`` to host ``numpy``.
+
+    Device arrays are not picklable (and should not be: the peer has its
+    own devices).  Lowering at the boundary makes the host sync explicit
+    and single-sited; everything else rides the default reducers, with
+    numpy emitting out-of-band ``PickleBuffer`` frames under protocol 5.
+    """
+
+    def reducer_override(self, obj):
+        if _is_jax_array(obj):
+            host = np.ascontiguousarray(np.asarray(obj))
+            return host.__reduce_ex__(5)
+        return NotImplemented
+
+
+def encode_message(obj: Any) -> List[memoryview]:
+    """Encode one message into [pickle bytes, buffer, buffer, ...]."""
+    buffers: List[pickle.PickleBuffer] = []
+    bio = io.BytesIO()
+    _Pickler(bio, protocol=5, buffer_callback=buffers.append).dump(obj)
+    out: List[memoryview] = [bio.getbuffer()]
+    for b in buffers:
+        out.append(b.raw())
+    return out
+
+
+def decode_message(parts: List[bytes]) -> Any:
+    """Inverse of ``encode_message``."""
+    return pickle.loads(parts[0], buffers=[pickle.PickleBuffer(p)
+                                           for p in parts[1:]])
+
+
+# ---------------------------------------------------------------------------
+# Socket send/recv with deadlines
+# ---------------------------------------------------------------------------
+
+
+def _remaining(deadline_at: Optional[float]) -> Optional[float]:
+    if deadline_at is None:
+        return None
+    rem = deadline_at - time.perf_counter()
+    if rem <= 0:
+        raise RpcTimeout("deadline exhausted")
+    return rem
+
+
+def _sendall(sock: socket.socket, view: memoryview,
+             deadline_at: Optional[float]) -> None:
+    sent = 0
+    try:
+        while sent < len(view):
+            sock.settimeout(_remaining(deadline_at))
+            sent += sock.send(view[sent:])
+    except socket.timeout as e:
+        raise RpcTimeout("send timed out") from e
+    except (BrokenPipeError, ConnectionResetError, OSError) as e:
+        raise RpcClosed(f"send failed: {e}") from e
+
+
+def _recv_exact(sock: socket.socket, n: int,
+                deadline_at: Optional[float]) -> bytearray:
+    buf = bytearray(n)
+    view = memoryview(buf)
+    got = 0
+    try:
+        while got < n:
+            sock.settimeout(_remaining(deadline_at))
+            k = sock.recv_into(view[got:], n - got)
+            if k == 0:
+                raise RpcClosed("peer closed mid-message")
+            got += k
+    except socket.timeout as e:
+        raise RpcTimeout("recv timed out") from e
+    except (ConnectionResetError, OSError) as e:
+        raise RpcClosed(f"recv failed: {e}") from e
+    return buf
+
+
+def send_msg(sock: socket.socket, obj: Any, seq: int,
+             deadline_s: Optional[float] = None,
+             max_frame_bytes: int = MAX_FRAME_BYTES) -> None:
+    """Frame + send one message; raises RpcTimeout/RpcClosed/FrameError."""
+    deadline_at = (time.perf_counter() + deadline_s
+                   if deadline_s is not None else None)
+    parts = encode_message(obj)
+    total = sum(len(p) for p in parts)
+    if total > max_frame_bytes:
+        raise FrameError(
+            f"refusing to send {total}-byte frame (cap {max_frame_bytes})")
+    header = _HDR.pack(MAGIC, seq, len(parts) - 1)
+    lens = struct.pack(f"!{len(parts)}Q", *(len(p) for p in parts))
+    _sendall(sock, memoryview(header + lens), deadline_at)
+    for p in parts:
+        _sendall(sock, memoryview(p), deadline_at)
+
+
+def recv_msg(sock: socket.socket,
+             deadline_s: Optional[float] = None,
+             max_frame_bytes: int = MAX_FRAME_BYTES) -> Tuple[int, Any]:
+    """Receive + decode one message; returns ``(seq, obj)``."""
+    deadline_at = (time.perf_counter() + deadline_s
+                   if deadline_s is not None else None)
+    hdr = _recv_exact(sock, _HDR.size, deadline_at)
+    magic, seq, nbufs = _HDR.unpack(bytes(hdr))
+    if magic != MAGIC:
+        raise FrameError(f"bad magic {magic!r}")
+    if nbufs > 4096:
+        raise FrameError(f"implausible buffer count {nbufs}")
+    lens = struct.unpack(
+        f"!{nbufs + 1}Q", bytes(_recv_exact(sock, 8 * (nbufs + 1),
+                                            deadline_at)))
+    if sum(lens) > max_frame_bytes:
+        raise FrameError(
+            f"refusing {sum(lens)}-byte frame (cap {max_frame_bytes})")
+    parts = [bytes(_recv_exact(sock, n, deadline_at)) for n in lens]
+    return seq, decode_message(parts)

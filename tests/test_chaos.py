@@ -231,6 +231,50 @@ def test_inbox_cap_backpressure_and_resync():
     assert se.min_watermark() == se.version
 
 
+def test_sustained_backpressure_log_bounded_and_drains_bit_identical():
+    """A shard held at ``inbox_cap`` across MANY mutation batches: the
+    coordinator's delta log must stay bounded-but-sufficient — it carries
+    exactly the un-checkpointed suffix (pruned back to empty at each
+    checkpointing read), and the post-pressure drain replays everything
+    bit-identically.  Covers the BackpressureError path well past the
+    single-overflow case."""
+    db = Database({"crimes": make_crimes(3000, seed=16)})
+    q = _crimes_queries(db)[0]
+    cap = 2
+    se = _engine(db, 2, inbox_cap=cap)
+    se.run(q)  # capture + register + first checkpoint
+    rng = np.random.default_rng(21)
+    n_batches = 20
+    for _ in range(n_batches):
+        se.append_rows("crimes", _crimes_rows(rng, 40))
+    # Sustained pressure: inboxes pinned at the cap the whole run, every
+    # overflowed batch counted, nothing applied in between.
+    assert all(s.lag <= cap for s in se.shards)
+    assert all(s.backpressure_hits >= n_batches - cap for s in se.shards)
+    # Bounded-but-sufficient: the log holds exactly the un-checkpointed
+    # suffix — one entry per shipped batch since the last read, no more.
+    assert all(len(log) == n_batches for log in se._log)
+
+    expect = execute(q, se.db).canonical()
+    res, info = se.run(q)  # drain: inbox apply + log-suffix replay
+    assert res.canonical() == expect
+    assert not info.degraded
+    assert se.min_watermark() == se.version
+    # The checkpointing read pruned the whole suffix: log growth is capped
+    # by read frequency, not by mutation volume.
+    assert all(len(log) == 0 for log in se._log)
+
+    # Steady alternation: every wave's log tops out at the wave size and
+    # every drain stays bit-identical.
+    for _ in range(3):
+        for _ in range(5):
+            se.append_rows("crimes", _crimes_rows(rng, 40))
+        assert all(len(log) <= 5 for log in se._log)
+        res, _ = se.run(q)
+        assert res.canonical() == execute(q, se.db).canonical()
+        assert all(len(log) == 0 for log in se._log)
+
+
 def test_chaos_differential_crimes():
     """Seeded kill/stall/partition/flaky/heal replays, 1-4 shards: chaotic
     traces must equal the fault-free traces exactly."""
@@ -274,6 +318,24 @@ def test_chaos_differential_tpch_templates():
     ok, chaotic, clean = differential(make_engine, "lineitem", ops, events)
     assert ok, ("tpch chaotic trace diverged at op "
                 f"{next(i for i, (a, b) in enumerate(zip(chaotic, clean)) if a != b)}")
+
+
+def test_sharded_coordinator_selection_state_roundtrip():
+    """The sharded coordinator checkpoints ONE reuse-aware selection state
+    (shards never hold any), and a replacement coordinator restores it."""
+    db = Database({"crimes": make_crimes(2000, seed=17)})
+    q = _crimes_queries(db)[0]
+    se = _engine(db, 2)
+    se.run(q)  # one miss -> one workload entry
+    state = se.selection_state()
+    assert state["workload"]["clock"] == se.engine.workload.clock >= 1
+
+    se2 = _engine(db, 2)
+    se2.restore_selection_state(state)
+    assert se2.engine.workload.clock == se.engine.workload.clock
+    assert ([ (s, repr(p.signature())) for s, p in se2.engine.workload.entries() ]
+            == [ (s, repr(p.signature())) for s, p in se.engine.workload.entries() ])
+    assert se2.engine.selection_cache.misses == se.engine.selection_cache.misses
 
 
 def test_random_schedule_is_deterministic_and_heals():

@@ -33,6 +33,7 @@ from repro.core import (
     JoinSpec,
     Predicate,
     Query,
+    SelectionConfig,
     build_maintainer,
     capture_sketch,
     equi_depth_ranges,
@@ -288,8 +289,12 @@ def test_selection_on_appended_table_extends_sample_without_rebucketize():
     fact_np = _mk_batch(rng, 2_000)
     db = _oracle_db(fact_np, _mk_dim())
     qs = _templates(db, rng)
+    # skip_single_candidate would bypass the sample + AQR pass for this
+    # one-candidate pool; disable it — the delta-sampling path is the
+    # mechanism under test here.
     eng = PBDSEngine(db, strategy="CB-OPT-GB", n_ranges=10, theta=0.3, seed=0,
-                     min_selectivity_gain=2.0)
+                     min_selectivity_gain=2.0,
+                     selection=SelectionConfig(skip_single_candidate=False))
     eng.run(qs[0])
     eng.append_rows("sales", _mk_batch(rng, 120))
     before_b = eng.catalog.stats.get("bucketize", 0)

@@ -48,11 +48,57 @@ def test_with_retries_backoff_sequencing(monkeypatch):
     monkeypatch.setattr(time, "sleep", sleeps.append)
     fn = _failing(2)
     policy = RetryPolicy(max_attempts=4, backoff_s=0.1, backoff_mult=3.0,
-                         retryable=(_Boom,))
+                         retryable=(_Boom,), jitter=0.0)
     assert with_retries(fn, policy) == 3
-    # One sleep per retry, geometric: 0.1 then 0.3.
+    # One sleep per retry, geometric: 0.1 then 0.3 (jitter disabled).
     assert sleeps == pytest.approx([0.1, 0.3])
     assert fn.calls["n"] == 3
+
+
+def test_with_retries_jitter_decorrelates_and_is_seeded(monkeypatch):
+    def run(seed):
+        sleeps = []
+        monkeypatch.setattr(time, "sleep", sleeps.append)
+        policy = RetryPolicy(max_attempts=6, backoff_s=0.1, backoff_mult=3.0,
+                             retryable=(_Boom,), jitter=0.5, seed=seed)
+        with pytest.raises(_Boom):
+            with_retries(_failing(10), policy)
+        return sleeps
+
+    a, b, a2 = run(1), run(2), run(1)
+    # Seeded: the same seed replays the same sleeps; different seeds (two
+    # clients retrying against the same recovering shard) decorrelate.
+    assert a == pytest.approx(a2)
+    assert a != pytest.approx(b)
+    # Every sleep stays within the decorrelated-jitter envelope:
+    # [backoff_s, prev * mult * (1 + jitter)).
+    prev = 0.1 / 3.0
+    for s in a:
+        assert 0.1 <= s < prev * 3.0 * 1.5 + 1e-12
+        prev = s
+
+
+def test_with_retries_sleep_capped_to_deadline(monkeypatch):
+    sleeps = []
+    clock = {"t": 0.0}
+    monkeypatch.setattr(time, "perf_counter", lambda: clock["t"])
+
+    def fake_sleep(s):
+        sleeps.append(s)
+        clock["t"] += s
+
+    monkeypatch.setattr(time, "sleep", fake_sleep)
+    fn = _failing(10)
+    policy = RetryPolicy(max_attempts=50, backoff_s=10.0, backoff_mult=2.0,
+                         retryable=(_Boom,), deadline_s=1.0, jitter=0.0)
+    with pytest.raises(_Boom):
+        with_retries(fn, policy)
+    # The first sleep would be 10s; the cap trims it to the remaining 1s
+    # budget, and the next failure hits the exhausted deadline: the loop
+    # never sleeps past deadline_s.
+    assert sleeps == pytest.approx([1.0])
+    assert sum(sleeps) <= policy.deadline_s + 1e-9
+    assert fn.calls["n"] == 2
 
 
 def test_with_retries_on_retry_and_exhaustion(monkeypatch):

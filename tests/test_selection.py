@@ -218,6 +218,43 @@ def test_workload_log_reach_window_and_stamps():
     assert wl2.reach(q1, stamp=wl2.batch_stamp(3)) == 3  # ...plus q2@3
 
 
+def test_selection_state_survives_coordinator_restart(db):
+    """Restart persistence (the "one WorkloadLog across restarts" follow-up):
+    ``selection_state()`` round-trips through pickle into a fresh engine,
+    which keeps accumulating reach instead of reverting to reuse-blind
+    declines — the 5th miss overall flips to created exactly as it would
+    have without the restart."""
+    import pickle
+
+    def mk():
+        return PBDSEngine(db, strategy="CB-OPT-GB", n_ranges=10, theta=0.1,
+                          min_selectivity_gain=0.5, seed=0,
+                          selection=SelectionConfig(
+                              skip_single_candidate=False))
+
+    q = _broad_q()
+    eng = mk()
+    for _ in range(4):
+        _, info = eng.run(q)
+        assert not info.created  # declined while reach accumulates
+    blob = pickle.dumps(eng.selection_state())  # the checkpoint payload
+
+    fresh = mk()
+    _, info = fresh.run(q)
+    assert not info.created  # control: a blank restart is reuse-blind again
+
+    restarted = mk()
+    restarted.restore_selection_state(pickle.loads(blob))
+    assert restarted.workload.clock == eng.workload.clock
+    assert restarted.workload.reach(q) == eng.workload.reach(q)
+    assert restarted.selection_cache.hits == eng.selection_cache.hits
+    assert restarted.selection_cache.misses == eng.selection_cache.misses
+    _, info = restarted.run(q)
+    assert info.created  # reach carried over: the flip lands on schedule
+    _, info = restarted.run(q)
+    assert info.reused
+
+
 # -- incremental selection (SelectionCache) ------------------------------------
 
 def test_selection_cache_repeat_template_pays_zero(db):

@@ -1,0 +1,214 @@
+"""Real process-boundary shards (``repro.core.shard_rpc``).
+
+Contracts under test:
+
+  * the subprocess backend serves bit-identically to loopback — misses,
+    hits, batches, mutations (the transport must be invisible to results);
+  * fault injection delivers real mechanisms: ``kill`` SIGKILLs the shard
+    server (the respawned process has a NEW pid and genuinely empty state),
+    ``partition`` drops the socket with server state intact, ``flaky``
+    fails real RPCs through the retry wrapper;
+  * recovery after an actual process kill is checkpoint-rebuild +
+    delta-replay + maintainer re-registration — never a sketch re-capture
+    (pinned on the coordinator index miss counter);
+  * the seeded chaos differential harness passes over real processes, with
+    the fault-free reference running in-process fused (the cross-backend
+    gate the PR 9 bench scales to 100+ replays);
+  * ``shutdown()`` returns servers to the warm pool; no orphans.
+"""
+import dataclasses
+import os
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    Aggregate,
+    Database,
+    Having,
+    Query,
+    ShardedEngine,
+    execute,
+)
+from repro.core.datasets import make_crimes
+from repro.runtime.chaos import ChaosEvent, differential, random_ops, random_schedule
+
+pytestmark = pytest.mark.slow  # spawns real shard server processes
+
+
+def _queries(db):
+    base = Query("crimes", ("district", "year"), Aggregate("sum", "records"))
+    sums = execute(base, db).values
+    qs = [dataclasses.replace(base,
+                              having=Having(">", float(np.quantile(sums, qt))))
+          for qt in (0.5, 0.8)]
+    byear = Query("crimes", ("year",), Aggregate("sum", "records"))
+    qs.append(dataclasses.replace(byear, having=Having(
+        ">", float(np.quantile(execute(byear, db).values, 0.6)))))
+    return qs
+
+
+def _rows(rng, n):
+    t = make_crimes(n, seed=int(rng.integers(1 << 30)))
+    return {a: np.asarray(t[a]) for a in t.schema}
+
+
+def _engine(db, n_shards=2, **kw):
+    args = dict(n_ranges=16, theta=0.1, seed=0, min_selectivity_gain=2.0,
+                transport="subprocess")
+    args.update(kw)
+    return ShardedEngine(db, "crimes", "district", n_shards=n_shards, **args)
+
+
+@pytest.fixture(scope="module")
+def db():
+    return Database({"crimes": make_crimes(3000, seed=2)})
+
+
+def _pid_alive(pid):
+    try:
+        os.kill(pid, 0)
+        return True
+    except ProcessLookupError:
+        return False
+
+
+def test_subprocess_serves_identical_to_loopback(db):
+    qs = _queries(db)
+    lo = _engine(db, 2, transport="loopback")
+    se = _engine(db, 2)
+    try:
+        for q in qs:
+            (r_lo, _), (r_se, _) = lo.run(q), se.run(q)
+            assert r_se.canonical() == r_lo.canonical()
+        # Warm hits route over RPC; results stay bit-identical.
+        for q in qs:
+            (r_lo, i_lo), (r_se, i_se) = lo.run(q), se.run(q)
+            assert r_se.canonical() == r_lo.canonical()
+            assert i_se.reused and not i_se.degraded
+            assert i_se.shards_contacted == i_lo.shards_contacted
+        # Batch path too (one fused launch over RPC-fetched arrays).
+        outs_lo, outs_se = lo.run_batch(qs), se.run_batch(qs)
+        for (r1, _), (r2, _) in zip(outs_lo, outs_se):
+            assert r2.canonical() == r1.canonical()
+        # Mutations replicate over the wire.
+        rows = _rows(np.random.default_rng(5), 200)
+        lo.append_rows("crimes", rows)
+        se.append_rows("crimes", rows)
+        for q in qs:
+            assert se.run(q)[0].canonical() == lo.run(q)[0].canonical()
+    finally:
+        lo.shutdown()
+        se.shutdown()
+
+
+def test_kill_is_a_real_sigkill_and_recovery_respawns(db):
+    q = _queries(db)[0]
+    se = _engine(db, 2)
+    try:
+        se.run(q)
+        expect = execute(q, se.db).canonical()
+        misses_before = se.engine.index.misses
+
+        pid0 = se.shards[1].pid
+        assert _pid_alive(pid0)
+        se.shards[1].inject("kill")
+        assert not _pid_alive(pid0)  # genuinely SIGKILLed, not a flag
+        assert se.shards[1].pid is None
+
+        # Degraded serving through the dead process.
+        res, info = se.run(q)
+        assert res.canonical() == expect and info.degraded
+
+        # Mutations while down land in the coordinator's delta log.
+        se.append_rows("crimes", _rows(np.random.default_rng(7), 150))
+        expect = execute(q, se.db).canonical()
+
+        se.shards[1].heal()
+        res, info = se.run(q)
+        assert res.canonical() == expect and not info.degraded
+        pid1 = se.shards[1].pid
+        assert pid1 is not None and pid1 != pid0  # a NEW server process
+        assert se.health[1] == "healthy"
+        assert se.shards[1].version == se.version
+        # Checkpoint-rebuild + replay + re-registration: no re-capture.
+        assert se.engine.index.misses == misses_before
+        res, info = se.run(q)
+        assert res.canonical() == expect and not info.degraded
+    finally:
+        se.shutdown()
+
+
+def test_partition_drops_socket_but_keeps_server_state(db):
+    q = _queries(db)[0]
+    se = _engine(db, 2)
+    try:
+        se.run(q)
+        expect = execute(q, se.db).canonical()
+        pid0 = se.shards[0].pid
+        se.shards[0].inject("partition")
+        assert _pid_alive(pid0)  # the process survives a partition
+        res, info = se.run(q)
+        assert res.canonical() == expect and info.degraded
+        se.shards[0].heal()
+        res, info = se.run(q)
+        assert res.canonical() == expect and not info.degraded
+        assert se.shards[0].pid == pid0  # same server, state intact
+        assert se.health[0] == "healthy"
+    finally:
+        se.shutdown()
+
+
+def test_flaky_injects_real_rpc_errors_through_retries(db):
+    q = _queries(db)[0]
+    se = _engine(db, 2)
+    try:
+        se.run(q)
+        expect = execute(q, se.db).canonical()
+        se.run(q)
+        se.shards[1].inject("flaky", 1)
+        res, info = se.run(q)
+        assert res.canonical() == expect
+        assert se.last_route.n_retries >= 1  # a real RPC failed and retried
+        assert not info.degraded
+    finally:
+        se.shutdown()
+
+
+def test_chaos_differential_subprocess_vs_fused_smoke(db):
+    """Two seeded replay sequences of the cross-backend differential gate —
+    subprocess shards under real kills/stalls/socket drops vs fault-free
+    in-process fused serving (the bench scales this to 100+)."""
+    qs = _queries(db)
+    for n_shards, seed in ((2, 1), (3, 2)):
+        ops = random_ops(seed, 10, qs, _rows)
+        events = random_schedule(seed + 50, 10, n_shards)
+        ok, chaotic, clean = differential(
+            lambda n=n_shards: _engine(db, n, op_deadline_s=0.5),
+            "crimes", ops, events,
+            make_clean=lambda n=n_shards: _engine(db, n,
+                                                  transport="loopback"))
+        assert ok, (
+            f"n_shards={n_shards} seed={seed}: subprocess trace diverged at "
+            f"op {next(i for i, (a, b) in enumerate(zip(chaotic, clean)) if a != b)}")
+
+
+def test_shutdown_releases_processes(db):
+    q = _queries(db)[0]
+    se = _engine(db, 2)
+    pids = [s.pid for s in se.shards]
+    se.run(q)
+    se.shutdown()
+    # Servers go back to the warm pool (still alive, reset) — and a second
+    # shutdown is a no-op.
+    se.shutdown()
+    from repro.core import shard_rpc
+
+    pooled = {sp.proc.pid for sp in shard_rpc.POOL._spares}
+    assert set(pids) <= pooled or all(not _pid_alive(p) for p in pids)
+    # A killed-then-shutdown engine must not leave the dead proc around.
+    se2 = _engine(db, 2)
+    pid = se2.shards[0].pid
+    se2.shards[0].inject("kill")
+    se2.shutdown()
+    assert not _pid_alive(pid)
