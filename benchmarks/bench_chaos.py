@@ -181,7 +181,7 @@ def _run_recovery(n_rows: int):
     for _ in range(RECOVERY_CYCLES):
         for e in list(se.engine.index.entries()):
             se.engine.index.remove(e)
-            se._unregister(id(e))
+            se._unregister(e.reg_id)
         t0 = time.perf_counter()
         created = 0
         for q in qs:

@@ -266,7 +266,7 @@ def _run_recovery(n_rows: int):
         try:
             for e in list(se.engine.index.entries()):
                 se.engine.index.remove(e)
-                se._unregister(id(e))
+                se._unregister(e.reg_id)
             t0 = time.perf_counter()
             se._rebuild_shard(1)  # mandatory either way: the state is gone
             created = 0

@@ -11,7 +11,9 @@ quick scale), ``BENCH_chaos.json`` (>= 100 chaos-differential replay
 sequences, >= 3x recovery-vs-recapture, <= 5% health-tracking tax) and
 ``BENCH_rpc.json`` (>= 100 cross-backend replays: real subprocess shards vs
 in-process fused, <= 1.3x transport tax on warm hits, >= 3x process-kill
-recovery vs cold re-capture) so
+recovery vs cold re-capture) and ``BENCH_failover.json`` (standby takeover
+>= 3x cheaper than cold rebuild + re-capture, <= 5% replication tax on warm
+fused serving) so
 successive PRs have a perf trajectory to compare against.  The dry-run/roofline artifacts are
 produced by ``repro.launch.dryrun`` + ``benchmarks.roofline`` (they need the
 512-device XLA flag and hence their own process).
@@ -44,6 +46,7 @@ def main() -> None:
         bench_fig4_bootstrap,
         bench_fig7_strategies,
         bench_fig8_accuracy,
+        bench_failover,
         bench_fig9_endtoend,
         bench_maintenance,
         bench_rpc,
@@ -80,6 +83,10 @@ def main() -> None:
         "rpc": functools.partial(
             bench_rpc.run,
             json_path="BENCH_rpc.json" if args.json else None,
+        ),
+        "failover": functools.partial(
+            bench_failover.run,
+            json_path="BENCH_failover.json" if args.json else None,
         ),
     }
     failed = []

@@ -272,3 +272,45 @@ try:
     assert res_h.canonical() == execute(q2, rpc.db).canonical()
 finally:
     rpc.shutdown()                       # servers return to the warm pool
+
+# --- 10. Coordinator failover: kill the coordinator, the standby takes over --
+# The shards can die; now the *coordinator* can too.  A FailoverCoordinator
+# streams every metadata mutation (registrations, delta logs, checkpoints,
+# selection state) to a warm standby as sequenced replication records.  Kill
+# the coordinator and the standby folds that stream into a full replacement:
+# it re-attaches to the still-running shard servers under a bumped epoch —
+# the shards' state never moves, and every index hit is STILL a hit (the
+# registrations replicated, so nothing is re-captured).  A partitioned old
+# coordinator that still believes it is in charge gets fenced: its ops
+# raise StaleEpochError at the shard.
+from repro.core import StaleEpochError
+from repro.core.standby import FailoverCoordinator
+
+fc = FailoverCoordinator(ShardedEngine(
+    big, "crimes", "district", n_shards=2, n_ranges=100,
+    theta=0.05, min_selectivity_gain=0.98, transport="subprocess"))
+try:
+    fc.run(q2)                           # cold: capture + register
+    res_a, info_a = fc.run(q2)           # warm: index hit
+    assert info_a.reused
+    pids = [s.pid for s in fc.shards]
+
+    fc.inject_coord("coord_kill")        # the coordinator is GONE
+    misses = fc.index.misses
+    res_b, info_b = fc.run(q2)           # the standby serves the same hit
+    print(f"takeover: epoch={fc.engine.epoch} shard pids {pids} -> "
+          f"{[s.pid for s in fc.shards]} reused={info_b.reused}")
+    assert info_b.reused and fc.index.misses == misses  # no re-capture
+    assert [s.pid for s in fc.shards] == pids           # no state moved
+    assert res_b.canonical() == res_a.canonical()
+
+    fc.inject_coord("coord_partition")   # now a zombie coordinator lingers
+    try:
+        fc.zombie.shards[0].catch_up(fc.zombie.version)
+        raise AssertionError("zombie write went through?")
+    except StaleEpochError as e:
+        print(f"zombie coordinator fenced: {e}")
+    res_c, _ = fc.run(q2)                # takeovers chain: #3 serves too
+    assert res_c.canonical() == res_a.canonical()
+finally:
+    fc.shutdown()

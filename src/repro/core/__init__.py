@@ -64,8 +64,17 @@ from repro.core.shard import (
     ShardPlan,
     ShardUnavailableError,
     ShardedEngine,
+    StaleEpochError,
     plan_fragments,
 )
+from repro.core.replication import (
+    InProcessReplica,
+    MetadataStore,
+    ReplicationError,
+    ReplicationRecord,
+    SubprocessReplica,
+)
+from repro.core.standby import FailoverCoordinator, replica_factory
 
 __all__ = [
     "Catalog", "default_catalog",
@@ -83,5 +92,8 @@ __all__ = [
     "SelectionResult", "candidate_pool", "select_attribute",
     "ColumnTable", "Database", "FragmentLayout", "encode_groups", "from_numpy",
     "FragmentShard", "RouteInfo", "ShardPlan", "ShardedEngine", "plan_fragments",
-    "BackpressureError", "ShardUnavailableError",
+    "BackpressureError", "ShardUnavailableError", "StaleEpochError",
+    "InProcessReplica", "MetadataStore", "ReplicationError",
+    "ReplicationRecord", "SubprocessReplica",
+    "FailoverCoordinator", "replica_factory",
 ]

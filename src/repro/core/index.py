@@ -64,6 +64,11 @@ class IndexEntry:
     # Incremental-maintenance state for this sketch (a
     # ``repro.core.maintenance.SketchMaintainer``); opaque to the index.
     maintainer: Optional[object] = None
+    # Stable registration id assigned by the serving layer (0 = unassigned).
+    # Shard-side maintainer keys and replication records use this instead of
+    # ``id(entry)`` so a standby coordinator's rebuilt entries re-attach to
+    # the maintainers the shards already hold.
+    reg_id: int = 0
 
 
 class SketchIndex:
@@ -120,10 +125,11 @@ class SketchIndex:
         return e.sketch if e is not None else None
 
     def insert(self, q: Query, sketch: ProvenanceSketch,
-               maintainer: Optional[object] = None) -> None:
+               maintainer: Optional[object] = None) -> IndexEntry:
         self._clock += 1
-        self._entries.setdefault(_pred_key(q), []).append(
-            IndexEntry(q, sketch, last_hit=self._clock, maintainer=maintainer))
+        e = IndexEntry(q, sketch, last_hit=self._clock, maintainer=maintainer)
+        self._entries.setdefault(_pred_key(q), []).append(e)
+        return e
 
     def entries(self) -> List[IndexEntry]:
         return [e for v in self._entries.values() for e in v]

@@ -177,6 +177,102 @@ class SketchMaintainer:
                 m.frag_prov[f] += c
         return m
 
+    # -- replication -----------------------------------------------------------
+    def state_dict(self) -> dict:
+        """Portable counter state for coordinator replication.
+
+        Everything a standby needs to resurrect this maintainer without the
+        O(n log n) group re-encode of a fresh build: per-group aggregates,
+        the deduped (group, fragment) incidence and the threshold products,
+        pinned to the fact table's (uid, version) — and the join dimension's,
+        when there is one — so a restore can delta-replay forward with
+        ``apply``.  ``key_index`` is derivable from ``group_values`` and is
+        rebuilt on restore rather than shipped.
+        """
+        gs: List[int] = []
+        fs: List[int] = []
+        cs: List[int] = []
+        for g, row in enumerate(self.incidence):
+            for f, c in row.items():
+                gs.append(g)
+                fs.append(f)
+                cs.append(c)
+        return {
+            "table_uid": self.table_uid,
+            "version": self.version,
+            "exact": bool(self.exact),
+            "conservative": bool(self.conservative),
+            "values_integral": bool(self._values_integral),
+            "right_uid": None if self.right is None else self.right.uid,
+            "right_version": None if self.right is None else self.right.version,
+            "n_groups": int(self.n_groups),
+            "group_values": {a: v.copy() for a, v in self.group_values.items()},
+            "sums": self.sums.copy(),
+            "counts": self.counts.copy(),
+            "incidence": (np.asarray(gs, dtype=np.int64),
+                          np.asarray(fs, dtype=np.int64),
+                          np.asarray(cs, dtype=np.int64)),
+            "passing": self.passing.copy(),
+            "counted": self.counted.copy(),
+            "frag_prov": self.frag_prov.copy(),
+        }
+
+    @classmethod
+    def from_state(cls, q: Query, db: Database, ranges: RangeSet,
+                   state: dict) -> "SketchMaintainer":
+        """Resurrect a maintainer from ``state_dict`` output.
+
+        Counters restore verbatim and ``key_index`` re-derives from the
+        shipped ``group_values`` (the same lazy derivation ``GroupEncoding``
+        uses), so the result matches the maintainer that produced the state.
+        Raises ``MaintenanceError`` when the state cannot be trusted under
+        the current database — wrong fact-table lineage, or a join dimension
+        at a different version than the counters were folded against — so
+        callers fall back to an eager rebuild.
+        """
+        if hasattr(ranges, "parts") or not hasattr(ranges, "attr"):
+            raise MaintenanceError("only single-attribute RangeSet partitions "
+                                   "are maintainable; composite sketches re-capture")
+        fact = db[q.table]
+        if state["table_uid"] != fact.uid:
+            raise MaintenanceError(
+                f"replicated maintainer is for table uid {state['table_uid']}, "
+                f"not {fact.uid}")
+        m = object.__new__(cls)
+        m.q = q
+        m.ranges = ranges
+        m.table_uid = state["table_uid"]
+        m.version = int(state["version"])
+        m.exact = bool(state["exact"])
+        m.conservative = bool(state["conservative"])
+        m._values_integral = bool(state["values_integral"])
+        if q.join is not None:
+            right = db[q.join.right]
+            if (right.uid != state["right_uid"]
+                    or right.version != state["right_version"]):
+                raise MaintenanceError("join dimension table moved since the "
+                                       "state was replicated; re-capture")
+            m.right = right
+        else:
+            m.right = None
+        m.n_groups = int(state["n_groups"])
+        m.group_values = {a: np.asarray(v).copy()
+                          for a, v in state["group_values"].items()}
+        cols = [m.group_values[a].tolist() for a in q.groupby]
+        m.key_index = ({key: g for g, key in enumerate(zip(*cols))}
+                       if cols else {(): 0})
+        m.sums = np.asarray(state["sums"], dtype=np.float64).copy()
+        m.counts = np.asarray(state["counts"], dtype=np.int64).copy()
+        m.incidence = [dict() for _ in range(m.n_groups)]
+        gs, fs, cs = state["incidence"]
+        for g, f, c in zip(gs.tolist(), fs.tolist(), cs.tolist()):
+            m.incidence[g][f] = c
+        m._row_owned = np.ones(m.n_groups, dtype=bool)
+        m.passing = np.asarray(state["passing"], dtype=bool).copy()
+        m.counted = np.asarray(state["counted"], dtype=bool).copy()
+        m.frag_prov = np.asarray(state["frag_prov"], dtype=np.int64).copy()
+        return m
+
     # -- group-aggregate bookkeeping ------------------------------------------
     def _agg_f32(self) -> np.ndarray:
         """Per-group aggregate values with the executor's float32 semantics."""

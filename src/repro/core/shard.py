@@ -60,6 +60,7 @@ from repro.runtime import guards
 from repro.runtime.guards import hot_path
 from repro.core.index import IndexEntry
 from repro.core.maintenance import MaintenanceError, SketchMaintainer, maintainer_for
+from repro.core.replication import ReplicationRecord
 from repro.core.queries import (
     Query,
     QueryResult,
@@ -93,6 +94,14 @@ class ShardUnavailableError(RuntimeError):
 class BackpressureError(RuntimeError):
     """A shard's inbox is at its depth cap; the coordinator must drain or
     let its per-shard delta log carry the entry until the next resync."""
+
+
+class StaleEpochError(RuntimeError):
+    """A shard rejected an op fenced behind the coordinator epoch it has
+    seen.  Deliberately NOT a ``ShardUnavailableError``: the serving layer
+    must never retry a fenced-out coordinator's op — the op is invalid, not
+    transient, and the only correct reaction is to stop acting as the
+    coordinator (a newer one has taken over)."""
 
 
 # ---------------------------------------------------------------------------
@@ -144,9 +153,53 @@ def plan_fragments(
     return ShardPlan(n_shards=n_shards, owner=owner)
 
 
-# ---------------------------------------------------------------------------
-# One shard
-# ---------------------------------------------------------------------------
+def local_table_for(
+    shard_id: int,
+    plan: ShardPlan,
+    ranges: RangeSet,
+    clustered: ColumnTable,
+    version: int = 0,
+) -> ColumnTable:
+    """Gather ``shard_id``'s owned rows out of the coordinator's clustered
+    table into a shard-local clustered layout.
+
+    Factored out of ``FragmentShard.__init__`` so the peer-checkpoint path
+    can derive the exact same local table on the coordinator and ship it to
+    a *peer* shard process — recovery then pulls shard-sized state from the
+    peer instead of re-shipping the full table from the coordinator.
+    """
+    if clustered.layout is None:
+        raise ValueError("shards are built from a clustered table")
+    owned = plan.fragments_of(shard_id)
+    lay = clustered.layout
+    off = lay.offsets
+    parts = [np.arange(off[f], off[f + 1]) for f in owned]
+    n_tail_local = 0
+    if lay.tail:
+        # Rebuild-from-coordinator path (failover/rebalance): the source
+        # table may carry an unsorted append tail — route its rows by
+        # fragment ownership exactly like ``ShardedEngine.append_rows``.
+        n = clustered.num_rows
+        tail_vals = np.asarray(clustered[ranges.attr])[n - lay.tail:]
+        tail_frag = np.asarray(ranges.bucketize(jnp.asarray(tail_vals)))  # analyze: waive[SYNC01]: recovery/rebuild path (shard construction), not a serving hot path — tail routing needs host fragment ids
+        own_tail = (n - lay.tail) + np.nonzero(
+            plan.owner[tail_frag] == shard_id)[0]
+        n_tail_local = int(own_tail.shape[0])
+        parts.append(own_tail)
+    idx = np.concatenate(parts) if parts else np.empty(0, dtype=np.int64)
+    local = clustered.gather(jnp.asarray(idx))
+    local_sizes = np.array([off[f + 1] - off[f] for f in owned],
+                           dtype=np.int64)
+    layout = FragmentLayout(
+        attr=ranges.attr,
+        # Never collides with a RangeSet.key(): local fragment ids are a
+        # different coordinate system from the global partition's.
+        ranges_key=("shard", shard_id, ranges.key()),
+        offsets=np.concatenate([[0], np.cumsum(local_sizes)]).astype(np.int64),
+        tail=n_tail_local,
+    )
+    return ColumnTable(local.name, local.columns, clustered.primary_key,
+                       layout, version=version)
 
 
 class FragmentShard:
@@ -171,9 +224,8 @@ class FragmentShard:
         device=None,
         inbox_cap: Optional[int] = None,
         version: int = 0,
+        local_table: Optional[ColumnTable] = None,
     ):
-        if clustered.layout is None:
-            raise ValueError("shards are built from a clustered table")
         self.shard_id = shard_id
         self.ranges = ranges
         self.owned = plan.fragments_of(shard_id)
@@ -181,38 +233,11 @@ class FragmentShard:
         self._local_of_global = np.full(ranges.n_ranges, -1, dtype=np.int64)
         self._local_of_global[self.owned] = np.arange(self.owned.shape[0])
 
-        lay = clustered.layout
-        off = lay.offsets
-        parts = [np.arange(off[f], off[f + 1]) for f in self.owned]
-        n_tail_local = 0
-        if lay.tail:
-            # Rebuild-from-coordinator path (failover/rebalance): the source
-            # table may carry an unsorted append tail — route its rows by
-            # fragment ownership exactly like ``ShardedEngine.append_rows``.
-            n = clustered.num_rows
-            tail_vals = np.asarray(clustered[ranges.attr])[n - lay.tail:]
-            tail_frag = np.asarray(ranges.bucketize(jnp.asarray(tail_vals)))
-            own_tail = (n - lay.tail) + np.nonzero(
-                plan.owner[tail_frag] == shard_id)[0]
-            n_tail_local = int(own_tail.shape[0])
-            parts.append(own_tail)
-        idx = np.concatenate(parts) if parts else np.empty(0, dtype=np.int64)
-        local = clustered.gather(jnp.asarray(idx))
-        local_sizes = np.array([off[f + 1] - off[f] for f in self.owned],
-                               dtype=np.int64)
-        layout = FragmentLayout(
-            attr=ranges.attr,
-            # Never collides with a RangeSet.key(): local fragment ids are a
-            # different coordinate system from the global partition's.
-            ranges_key=("shard", shard_id, ranges.key()),
-            offsets=np.concatenate([[0], np.cumsum(local_sizes)]).astype(np.int64),
-            tail=n_tail_local,
-        )
+        if local_table is None:
+            local_table = local_table_for(shard_id, plan, ranges, clustered,
+                                          version=version)
         self.device = device
-        self.table: Optional[ColumnTable] = place_table(
-            ColumnTable(local.name, local.columns, clustered.primary_key, layout,
-                        version=version),
-            device)
+        self.table: Optional[ColumnTable] = place_table(local_table, device)
         self.dims: Dict[str, ColumnTable] = {
             k: place_table(v, device) for k, v in dims.items()}
         self.catalog = Catalog()
@@ -230,6 +255,42 @@ class FragmentShard:
         self.fault: Optional[str] = None  # None|"dead"|"stall"|"partition"|"flaky"
         self.stall_s = 0.0
         self._flaky_fails = 0
+        # Highest coordinator epoch this shard has accepted an op from.
+        # Survives kills/rebuilds of the shard's *state* — it is process
+        # identity, not table state — so a fenced-out coordinator stays
+        # fenced out even across shard recovery.
+        self.epoch = 0
+
+    @classmethod
+    def from_local(
+        cls,
+        shard_id: int,
+        plan: ShardPlan,
+        ranges: RangeSet,
+        local_table: ColumnTable,
+        dims: Mapping[str, ColumnTable],
+        device=None,
+        inbox_cap: Optional[int] = None,
+    ) -> "FragmentShard":
+        """Build a shard directly from an already-local table (peer-replicated
+        checkpoint recovery) — no coordinator-table gather, no full reship."""
+        return cls(shard_id, plan, ranges, clustered=None, dims=dims,
+                   device=device, inbox_cap=inbox_cap,
+                   local_table=local_table)
+
+    # -- epoch fencing ---------------------------------------------------------
+    def fence(self, epoch: int, op: str = "") -> None:
+        """Reject ops fenced behind the newest coordinator epoch seen.
+
+        Monotone max: a newer coordinator's first op bumps the shard's epoch,
+        after which every op from the old (possibly partitioned) coordinator
+        raises ``StaleEpochError`` — zombie mutations cannot land.
+        """
+        if epoch < self.epoch:
+            raise StaleEpochError(
+                f"shard {self.shard_id}: coordinator epoch {epoch} is fenced "
+                f"behind {self.epoch} ({op or 'op'})")
+        self.epoch = epoch
 
     # -- fault injection -------------------------------------------------------
     def _guard(self, op: str) -> None:
@@ -583,10 +644,11 @@ class _Registered:
     """Routed-serving state for one logical index entry.
 
     ``group_local`` selects the bits source: per-shard maintainers when every
-    group is shard-local, the coordinator's maintainer otherwise.  ``entry``
-    is a strong reference: registration state is keyed by ``id(entry)``, so
-    the entry must stay alive while registered or a recycled id could alias
-    a new entry onto stale shard state.
+    group is shard-local, the coordinator's maintainer otherwise.
+    Registration state is keyed by ``entry.reg_id`` — a stable counter the
+    coordinator assigns at admission and replicates, so a standby
+    coordinator's rebuilt entries re-attach to the maintainers the shard
+    processes already hold without re-registration.
     """
 
     entry: IndexEntry
@@ -619,6 +681,11 @@ class RouteInfo:
     degraded: bool = False
     failed_shards: Tuple[int, ...] = ()
     n_retries: int = 0
+    # Cumulative count of peer-mirror refreshes that could not land (peer
+    # dead/backpressured): while nonzero-and-growing, a shard kill may pay a
+    # full coordinator-checkpoint re-ship instead of the delta-sized peer
+    # restore.  Surfaced so operators see silent staleness, not just feel it.
+    stale_checkpoints: int = 0
 
     @property
     def t_critical_s(self) -> float:
@@ -661,6 +728,8 @@ class ShardedEngine:
         inbox_cap: Optional[int] = 4096,
         retry_policy: Optional[RetryPolicy] = None,
         transport: str = "loopback",
+        epoch: int = 0,
+        _boot: Optional[Mapping] = None,
         **engine_kwargs,
     ):
         for k in ("cluster_tables", "compact_tail_frac"):
@@ -668,19 +737,36 @@ class ShardedEngine:
                 # Physical re-permutes of the coordinator table would desync
                 # the global-row -> shard-row map that delete routing needs.
                 raise ValueError(f"{k} is coordinator-managed in ShardedEngine")
+        boot = dict(_boot or {})
         self.table_name = table
         self.attr = attr
         self.n_shards = n_shards
-        self.ranges = equi_depth_ranges(db[table], attr, n_ranges)
-        clustered = db[table].cluster_by(self.ranges)
+        if "ranges" in boot:
+            # Takeover path (``from_replica``): the partition, clustering and
+            # placement are *adopted* from the replicated bootstrap, never
+            # re-derived — re-deriving them on the post-mutation table would
+            # silently re-fragment and orphan every registered sketch.
+            self.ranges = boot["ranges"]
+            clustered = boot["clustered"]
+        else:
+            self.ranges = equi_depth_ranges(db[table], attr, n_ranges)
+            clustered = db[table].cluster_by(self.ranges)
         self.engine = PBDSEngine(
             db.with_table(clustered), strategy=strategy, n_ranges=n_ranges,
             **engine_kwargs)
         # The serving partition IS the engine's partition for ``attr``, so a
         # sketch selected on it routes as fragment slices on every shard.
         self.engine._ranges_cache[(table, attr)] = self.ranges
-        self.plan = plan_fragments(
-            np.diff(clustered.layout.offsets), n_shards, policy=policy)
+        if "owner" in boot:
+            self.plan = ShardPlan(n_shards=n_shards,
+                                  owner=np.asarray(boot["owner"]))
+        else:
+            self.plan = plan_fragments(
+                np.diff(clustered.layout.offsets), n_shards, policy=policy)
+        self.policy = policy
+        self.use_devices = use_devices
+        self._engine_kwargs = dict(engine_kwargs)
+        self._n_ranges = n_ranges
         dims = {k: v for k, v in self.engine.db.tables.items() if k != table}
         self._devices = shard_devices(n_shards, use_devices)
         self._inbox_cap = inbox_cap
@@ -693,7 +779,16 @@ class ShardedEngine:
         from repro.core import shard_rpc  # deferred: shard_rpc imports us
 
         self.transport = transport
-        if transport == "loopback":
+        # Coordinator epoch: carried on every shard op; shards fence out any
+        # lower epoch (see ``FragmentShard.fence``), so a superseded
+        # coordinator cannot land zombie mutations after a takeover.
+        self.epoch = int(epoch)
+        if boot.get("attach") is not None:
+            # Takeover re-attach: wrap the *live* shard transports (loopback
+            # FragmentShards / subprocess server sockets) in fresh clients
+            # owned by this coordinator — no shard state moves.
+            self.shards = [c.clone_for_takeover() for c in boot["attach"]]
+        elif transport == "loopback":
             self.shards = [
                 shard_rpc.LoopbackShardClient(
                     FragmentShard(s, self.plan, self.ranges, clustered, dims,
@@ -709,22 +804,51 @@ class ShardedEngine:
             ]
         else:
             raise ValueError(f"unknown transport {transport!r}")
+        for c in self.shards:
+            c.epoch = self.epoch
         # Global-row -> (shard, local-row) map, maintained across mutations so
         # coordinator delete masks translate to shard-local masks.
-        n = clustered.num_rows
-        frag_of_row = np.searchsorted(
-            clustered.layout.offsets, np.arange(n), side="right") - 1
-        self._row_shard = self.plan.owner[frag_of_row]
-        self._row_local = np.empty(n, dtype=np.int64)
-        self._shard_rows = np.zeros(n_shards, dtype=np.int64)
-        for s in range(n_shards):
-            sel = self._row_shard == s
-            self._shard_rows[s] = int(sel.sum())
-            self._row_local[sel] = np.arange(self._shard_rows[s])
+        if boot:
+            # The adopted table may carry an unsorted append tail; the full
+            # recompute routes it by ownership like ``append_rows`` did.
+            self._rebuild_row_maps()
+        else:
+            n = clustered.num_rows
+            frag_of_row = np.searchsorted(
+                clustered.layout.offsets, np.arange(n), side="right") - 1
+            self._row_shard = self.plan.owner[frag_of_row]
+            self._row_local = np.empty(n, dtype=np.int64)
+            self._shard_rows = np.zeros(n_shards, dtype=np.int64)
+            for s in range(n_shards):
+                sel = self._row_shard == s
+                self._shard_rows[s] = int(sel.sum())
+                self._row_local[sel] = np.arange(self._shard_rows[s])
         # Coordinator mutation count == the read watermark.
-        self.version = 0
-        # id(IndexEntry) -> routed-serving state for that logical entry.
+        self.version = int(boot.get("version", 0))
+        # reg_id -> routed-serving state for that logical entry.
         self._registered: Dict[int, _Registered] = {}
+        # Monotone registration-id source; replicated so a standby keeps
+        # minting ids the shards have never seen.
+        self._reg_counter = int(boot.get("reg_counter", 1))
+        # -- metadata replication (``core/replication``): every metadata
+        # mutation is streamed as a monotonically-sequenced record to the
+        # attached replica.  ``None`` = not replicating; a publish failure
+        # degrades (drops the replica) but never takes down serving.
+        self._replica = None
+        self._rep_seq = 0
+        self.replica_degraded = False
+        # -- peer-replicated checkpoints (subprocess transport): shard
+        # ``sid``'s local table is mirrored on shard ``(sid+1) % S``'s server
+        # process and kept current by the same per-shard deltas ``_ship``
+        # already produces, so recovery of a killed server pulls shard-sized
+        # state from the peer instead of re-shipping the full table.
+        self._peer_mirroring = (transport == "subprocess" and n_shards > 1)
+        self._peer_ok = [False] * n_shards
+        self.peer_restores = 0
+        # Stale-checkpoint signal (satellite): a checkpoint or peer mirror
+        # that could not advance past a failure is *counted*, not silently
+        # left behind; ``RouteInfo.stale_checkpoints`` surfaces the total.
+        self.stale_checkpoints = [0] * n_shards
         self.last_route: Optional[RouteInfo] = None
         # Fused SPMD serving: stacked one-launch execution (the default);
         # ``fused=False`` keeps the per-shard host loop (benchmark baseline,
@@ -754,10 +878,200 @@ class ShardedEngine:
         # the delta log of everything shipped past it.  Recovery of a lost
         # shard is checkpoint-restore + delta-replay + maintainer
         # re-registration — never a from-scratch re-capture.
-        self._ckpt: List[Optional["shard_rpc.ShardCheckpoint"]] = [
-            c.make_checkpoint(clustered, 0) for c in self.shards]
-        self._log: List[List[Tuple[int, str, object]]] = [
-            [] for _ in range(n_shards)]
+        if boot.get("attach") is not None:
+            # Live shards keep their state; the replicated delta-log suffix
+            # covers anything a shard has not yet drained or ever received.
+            self._ckpt = []
+            for c in self.shards:
+                try:
+                    self._ckpt.append(
+                        None if c.state_lost
+                        else c.make_checkpoint(self.db[table], self.version))
+                except ShardUnavailableError:
+                    self._ckpt.append(None)
+            logs = boot.get("log") or [[] for _ in range(n_shards)]
+            self._log = [list(entries) for entries in logs]
+        else:
+            self._ckpt = [c.make_checkpoint(clustered, 0) for c in self.shards]
+            self._log = [[] for _ in range(n_shards)]
+
+    # -- metadata replication / standby takeover -------------------------------
+    def _emit(self, kind: str, payload) -> None:
+        if self._replica is None:
+            return
+        self._rep_seq += 1
+        try:
+            self._replica.publish(ReplicationRecord(self._rep_seq, kind,
+                                                    payload))
+        except Exception:
+            # Replica loss degrades replication, never serving: the active
+            # coordinator keeps answering queries without a standby.
+            self._replica = None
+            self.replica_degraded = True
+
+    def _plan_token(self) -> int:
+        """Fingerprint of the current placement; stamps peer-mirrored
+        checkpoints so a mirror built under a pre-rebalance plan can never
+        be adopted under the new one."""
+        return hash((self.n_shards, self.plan.owner.tobytes()))
+
+    def _reg_payloads(self, entries: Sequence[IndexEntry]) -> List[dict]:
+        out = []
+        for e in entries:
+            reg = self._registered.get(e.reg_id)
+            m = e.maintainer
+            out.append({
+                "reg_id": e.reg_id,
+                "query": e.query,
+                "ranges": reg.ranges if reg is not None else e.sketch.ranges,
+                "registered": reg is not None,
+                "group_local": (reg.group_local if reg is not None else False),
+                # Counter state rides along (miss-path only — registration is
+                # already a capture) so takeover restores the maintainer
+                # instead of paying the per-sketch group re-encode.
+                "state": (m.state_dict()
+                          if isinstance(m, SketchMaintainer) else None),
+            })
+        return out
+
+    def _boot_payload(self) -> dict:
+        dims = {k: v.collapse() for k, v in self.engine.db.tables.items()
+                if k != self.table_name}
+        return {
+            "table": self.table_name,
+            "attr": self.attr,
+            "n_shards": self.n_shards,
+            "n_ranges": self._n_ranges,
+            "strategy": self.engine.strategy,
+            "policy": self.policy,
+            "use_devices": self.use_devices,
+            "fused": self.fused,
+            "max_registered": self.max_registered,
+            "health": self.health_tracking,
+            "op_deadline_s": self.op_deadline_s,
+            "inbox_cap": self._inbox_cap,
+            "transport": self.transport,
+            "engine_kwargs": dict(self._engine_kwargs),
+            "ranges": self.ranges,
+            "owner": np.asarray(self.plan.owner),
+            "clustered": self.db[self.table_name].collapse(),
+            "dims": dims,
+            "version": self.version,
+            "log": [list(entries) for entries in self._log],
+            "ckpt_versions": [None if c is None else c.version
+                              for c in self._ckpt],
+            "reg_counter": self._reg_counter,
+            "selection": self.selection_state(),
+            "epoch": self.epoch,
+        }
+
+    def attach_replica(self, replica) -> None:
+        """Start streaming metadata mutations to ``replica`` (warm standby).
+
+        Emits a full bootstrap — base state, current delta logs, every live
+        registration, the selection snapshot — so a standby attached mid-life
+        (or re-armed by a freshly-promoted coordinator) holds everything;
+        every later metadata mutation streams as its own sequenced record.
+        """
+        self._replica = replica
+        self._rep_seq = 0
+        self.replica_degraded = False
+        self._emit("bootstrap", self._boot_payload())
+        regs = self._reg_payloads(
+            [e for e in self.engine.index.entries() if e.reg_id > 0])
+        if regs:
+            self._emit("register", regs)
+
+    @classmethod
+    def from_replica(cls, store, *, epoch: int,
+                     attach: Optional[Sequence] = None) -> "ShardedEngine":
+        """Standby takeover: rebuild a serving coordinator from replicated
+        metadata alone.
+
+        * The clustered base table + the replicated mutation log replay to
+          the exact coordinator table (same row order, same (uid, version)
+          lineage — so shard-side freshness tokens keep matching).
+        * Partition, placement and delta-log suffixes are adopted, never
+          re-derived.
+        * Index entries rebuild **locally** under their replicated
+          ``reg_id``s — replicated maintainer counter state restores via
+          ``SketchMaintainer.from_state`` + delta replay (falling back to an
+          eager ``maintainer_for`` counting pass when the state is stale or
+          unwalkable) — the shards' maintainers are still keyed by those
+          ids, so hits stay hits with zero re-registration RPCs and
+          ``index.misses`` stays flat: no re-capture, ever.
+        * ``attach`` re-wraps the *live* shard transports; no full-table
+          reship to any shard that still has its state.
+
+        The caller owns fencing: construct with a bumped ``epoch``, then the
+        first catch-up round stamps it onto every shard.
+        """
+        b = store.boot
+        if b is None:
+            raise RuntimeError("replica has no bootstrap record")
+        table_name = b["table"]
+        fact = b["clustered"]
+        dims = dict(b["dims"])
+        for mkind, tname, payload, _v in store.muts:
+            if tname == table_name:
+                fact = (fact.append(payload) if mkind == "append"
+                        else fact.delete(payload))
+                if fact.delta_depth() >= 64:
+                    fact = fact.collapse()
+            else:
+                t = dims[tname]
+                dims[tname] = (t.append(payload) if mkind == "append"
+                               else t.delete(payload))
+        db = Database({table_name: fact, **dims})
+        self = cls(
+            db, table_name, b["attr"], b["n_shards"],
+            n_ranges=b["n_ranges"], strategy=b["strategy"],
+            policy=b["policy"], use_devices=b["use_devices"],
+            fused=b["fused"], max_registered=b["max_registered"],
+            health=b["health"], op_deadline_s=b["op_deadline_s"],
+            inbox_cap=b["inbox_cap"], transport=b["transport"],
+            epoch=epoch,
+            _boot=dict(
+                ranges=b["ranges"], clustered=fact, owner=store.owner,
+                attach=attach, version=store.version,
+                log=store.ship_logs(b["n_shards"]),
+                reg_counter=store.reg_counter),
+            **b["engine_kwargs"],
+        )
+        if store.selection:
+            self.restore_selection_state(store.selection)
+        catalog = self.engine.catalog
+        pool: List[SketchMaintainer] = []
+        for rid, p in store.regs.items():
+            q, ranges = p["query"], p["ranges"]
+            m = None
+            state = p.get("state")
+            if state is not None:
+                # Fast path: resurrect the replicated counter state and
+                # delta-replay it to the current version — skips the
+                # per-sketch group re-encode, which dominates takeover cost.
+                try:
+                    m = SketchMaintainer.from_state(
+                        q, self.engine.db, ranges, state)
+                    m.apply(self.engine.db[q.table], self.engine.db)
+                except MaintenanceError:
+                    m = None  # stale/unwalkable state: rebuild eagerly below
+            try:
+                if m is None:
+                    m = maintainer_for(q, self.engine.db, ranges, catalog,
+                                       pool)
+                sketch = m.to_sketch(self.engine.db[q.table], catalog)
+            except MaintenanceError:
+                continue  # unrebuildable under the current tables: drop it
+            pool.append(m)
+            e = self.engine.index.insert(q, sketch, maintainer=m)
+            e.reg_id = rid
+            self.engine._ranges_cache.setdefault((q.table, ranges.attr),
+                                                 ranges)
+            if p["registered"]:
+                self._registered[rid] = _Registered(e, ranges,
+                                                    p["group_local"])
+        return self
 
     # -- convenience -----------------------------------------------------------
     @property
@@ -781,6 +1095,9 @@ class ShardedEngine:
         """
         if table_name != self.table_name:
             self.engine.append_rows(table_name, rows)
+            self._emit("mutation", ("append", table_name,
+                                    {k: np.asarray(v) for k, v in rows.items()},
+                                    None, None))
             self._replicate_dim(table_name)
             return
         rows_np = {k: np.asarray(v) for k, v in rows.items()}
@@ -791,28 +1108,36 @@ class ShardedEngine:
         counts = np.bincount(shard_of, minlength=self.n_shards)
         new_local = np.empty(shard_of.shape[0], dtype=np.int64)
         version = self.version + 1
+        ships = []
         for s, shard in enumerate(self.shards):
             sel = shard_of == s
-            self._ship(s, version, "append", {k: v[sel] for k, v in rows_np.items()})
+            payload = {k: v[sel] for k, v in rows_np.items()}
+            self._ship(s, version, "append", payload)
+            ships.append(payload)
             new_local[sel] = self._shard_rows[s] + np.arange(counts[s])
         self._shard_rows += counts
         self._row_shard = np.concatenate([self._row_shard, shard_of])
         self._row_local = np.concatenate([self._row_local, new_local])
         self.engine.append_rows(table_name, rows)
         self.version += 1
+        self._emit("mutation", ("append", table_name, rows_np, version, ships))
 
     def delete_rows(self, table_name: str, mask: np.ndarray) -> None:
         """Translate the coordinator-row mask into per-shard local masks."""
         if table_name != self.table_name:
             self.engine.delete_rows(table_name, mask)
+            self._emit("mutation", ("delete", table_name,
+                                    np.asarray(mask, dtype=bool), None, None))
             self._replicate_dim(table_name)
             return
         mask = np.asarray(mask, dtype=bool)
         version = self.version + 1
+        ships = []
         for s, shard in enumerate(self.shards):
             local_mask = np.zeros(self._shard_rows[s], dtype=bool)
             local_mask[self._row_local[mask & (self._row_shard == s)]] = True
             self._ship(s, version, "delete", local_mask)
+            ships.append(local_mask)
         keep = ~mask
         self._row_shard = self._row_shard[keep]
         self._row_local = self._row_local[keep]
@@ -822,6 +1147,7 @@ class ShardedEngine:
             self._row_local[sel] = np.arange(self._shard_rows[s])
         self.engine.delete_rows(table_name, mask)
         self.version += 1
+        self._emit("mutation", ("delete", table_name, mask, version, ships))
 
     def _ship(self, sid: int, version: int, kind: str, payload) -> None:
         """Best-effort delivery of one delta.  The coordinator's per-shard
@@ -829,6 +1155,8 @@ class ShardedEngine:
         checkpoints), so a failed or backpressured ship just leaves the
         shard lagging until the next read resyncs it from the log."""
         self._log[sid].append((version, kind, payload))
+        if self._peer_mirroring:
+            self._peer_ship(sid, version, kind, payload)
         if self.health_tracking and self.health[sid] == "dead":
             return  # known-dead: don't even try; recovery replays the log
         try:
@@ -839,6 +1167,21 @@ class ShardedEngine:
             if self.health_tracking:
                 self.health[sid] = ("dead" if self.health[sid] == "suspect"
                                     else "suspect")
+
+    def _peer_ship(self, sid: int, version: int, kind: str, payload) -> None:
+        """Keep shard ``sid``'s peer mirror current with the same delta.
+        A failed or refused peer ship marks the mirror stale — counted, not
+        silent — and the next checkpoint round re-seeds it."""
+        if not self._peer_ok[sid]:
+            return
+        peer = (sid + 1) % self.n_shards
+        try:
+            ok = self.shards[peer].peer_ship(sid, version, kind, payload)
+        except (ShardUnavailableError, BackpressureError):
+            ok = False
+        if not ok:
+            self._peer_ok[sid] = False
+            self.stale_checkpoints[sid] += 1
 
     def _replicate_dim(self, table_name: str) -> None:
         """Replicate a mutated dimension table and evict sketches it serves.
@@ -862,7 +1205,9 @@ class ShardedEngine:
         for e in list(self.engine.index.entries()):
             if e.query.join is not None and e.query.join.right == table_name:
                 self.engine.index.remove(e)
-                self._unregister(id(e))
+                if e.reg_id:
+                    self._unregister(e.reg_id)
+                    self._emit("evict", e.reg_id)
 
     # -- queries ---------------------------------------------------------------
     @hot_path
@@ -905,15 +1250,21 @@ class ShardedEngine:
         """
         if self.engine.strategy == "NO-PS":
             return
-        new = [e for e in self.engine.index.entries()
-               if e.query.table == self.table_name
-               and id(e) not in self._registered]
+        new = [e for e in self.engine.index.entries() if e.reg_id == 0]
         if not new:
             return
-        down: Set[int] = set()
-        if any(self._group_local(e.query) for e in new):
-            _, down = self._catch_up_all()
         for e in new:
+            # Stable registration ids: shard maintainers, replication records
+            # and routed-serving state all key on ``reg_id`` — a standby's
+            # rebuilt entries re-attach to shard state without any
+            # re-registration RPCs (``id(entry)`` dies with the process).
+            e.reg_id = self._reg_counter
+            self._reg_counter += 1
+        fact_new = [e for e in new if e.query.table == self.table_name]
+        down: Set[int] = set()
+        if any(self._group_local(e.query) for e in fact_new):
+            _, down = self._catch_up_all()
+        for e in fact_new:
             group_local = self._group_local(e.query)
             if group_local:
                 for sid, shard in enumerate(self.shards):
@@ -923,11 +1274,15 @@ class ShardedEngine:
                     try:
                         self._shard_call(
                             sid, "register",
-                            functools.partial(shard.register, id(e), e.query,
-                                              e.sketch.ranges))
+                            functools.partial(shard.register, e.reg_id,
+                                              e.query, e.sketch.ranges))
                     except ShardUnavailableError:
                         pass
-            self._registered[id(e)] = _Registered(e, e.sketch.ranges, group_local)
+            self._registered[e.reg_id] = _Registered(e, e.sketch.ranges,
+                                                     group_local)
+        if self._replica is not None:
+            self._emit("register", self._reg_payloads(new))
+            self._emit("selection", self.selection_state())
         if self.max_registered is not None:
             self.prune(self.max_registered)
 
@@ -945,11 +1300,15 @@ class ShardedEngine:
         state in the same pass: per-shard maintainers, cached local
         instances, and the stacked launch arrays.  Returns #evictions.
         """
+        before = ({e.reg_id for e in self.engine.index.entries() if e.reg_id}
+                  if self._replica is not None else set())
         evicted = self.engine.index.prune(max_entries)
         if evicted:
-            alive = {id(e) for e in self.engine.index.entries()}
+            alive = {e.reg_id for e in self.engine.index.entries()}
             for key in [k for k in self._registered if k not in alive]:
                 self._unregister(key)
+            for rid in sorted(before - alive):
+                self._emit("evict", rid)
         return evicted
 
     def shutdown(self) -> None:
@@ -1020,13 +1379,70 @@ class ShardedEngine:
         """Advance one shard's durable recovery point.  Called only when the
         shard is at version parity with the coordinator, so both checkpoint
         kinds (loopback: shard-table reference; subprocess: coordinator-table
-        snapshot) are one immutable reference + a log prune."""
+        snapshot) are one immutable reference + a log prune.  Skips entirely
+        when the checkpoint is already at the watermark — the warm read path
+        pays a version compare, nothing else."""
+        cur = self._ckpt[sid]
+        if cur is not None and cur.version == self.version:
+            self._mirror_ckpt(sid)
+            return
         ckpt = self.shards[sid].make_checkpoint(
             self.db[self.table_name], self.version)
         self._ckpt[sid] = ckpt
         v = ckpt.version
         if self._log[sid] and self._log[sid][0][0] <= v:
             self._log[sid] = [e for e in self._log[sid] if e[0] > v]
+        self._emit("ckpt", (sid, v))
+        self._mirror_ckpt(sid)
+
+    def _mirror_ckpt(self, sid: int) -> None:
+        """(Re)seed shard ``sid``'s peer mirror when it is stale: derive the
+        shard-local table coordinator-side (``local_table_for`` — the same
+        pure gather shard construction uses) and put it on the peer.  Once
+        seeded, ``_peer_ship`` keeps it current delta-sized."""
+        if not self._peer_mirroring or self._peer_ok[sid]:
+            return
+        peer = (sid + 1) % self.n_shards
+        if self.health_tracking and self.health[peer] == "dead":
+            self.stale_checkpoints[sid] += 1
+            return
+        try:
+            local = local_table_for(sid, self.plan, self.ranges,
+                                    self.db[self.table_name].collapse(),
+                                    version=self.version)
+            self.shards[peer].peer_put(sid, local, self._plan_token())
+            self._peer_ok[sid] = True
+        except (ShardUnavailableError, BackpressureError):
+            self.stale_checkpoints[sid] += 1
+
+    def _restore_from_peer(self, sid: int) -> bool:
+        """Recovery fast path: re-seed a killed shard from the peer-held
+        mirror of its local table instead of re-shipping the coordinator
+        checkpoint.  The mirror is delta-maintained, so the shipped bytes are
+        O(shard-local rows) held *by the peer process* — the coordinator
+        never serializes the table.  Tried regardless of ``_peer_ok``: the
+        flag is this coordinator's knowledge, but mirrors survive coordinator
+        takeover (they live in shard processes), so a fresh coordinator asks
+        first and trusts the plan token to reject stale placements."""
+        if not self._peer_mirroring:
+            return False
+        peer = (sid + 1) % self.n_shards
+        if self.health_tracking and self.health[peer] == "dead":
+            return False
+        try:
+            got = self.shards[peer].peer_fetch(sid, self._plan_token())
+            if got is None:
+                return False
+            local, _version = got
+            dims = {k: v for k, v in self.engine.db.tables.items()
+                    if k != self.table_name}
+            self.shards[sid].build_local(self.plan, self.ranges, local, dims,
+                                         self._inbox_cap)
+        except (ShardUnavailableError, BackpressureError):
+            return False
+        self.peer_restores += 1
+        self._peer_ok[sid] = True
+        return True
 
     def _sync_shard(self, sid: int) -> int:
         """Bring one shard to the coordinator watermark: refresh drifted
@@ -1069,16 +1485,17 @@ class ShardedEngine:
         self.health[sid] = "recovering"
         applied = 0
         if shard.state_lost:  # killed: all local state lost
-            if self._ckpt[sid] is None:
-                # No coherent checkpoint (placement changed while it was
-                # gone): rebuild from the coordinator's table outright.
-                self._rebuild_shard(sid)
-                self.health[sid] = "healthy"
-                return 0
-            dims = {k: v for k, v in self.engine.db.tables.items()
-                    if k != self.table_name}
-            shard.restore_checkpoint(self._ckpt[sid], dims, self.plan,
-                                     self.ranges)
+            if not self._restore_from_peer(sid):
+                if self._ckpt[sid] is None:
+                    # No coherent checkpoint (placement changed while it was
+                    # gone): rebuild from the coordinator's table outright.
+                    self._rebuild_shard(sid)
+                    self.health[sid] = "healthy"
+                    return 0
+                dims = {k: v for k, v in self.engine.db.tables.items()
+                        if k != self.table_name}
+                shard.restore_checkpoint(self._ckpt[sid], dims, self.plan,
+                                         self.ranges)
         applied += self._sync_shard(sid)
         self._reregister_shard(sid)
         self._checkpoint(sid)
@@ -1156,7 +1573,12 @@ class ShardedEngine:
                                          self.plan.fragments_of(s))]
         self.plan = ShardPlan(n_shards=self.n_shards, owner=new_owner)
         self._rebuild_row_maps()
+        # Every peer mirror speaks the OLD placement: the plan token embedded
+        # at put-time no longer matches, so fetches would be refused anyway —
+        # drop our seeded flags so the next checkpoint round re-seeds.
+        self._peer_ok = [False] * self.n_shards
         rebuilt = []
+        voided = []
         for sid in changed:
             if sid in dead_set:
                 # The lost shard now owns nothing; void its recovery state —
@@ -1164,10 +1586,12 @@ class ShardedEngine:
                 # rejoin must rebuild from the coordinator, never replay.
                 self._ckpt[sid] = None
                 self._log[sid] = []
+                voided.append(sid)
                 continue
             self._rebuild_shard(sid)
             self.health[sid] = "healthy"
             rebuilt.append(sid)
+        self._emit("plan", (new_owner, voided))
         # The plan object changed identity: every stacked cache key is dead.
         self.engine.catalog.drop_stacked(("stacked",))
         self.engine.catalog.drop_stacked(("stacked_batch",))
@@ -1502,7 +1926,7 @@ class ShardedEngine:
     def _run_routed(
         self, q: Query, entry: IndexEntry, t0: float
     ) -> Optional[Tuple[QueryResult, RunInfo]]:
-        key = id(entry)
+        key = entry.reg_id
         reg = self._registered.get(key)
         if reg is None:
             return None
@@ -1564,6 +1988,7 @@ class ShardedEngine:
             degraded=bool(degraded),
             failed_shards=tuple(sorted(degraded)),
             n_retries=self._route_retries,
+            stale_checkpoints=sum(self.stale_checkpoints),
         )
         info = RunInfo(
             reused=True, created=False, attr=reg.ranges.attr,
@@ -1610,8 +2035,8 @@ class ShardedEngine:
                 tp = time.perf_counter()
                 if entry is None:
                     misses.append((i, q, tp - t0))
-                elif id(entry) in self._registered:
-                    hits.setdefault(id(entry), []).append((i, q, entry, tp - t0))
+                elif entry.reg_id in self._registered:
+                    hits.setdefault(entry.reg_id, []).append((i, q, entry, tp - t0))
                 else:
                     # Hit without routed registration (rare: the registration
                     # was dropped): single-node serve + re-register, exactly
@@ -1674,6 +2099,7 @@ class ShardedEngine:
                 degraded=bool(degraded),
                 failed_shards=tuple(sorted(degraded)),
                 n_retries=self._route_retries,
+                stale_checkpoints=sum(self.stale_checkpoints),
             )
         if not serving:
             return
@@ -1719,6 +2145,7 @@ class ShardedEngine:
             degraded=bool(degraded),
             failed_shards=tuple(sorted(degraded)),
             n_retries=self._route_retries,
+            stale_checkpoints=sum(self.stale_checkpoints),
         )
 
     def _assemble_batch(self, serving: List[Tuple[int, List, StackedInstances]]):

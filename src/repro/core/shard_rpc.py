@@ -68,6 +68,7 @@ from repro.core.shard import (  # noqa: E402
     FragmentShard,
     ShardPlan,
     ShardUnavailableError,
+    StaleEpochError,
 )
 
 
@@ -110,6 +111,7 @@ _ERROR_TYPES = {
     "ShardUnavailableError": ShardUnavailableError,
     "BackpressureError": BackpressureError,
     "MaintenanceError": MaintenanceError,
+    "StaleEpochError": StaleEpochError,
     "ValueError": ValueError,
     "KeyError": KeyError,
     "RuntimeError": RuntimeError,
@@ -142,16 +144,66 @@ class LoopbackShardClient:
 
     def __init__(self, shard: FragmentShard):
         self._shard = shard
+        # This client's coordinator epoch, stamped on every state-touching
+        # op (the loopback analog of the RPC payload's epoch field).  The
+        # owning ``ShardedEngine`` sets it; a takeover wraps the same
+        # ``FragmentShard`` in a *new* client carrying the bumped epoch,
+        # after which this client's ops are fenced out.
+        self.epoch = 0
 
     def __getattr__(self, name):
         if name == "_shard":  # during unpickling/partial init
             raise AttributeError(name)
         return getattr(self._shard, name)
 
+    def _fence(self, op: str) -> None:
+        """Stamp/check this client's epoch on the shard before a fenced op.
+
+        Skipped while the shard is unreachable: the op itself raises
+        ``ShardUnavailableError`` at the fault guard, and a partitioned
+        zombie must not be able to *bump* the shard's epoch through the
+        partition (nor learn it was fenced — it can't reach the shard)."""
+        if self._shard.fault in ("dead", "partition"):
+            return
+        self._shard.fence(self.epoch, op)
+
+    # -- fenced state-touching ops (otherwise delegated via __getattr__) ------
+    def ship(self, version: int, kind: str, payload) -> None:
+        self._fence("ship")
+        self._shard.ship(version, kind, payload)
+
+    def catch_up(self, watermark: int) -> int:
+        self._fence("catch_up")
+        return self._shard.catch_up(watermark)
+
+    def register(self, key: int, q: Query, ranges: RangeSet) -> None:
+        self._fence("register")
+        self._shard.register(key, q, ranges)
+
+    def update_dim(self, table: ColumnTable) -> None:
+        self._fence("update_dim")
+        self._shard.update_dim(table)
+
+    def bits_for(self, key: int) -> Optional[np.ndarray]:
+        self._fence("bits_for")
+        return self._shard.bits_for(key)
+
+    def partial(self, q: Query, key: int, ranges: RangeSet,
+                bits: np.ndarray):
+        self._fence("partial")
+        return self._shard.partial(q, key, ranges, bits)
+
+    def clone_for_takeover(self) -> "LoopbackShardClient":
+        """A fresh client over the SAME live shard for a takeover
+        coordinator — shard state (table, maintainers, epoch) stays put;
+        only the client-side identity is new."""
+        return LoopbackShardClient(self._shard)
+
     # -- client-only surface (the API ``ShardedEngine`` is written against)
     def block_arrays(self, key: int, ranges: RangeSet, bits: np.ndarray,
                      q: Query):
         """One shard's inner-block arrays for the stacked layout."""
+        self._fence("block_arrays")
         shard = self._shard
         inst = shard._instance(key, ranges, bits)
         if q.join is not None:
@@ -185,14 +237,20 @@ class LoopbackShardClient:
     def restore_checkpoint(self, ckpt: ShardCheckpoint,
                 dims: Mapping[str, ColumnTable], plan: ShardPlan,
                 ranges: RangeSet) -> None:
+        self._fence("restore_checkpoint")
         self._shard.adopt(ckpt.table, dims)
 
     def rebuild(self, plan: ShardPlan, ranges: RangeSet,
                 clustered: ColumnTable, dims: Mapping[str, ColumnTable],
                 device, inbox_cap: Optional[int], version: int) -> None:
+        self._fence("rebuild")
+        epoch = self._shard.epoch
         self._shard = FragmentShard(
             self._shard.shard_id, plan, ranges, clustered, dims, device,
             inbox_cap=inbox_cap, version=version)
+        # Epoch is process identity, not table state: it survives the
+        # rebuild, so a fenced-out coordinator stays fenced out.
+        self._shard.epoch = epoch
 
     def close_client(self) -> None:
         pass
@@ -319,8 +377,15 @@ class ServerPool:
         self._target = (int(os.environ.get("REPRO_SHARD_SPARES", "2"))
                         if spares is None else spares)
         self._filling = False
+        self._closed = False
 
     def _spawn(self) -> _ServerProc:
+        # Checked twice: before paying the Popen, and again before tracking
+        # the child — a close_pool() racing this spawn (atexit vs the background
+        # top-up thread) must never leave an untracked orphan behind.
+        with self._lock:
+            if self._closed:
+                raise ShardUnavailableError("server pool is closed")
         path = os.path.join(_socket_dir(), f"s{next(_sock_counter)}.sock")
         env = dict(os.environ)
         src = os.path.dirname(os.path.dirname(os.path.dirname(
@@ -333,8 +398,11 @@ class ServerPool:
             start_new_session=True, env=env)
         sp = _ServerProc(proc, path)
         with self._lock:
-            self._all.add(sp)
-        return sp
+            if not self._closed:
+                self._all.add(sp)
+                return sp
+        sp.kill()
+        raise ShardUnavailableError("server pool closed mid-spawn")
 
     def acquire(self) -> _ServerProc:
         with self._lock:
@@ -392,30 +460,56 @@ class ServerPool:
             try:
                 while True:
                     with self._lock:
-                        if len(self._spares) >= self._target:
+                        if self._closed or len(self._spares) >= self._target:
                             return
-                    sp = self._spawn()
+                    try:
+                        sp = self._spawn()
+                    except ShardUnavailableError:
+                        return  # pool closed mid-fill
                     with self._lock:
+                        if self._closed:
+                            break
                         self._spares.append(sp)
+                sp.kill()
             finally:
                 with self._lock:
                     self._filling = False
 
         threading.Thread(target=fill, daemon=True).start()
 
-    def shutdown_all(self) -> None:
+    def _drain(self) -> List[_ServerProc]:
         with self._lock:
+            self._closed = True
             procs = list(self._all)
             self._all.clear()
             self._spares.clear()
+        return procs
+
+    def shutdown_all(self) -> None:
+        """Kill every pooled server, then reopen for the next tenant (bench
+        suites reuse the module-level pool across scenarios).  The closed
+        window is what makes this race-free against the background top-up
+        thread: a spawn landing mid-shutdown is killed, not leaked."""
+        procs = self._drain()
         for sp in procs:
+            sp.kill()
+        with self._lock:
+            self._closed = False
+
+    # Named close_pool (not ``close``) so the hot-path analyzer's name-based
+    # call graph cannot alias socket ``close()`` calls in the RPC hot path
+    # onto this terminal teardown (which reaches Popen.wait).
+    def close_pool(self) -> None:
+        """Terminal shutdown (atexit): kill everything and stay closed so
+        no late daemon-thread spawn can outlive the coordinator."""
+        for sp in self._drain():
             sp.kill()
 
 
 #: Process-wide pool; ``atexit`` guarantees no shard server outlives the
 #: coordinator process even when tests die mid-run.
 POOL = ServerPool()
-atexit.register(POOL.shutdown_all)
+atexit.register(POOL.close_pool)
 
 
 # ---------------------------------------------------------------------------
@@ -468,6 +562,10 @@ class SubprocessShardClient:
         self._bits: Optional[Dict[int, np.ndarray]] = None
         self._dims: Dict[str, Tuple[int, int]] = {}
         self._pending_unregister: Set[int] = set()
+        # Coordinator epoch stamped on every non-ctl request; the server
+        # fences ops behind the newest epoch it has seen (set by the owning
+        # ``ShardedEngine`` — 0 only during this initial build).
+        self.epoch = 0
         self._build(plan, ranges, clustered, dims, version)
 
     # -- plumbing --------------------------------------------------------------
@@ -492,7 +590,7 @@ class SubprocessShardClient:
             raise ShardUnavailableError(
                 f"shard {self.shard_id} is dead ({op})")
         resp = self._proc.request(
-            {"op": op, "args": args, "ctl": ctl},
+            {"op": op, "args": args, "ctl": ctl, "epoch": self.epoch},
             deadline_s=self._deadline_s if deadline_s is None else deadline_s)
         self._absorb_meta(resp.get("meta"))
         if not resp.get("ok"):
@@ -687,6 +785,74 @@ class SubprocessShardClient:
         self._inbox_cap = inbox_cap
         self._build(plan, ranges, clustered, dims, version)
 
+    # -- peer-replicated checkpoints -------------------------------------------
+    def peer_put(self, sid: int, local: ColumnTable, plan_token: int) -> None:
+        """Seed this server with a mirror of peer shard ``sid``'s local
+        table (full ship — only at seed/re-seed; deltas keep it current)."""
+        self._request("ckpt_put", (sid, local.collapse(), plan_token),
+                      deadline_s=self._build_deadline_s)
+
+    def peer_ship(self, sid: int, version: int, kind: str, payload) -> bool:
+        """Apply one delta to the mirror of shard ``sid``; False when the
+        mirror is missing or the delta would leave a version gap (the
+        server drops the mirror — a gapped mirror is useless)."""
+        return bool(self._request("ckpt_ship", (sid, version, kind, payload)))
+
+    def peer_fetch(self, sid: int,
+                   plan_token: int) -> Optional[Tuple[ColumnTable, int]]:
+        """Fetch the mirror of shard ``sid``; None when absent or seeded
+        under a different placement plan."""
+        return self._request("ckpt_get", (sid, plan_token),
+                             deadline_s=self._build_deadline_s)
+
+    def build_local(self, plan: ShardPlan, ranges: RangeSet,
+                    local: ColumnTable, dims: Mapping[str, ColumnTable],
+                    inbox_cap: Optional[int]) -> None:
+        """Rebuild this shard from an already-local table (peer-mirror
+        recovery): no coordinator-table gather, no full-table reship."""
+        self._inbox_cap = inbox_cap
+        self._request(
+            "build_local",
+            (self.shard_id, plan.owner, plan.n_shards, ranges,
+             local.collapse(), {k: v.collapse() for k, v in dims.items()},
+             inbox_cap, self.shard_id),
+            deadline_s=self._build_deadline_s)
+        self._state_lost = False
+        self._bits = self._bits if self._bits is not None else {}
+        self._fault = None
+
+    def clone_for_takeover(self) -> "SubprocessShardClient":
+        """A fresh client over the SAME live server socket for a takeover
+        coordinator.  No shard state moves — the new client re-learns the
+        server's state cheaply via one ctl round trip (whose meta piggyback
+        carries version, maintainer keys and dimension tokens); sketch-bit
+        caches refill on the first catch_up."""
+        c = object.__new__(SubprocessShardClient)
+        c.shard_id = self.shard_id
+        c._pool = self._pool
+        c._inbox_cap = self._inbox_cap
+        c._deadline_s = self._deadline_s
+        c._build_deadline_s = self._build_deadline_s
+        c._proc = self._proc
+        c._fault = self._fault if self._fault in ("dead",) else None
+        c._state_lost = True
+        c._version = -1
+        c._lag = 0
+        c._bp = 0
+        c._token = None
+        c._mkeys = set()
+        c._bits = None
+        c._dims = {}
+        c._pending_unregister = set()
+        c.epoch = 0  # the owning engine stamps the real epoch after attach
+        if c._proc is not None:
+            try:
+                token = c._request("state_token", (), ctl=True)
+                c._state_lost = token is None
+            except ShardUnavailableError:
+                c._state_lost = True
+        return c
+
     def close_client(self) -> None:
         """Release the server back to the warm pool (or reap it)."""
         proc, self._proc = self._proc, None
@@ -724,6 +890,14 @@ class ShardServer:
         self.stall_s = 0.0
         self.flaky_fails = 0
         self.closed = False
+        # Highest coordinator epoch seen on a non-ctl op.  Process identity,
+        # not shard state: survives shard rebuilds, zeroed only by ``reset``
+        # (pool re-tenancy — a different coordinator's epoch space).
+        self.epoch = 0
+        # Peer-replicated checkpoints: sid -> (mirror table, plan token).
+        # Delta-maintained by ``ckpt_ship``; recovery pulls shard-local
+        # state from here instead of re-shipping the coordinator's table.
+        self.peer_ckpts: Dict[int, Tuple[ColumnTable, int]] = {}
 
     # -- dispatch --------------------------------------------------------------
     def handle(self, msg: dict) -> dict:
@@ -737,6 +911,15 @@ class ShardServer:
                     self.flaky_fails -= 1
                     raise ShardUnavailableError(
                         f"shard dropped {op} (flaky)")
+                # Epoch fence, AFTER the fault simulation (a stalled zombie
+                # op must still be rejected, not served): monotone max, so a
+                # newer coordinator's first op fences every older one out.
+                epoch = int(msg.get("epoch", 0))
+                if epoch < self.epoch:
+                    raise StaleEpochError(
+                        f"coordinator epoch {epoch} is fenced behind "
+                        f"{self.epoch} ({op})")
+                self.epoch = epoch
             value = self._dispatch(op, args)
             return {"ok": True, "value": value, "meta": self._meta(op)}
         except Exception as e:  # marshalled; the client re-raises by type
@@ -786,6 +969,8 @@ class ShardServer:
             self.shard = None
             self.stall_s = 0.0
             self.flaky_fails = 0
+            self.epoch = 0
+            self.peer_ckpts = {}
             return None
         if op == "shutdown":
             self.closed = True
@@ -808,6 +993,45 @@ class ShardServer:
             s = self.shard
             return (None if s is None or s.table is None
                     else (s.table.uid, s.table.version))
+        if op == "ckpt_put":
+            sid, table, token = args
+            self.peer_ckpts[int(sid)] = (table, token)
+            return None
+        if op == "ckpt_ship":
+            sid, version, kind, payload = args
+            ent = self.peer_ckpts.get(int(sid))
+            if ent is None:
+                return False
+            table, token = ent
+            if version <= table.version:
+                return True  # duplicate re-ship: idempotent skip
+            if version > table.version + 1:
+                # Version gap (an earlier delta never landed): a gapped
+                # mirror can never be made current again — drop it so the
+                # coordinator re-seeds instead of recovering stale state.
+                self.peer_ckpts.pop(int(sid), None)
+                return False
+            table = (table.append(payload) if kind == "append"
+                     else table.delete(payload))
+            self.peer_ckpts[int(sid)] = (table, token)
+            return True
+        if op == "ckpt_get":
+            sid, token = args
+            ent = self.peer_ckpts.get(int(sid))
+            if ent is None or ent[1] != token:
+                # Absent, or seeded under a different placement plan: a
+                # mirror gathered under the old owner map must never be
+                # adopted after a rebalance.
+                return None
+            return (ent[0].collapse(), ent[0].version)
+        if op == "build_local":
+            (shard_id, owner, n_shards, ranges, local, dims,
+             inbox_cap, device_ord) = args
+            plan = ShardPlan(n_shards=n_shards, owner=np.asarray(owner))
+            self.shard = FragmentShard.from_local(
+                shard_id, plan, ranges, local, dims,
+                device=_pick_device(device_ord), inbox_cap=inbox_cap)
+            return None
         shard = self._require_shard()
         if op == "ship":
             version, kind, payload = args

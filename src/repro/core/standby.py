@@ -1,0 +1,128 @@
+"""Coordinator failover: a warm standby that takes over an active cluster.
+
+:class:`FailoverCoordinator` owns the *role* of "the coordinator" so the
+process playing it can die.  It wraps an active ``ShardedEngine``, keeps a
+metadata replica attached (``core/replication``), and — when the chaos
+harness injects a coordinator fault — promotes a standby:
+
+1. **Snapshot** the replica's folded :class:`~repro.core.replication.MetadataStore`
+   (for a subprocess replica, the standby process survived the coordinator
+   and hands its store back over the socket).
+2. **Promote** via ``ShardedEngine.from_replica`` with a bumped epoch: the
+   clustered table replays from the replicated mutation log, placement /
+   partition / delta logs are adopted, the sketch index rebuilds by local
+   counting under its replicated ``reg_id``s, and the *live* shard
+   transports are re-wrapped (``clone_for_takeover``) — no shard state
+   moves, no re-capture, no full-table reship.
+3. **Fence** the old coordinator out: the promoted engine's first catch-up
+   round stamps the new epoch on every reachable shard, after which any op
+   the old coordinator still issues raises ``StaleEpochError``
+   (``coord_partition`` keeps the zombie around precisely so tests can
+   prove that).
+4. **Re-arm**: a fresh replica attaches to the promoted coordinator, so
+   takeovers chain — coordinator #3 can die just like #1 did.
+
+Fault kinds (``runtime.chaos.COORD_FAULT_KINDS``):
+
+* ``coord_kill`` — the coordinator object is discarded outright (its
+  clients are NOT closed: the shard servers keep running and the promoted
+  engine adopts their sockets).  This is the failover analogue of a shard
+  SIGKILL: nothing of the old coordinator survives but what it replicated.
+* ``coord_partition`` — the old engine is kept as a live *zombie* that
+  still believes it is the coordinator; the epoch fence is the only thing
+  keeping its writes out, which is exactly what the chaos differential
+  needs to witness.
+"""
+from __future__ import annotations
+
+from typing import Callable, Optional
+
+from repro.core.replication import InProcessReplica, SubprocessReplica
+from repro.core.shard import ShardedEngine
+
+#: Coordinator-level fault kinds this wrapper understands (mirrors
+#: ``runtime.chaos.COORD_FAULT_KINDS`` without importing it — chaos imports
+#: nothing from here, and this module must not depend on the harness).
+COORD_FAULT_KINDS = ("coord_kill", "coord_partition")
+
+
+def replica_factory(kind: str) -> Callable[[], object]:
+    """``"loopback"`` -> in-process replica, ``"subprocess"`` -> a warm
+    standby process that survives the coordinator object's death."""
+    if kind == "loopback":
+        return InProcessReplica
+    if kind == "subprocess":
+        return SubprocessReplica
+    raise ValueError(f"unknown replica kind {kind!r}")
+
+
+class FailoverCoordinator:
+    """The failover-capable coordinator role around one ``ShardedEngine``.
+
+    Delegates the entire serving surface (``run``/``run_batch``/mutations/
+    introspection) to the currently-active engine, so it drops into every
+    place a ``ShardedEngine`` goes — including ``runtime.chaos.run_ops``
+    and the differential gate.  ``inject_coord`` is the chaos surface.
+    """
+
+    def __init__(self, engine: ShardedEngine,
+                 make_replica: Optional[Callable[[], object]] = None):
+        self._engine = engine
+        self._make_replica = make_replica or InProcessReplica
+        self.replica = self._make_replica()
+        engine.attach_replica(self.replica)
+        self.takeovers = 0
+        #: The fenced-out old engine after a ``coord_partition`` (None after
+        #: a ``coord_kill`` — a killed coordinator leaves no object behind).
+        self.zombie: Optional[ShardedEngine] = None
+
+    # -- delegation ------------------------------------------------------------
+    @property
+    def engine(self) -> ShardedEngine:
+        """The currently-active coordinator engine."""
+        return self._engine
+
+    def __getattr__(self, name):
+        if name.startswith("_"):
+            raise AttributeError(name)
+        return getattr(self._engine, name)
+
+    # -- chaos surface ---------------------------------------------------------
+    def inject_coord(self, kind: str) -> ShardedEngine:
+        """Fail the active coordinator and promote a standby (see module
+        docstring).  Returns the promoted engine."""
+        if kind not in COORD_FAULT_KINDS:
+            raise ValueError(f"unknown coordinator fault kind {kind!r}")
+        old = self._engine
+        store = self.replica.snapshot()
+        promoted = ShardedEngine.from_replica(
+            store, epoch=old.epoch + 1, attach=old.shards)
+        self.replica.close_replica()
+        # The zombie is NEVER shut down: its clients share live shard
+        # server processes with the promoted engine (close_client would
+        # hand shared servers back to the pool out from under it).  A
+        # killed coordinator just loses every reference; a partitioned one
+        # stays alive so the epoch fence can be witnessed rejecting it.
+        self.zombie = old if kind == "coord_partition" else None
+        self._engine = promoted
+        self.takeovers += 1
+        # Stamp the new epoch on every reachable shard NOW — from this
+        # point the old coordinator is provably fenced out, not merely
+        # superseded — and recover any shard that needs it.
+        promoted._catch_up_all()
+        # Re-arm with a fresh standby so the next takeover works too.
+        self.replica = self._make_replica()
+        promoted.attach_replica(self.replica)
+        return promoted
+
+    # -- lifecycle -------------------------------------------------------------
+    def shutdown(self) -> None:
+        """Shut down the active engine and the standby; the zombie (if any)
+        is dropped without shutdown — its shard servers belong to the
+        active engine now."""
+        self.zombie = None
+        try:
+            self.replica.close_replica()
+        except Exception:
+            pass
+        self._engine.shutdown()

@@ -28,6 +28,15 @@ import numpy as np
 #: separately so faults actually get cleared and recovery paths run).
 FAULT_KINDS = ("kill", "stall", "partition", "flaky")
 
+#: Coordinator-level fault kinds (``coord_rate``): ``coord_kill`` drops the
+#: active coordinator dead (standby takeover adopts replicated metadata),
+#: ``coord_partition`` fences it off while it still *thinks* it is the
+#: coordinator — the epoch fence is what keeps its zombie ops out.
+COORD_FAULT_KINDS = ("coord_kill", "coord_partition")
+
+#: ``ChaosEvent.shard`` sentinel for coordinator-level events.
+COORD = -1
+
 
 @dataclasses.dataclass(frozen=True)
 class ChaosEvent:
@@ -46,6 +55,7 @@ def random_schedule(
     rate: float = 0.35,
     stall_s: float = 0.005,
     heal_bias: float = 0.5,
+    coord_rate: float = 0.0,
 ) -> List[ChaosEvent]:
     """A seeded-random fault schedule over ``n_steps`` workload ops.
 
@@ -54,11 +64,20 @@ def random_schedule(
     kill/rejoin cycles flowing so recovery actually executes) or inject a
     fresh fault on a healthy shard.  The tail of the schedule heals every
     outstanding fault so a replay can end with a fully recovered cluster.
+
+    With ``coord_rate > 0`` the schedule additionally drops coordinator
+    faults (``COORD_FAULT_KINDS`` on the ``COORD`` sentinel shard) — each
+    one forces a standby takeover mid-replay.  Coordinator faults compose
+    freely with shard faults: a takeover must work while shards are dead,
+    stalled, or partitioned.
     """
     rng = np.random.default_rng(seed)
     faulted: Dict[int, str] = {}
     events: List[ChaosEvent] = []
     for step in range(n_steps):
+        if coord_rate > 0 and rng.random() < coord_rate:
+            kind = COORD_FAULT_KINDS[int(rng.integers(len(COORD_FAULT_KINDS)))]
+            events.append(ChaosEvent(step, COORD, kind))
         if rng.random() >= rate:
             continue
         if faulted and (rng.random() < heal_bias or len(faulted) == n_shards):
@@ -179,6 +198,11 @@ class ChaosHarness:
 
     def apply_events(self, engine, step: int) -> None:
         for e in self._by_step.get(step, []):
+            if e.shard == COORD or e.kind in COORD_FAULT_KINDS:
+                # Coordinator-level fault: the engine must be failover-
+                # capable (``core.standby.FailoverCoordinator``).
+                engine.inject_coord(e.kind)
+                continue
             shard = engine.shards[e.shard]
             if e.kind == "heal":
                 shard.heal()

@@ -27,9 +27,15 @@ Framing (all integers big-endian):
     magic  4s   b"RPS1"
     seq    u64  request/response correlation id
     nbufs  u32  number of out-of-band buffers
+    crc    u32  crc32 over the length table and every payload part
     lens   u64 * (nbufs + 1)   pickle byte-length, then each buffer's
     pickle bytes
     buffer bytes ...
+
+The crc pins frame *integrity*: a flipped bit anywhere in the lengths or
+payload surfaces as ``FrameError`` at the boundary — which the RPC layer
+maps to ``ShardUnavailableError`` — instead of a corrupt pickle exploding
+arbitrarily deep in the op loop.
 
 The codec is symmetric: servers and clients share ``send_msg``/``recv_msg``.
 """
@@ -40,12 +46,13 @@ import pickle
 import socket
 import struct
 import time
+import zlib
 from typing import Any, List, Optional, Tuple
 
 import numpy as np
 
 MAGIC = b"RPS1"
-_HDR = struct.Struct("!4sQI")  # magic, seq, nbufs
+_HDR = struct.Struct("!4sQII")  # magic, seq, nbufs, crc32
 
 #: Refuse frames beyond this size (64 MiB default): a corrupted length
 #: prefix must not turn into an unbounded allocation.
@@ -184,8 +191,11 @@ def send_msg(sock: socket.socket, obj: Any, seq: int,
     if total > max_frame_bytes:
         raise FrameError(
             f"refusing to send {total}-byte frame (cap {max_frame_bytes})")
-    header = _HDR.pack(MAGIC, seq, len(parts) - 1)
     lens = struct.pack(f"!{len(parts)}Q", *(len(p) for p in parts))
+    crc = zlib.crc32(lens)
+    for p in parts:
+        crc = zlib.crc32(p, crc)
+    header = _HDR.pack(MAGIC, seq, len(parts) - 1, crc)
     _sendall(sock, memoryview(header + lens), deadline_at)
     for p in parts:
         _sendall(sock, memoryview(p), deadline_at)
@@ -198,16 +208,23 @@ def recv_msg(sock: socket.socket,
     deadline_at = (time.perf_counter() + deadline_s
                    if deadline_s is not None else None)
     hdr = _recv_exact(sock, _HDR.size, deadline_at)
-    magic, seq, nbufs = _HDR.unpack(bytes(hdr))
+    magic, seq, nbufs, want_crc = _HDR.unpack(bytes(hdr))
     if magic != MAGIC:
         raise FrameError(f"bad magic {magic!r}")
     if nbufs > 4096:
         raise FrameError(f"implausible buffer count {nbufs}")
-    lens = struct.unpack(
-        f"!{nbufs + 1}Q", bytes(_recv_exact(sock, 8 * (nbufs + 1),
-                                            deadline_at)))
+    lens_raw = bytes(_recv_exact(sock, 8 * (nbufs + 1), deadline_at))
+    lens = struct.unpack(f"!{nbufs + 1}Q", lens_raw)
     if sum(lens) > max_frame_bytes:
         raise FrameError(
             f"refusing {sum(lens)}-byte frame (cap {max_frame_bytes})")
     parts = [bytes(_recv_exact(sock, n, deadline_at)) for n in lens]
+    crc = zlib.crc32(lens_raw)
+    for p in parts:
+        crc = zlib.crc32(p, crc)
+    if crc != want_crc:
+        # Verified BEFORE unpickling: corruption must fail at the frame
+        # boundary, never as an arbitrary error inside pickle.loads.
+        raise FrameError(
+            f"crc mismatch (frame {want_crc:#010x}, computed {crc:#010x})")
     return seq, decode_message(parts)

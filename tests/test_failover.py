@@ -1,0 +1,438 @@
+"""Coordinator failover: replicated metadata, epoch-fenced takeover, chaos.
+
+What must hold:
+
+  * a coordinator kill promotes the warm standby from replicated metadata
+    alone — index hits stay hits (no re-capture), shard state never moves
+    (no full-table reship), and serving results are bit-identical;
+  * a partitioned old coordinator is provably *fenced*: its ops raise
+    ``StaleEpochError`` at the shard, on both transports;
+  * the seeded chaos differential stays bit-identical with coordinator
+    faults mixed into the schedule (loopback and real subprocess shards,
+    all four workload templates);
+  * stale checkpoints are counted and surfaced, never silent, and recovery
+    delta-replays back to parity (satellite 2);
+  * the ServerPool survives a respawn storm and the top-up/shutdown race
+    without deadlock or orphans (satellite 3).
+"""
+import dataclasses
+import os
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    Aggregate,
+    Database,
+    Having,
+    Query,
+    ReplicationError,
+    ReplicationRecord,
+    ShardedEngine,
+    StaleEpochError,
+    execute,
+)
+from repro.core.replication import MetadataStore
+from repro.core.standby import FailoverCoordinator, replica_factory
+from repro.core.datasets import make_crimes, make_tpch
+from repro.runtime.chaos import (
+    COORD,
+    COORD_FAULT_KINDS,
+    ChaosEvent,
+    differential,
+    random_ops,
+    random_schedule,
+)
+
+
+# ---------------------------------------------------------------------------
+# Shared workload helpers (same shapes as tests/test_chaos.py)
+# ---------------------------------------------------------------------------
+
+
+def _crimes_queries(db):
+    base = Query("crimes", ("district", "year"), Aggregate("sum", "records"))
+    sums = execute(base, db).values
+    qs = [dataclasses.replace(base,
+                              having=Having(">", float(np.quantile(sums, qt))))
+          for qt in (0.4, 0.7)]
+    qs.append(base)
+    return qs
+
+
+def _crimes_rows(rng, n):
+    t = make_crimes(n, seed=int(rng.integers(1 << 30)))
+    return {a: np.asarray(t[a]) for a in t.schema}
+
+
+def _engine(db, n_shards=3, **kw):
+    args = dict(n_ranges=16, theta=0.1, seed=0, min_selectivity_gain=2.0)
+    args.update(kw)
+    return ShardedEngine(db, "crimes", "district", n_shards=n_shards, **args)
+
+
+def _tpch_templates(db):
+    """The four workload templates (AGH / AJGH / AAGH / AAJGH)."""
+    from repro.core import JoinSpec
+
+    def thresh(q, qt):
+        vals = execute(dataclasses.replace(q, having=None, outer_having=None),
+                       db).values
+        return float(np.quantile(vals, qt))
+
+    agh = Query("lineitem", ("l_suppkey",), Aggregate("sum", "l_quantity"))
+    agh = dataclasses.replace(agh, having=Having(">", thresh(agh, 0.8)))
+    ajgh = Query("lineitem", ("l_suppkey",), Aggregate("sum", "l_quantity"),
+                 join=JoinSpec("orders", "l_orderkey", "o_orderkey"))
+    ajgh = dataclasses.replace(ajgh, having=Having(">", thresh(ajgh, 0.8)))
+    aagh = Query("lineitem", ("l_partkey", "l_suppkey"),
+                 Aggregate("sum", "l_quantity"), having=Having(">", 0.0),
+                 outer_groupby=("l_suppkey",), outer_agg=Aggregate("sum", None))
+    aagh = dataclasses.replace(aagh, outer_having=Having(">", thresh(aagh, 0.8)))
+    aajgh = Query("lineitem", ("l_partkey", "l_suppkey"),
+                  Aggregate("count", None),
+                  join=JoinSpec("orders", "l_orderkey", "o_orderkey"),
+                  having=Having(">", 0.0),
+                  outer_groupby=("l_suppkey",), outer_agg=Aggregate("sum", None))
+    aajgh = dataclasses.replace(
+        aajgh, outer_having=Having(">", thresh(aajgh, 0.8)))
+    return [agh, ajgh, aagh, aajgh]
+
+
+@pytest.fixture(scope="module")
+def db():
+    return Database({"crimes": make_crimes(3000, seed=2)})
+
+
+def _failover(db, n_shards=3, replica="loopback", **kw):
+    return FailoverCoordinator(_engine(db, n_shards, **kw),
+                               make_replica=replica_factory(replica))
+
+
+# ---------------------------------------------------------------------------
+# Loopback: takeover semantics
+# ---------------------------------------------------------------------------
+
+
+def test_takeover_keeps_index_hits_no_recapture(db):
+    q = _crimes_queries(db)[0]
+    fc = _failover(db)
+    try:
+        expect = execute(q, fc.db).canonical()
+        res, _ = fc.run(q)
+        assert res.canonical() == expect
+        epoch0 = fc.engine.epoch
+
+        fc.inject_coord("coord_kill")
+        assert fc.engine.epoch == epoch0 + 1
+        assert fc.zombie is None  # a killed coordinator leaves no object
+        misses = fc.index.misses
+        res, info = fc.run(q)
+        assert res.canonical() == expect
+        # The replicated registration replayed into a *hit*: reuse without
+        # a single new capture on the promoted coordinator.
+        assert info.reused and not info.created
+        assert fc.index.misses == misses
+
+        # The promoted coordinator is a full coordinator: mutations flow.
+        fc.append_rows("crimes", _crimes_rows(np.random.default_rng(7), 250))
+        res, _ = fc.run(q)
+        assert res.canonical() == execute(q, fc.db).canonical()
+    finally:
+        fc.shutdown()
+
+
+def test_partition_fences_zombie_coordinator(db):
+    q = _crimes_queries(db)[0]
+    fc = _failover(db)
+    try:
+        fc.run(q)
+        fc.inject_coord("coord_partition")
+        z = fc.zombie
+        assert z is not None and z.epoch + 1 == fc.engine.epoch
+
+        # The fenced-out coordinator's ops are rejected AT THE SHARD — as
+        # StaleEpochError, never ShardUnavailableError, so retry/degraded
+        # machinery can't quietly absorb a zombie write.
+        with pytest.raises(StaleEpochError):
+            z.shards[0].catch_up(z.version)
+        with pytest.raises(StaleEpochError):
+            z.shards[1].ship(z.version + 1, "append",
+                             {a: np.asarray(v)[:0] for a, v in
+                              _crimes_rows(np.random.default_rng(0), 4).items()})
+
+        # ... while the promoted coordinator serves and chains takeovers.
+        res, _ = fc.run(q)
+        assert res.canonical() == execute(q, fc.db).canonical()
+        fc.inject_coord("coord_kill")
+        res, _ = fc.run(q)
+        assert res.canonical() == execute(q, fc.db).canonical()
+        assert fc.takeovers == 2
+    finally:
+        fc.shutdown()
+
+
+def test_chaos_differential_with_coord_faults_loopback(db):
+    """Seeded replays mixing coordinator kills/partitions into the shard
+    fault schedule: traces must equal the fault-free engine's exactly."""
+    qs = _crimes_queries(db)
+    for n_shards, seed in ((1, 11), (3, 12), (4, 13)):
+        ops = random_ops(seed, 24, qs, _crimes_rows)
+        events = random_schedule(seed, 24, n_shards, coord_rate=0.15)
+        assert any(e.shard == COORD for e in events), \
+            f"seed {seed}: schedule drew no coordinator faults"
+        ok, chaotic, clean = differential(
+            lambda n=n_shards: _failover(db, n, op_deadline_s=0.02),
+            "crimes", ops, events,
+            make_clean=lambda n=n_shards: _engine(db, n))
+        assert ok, (
+            f"n_shards={n_shards} seed={seed}: diverged at op "
+            f"{next(i for i, (a, b) in enumerate(zip(chaotic, clean)) if a != b)}")
+
+
+def test_random_schedule_coord_events_seeded(db):
+    a = random_schedule(5, 40, 3, coord_rate=0.2)
+    b = random_schedule(5, 40, 3, coord_rate=0.2)
+    assert a == b
+    coord = [e for e in a if e.shard == COORD]
+    assert coord and all(e.kind in COORD_FAULT_KINDS for e in coord)
+    # coord_rate=0 keeps legacy schedules byte-identical (no rng drift).
+    assert random_schedule(5, 40, 3) == random_schedule(5, 40, 3, coord_rate=0.0)
+
+
+def test_replication_stream_detects_gaps():
+    store = MetadataStore()
+    with pytest.raises(ReplicationError):
+        store.apply(ReplicationRecord(2, "ckpt", (0, 1)))
+
+
+def test_replica_loss_degrades_replication_not_serving(db):
+    class _DyingReplica:
+        def publish(self, rec):
+            raise ReplicationError("standby gone")
+
+        def snapshot(self):  # pragma: no cover - never reached
+            raise ReplicationError("standby gone")
+
+        def close_replica(self):
+            pass
+
+    q = _crimes_queries(db)[0]
+    se = _engine(db, 2)
+    try:
+        se.attach_replica(_DyingReplica())
+        assert se.replica_degraded  # bootstrap emit already failed
+        se.append_rows("crimes", _crimes_rows(np.random.default_rng(3), 120))
+        res, _ = se.run(q)
+        assert res.canonical() == execute(q, se.db).canonical()
+    finally:
+        se.shutdown()
+
+
+# ---------------------------------------------------------------------------
+# Subprocess: real processes, real standby, peer checkpoints
+# ---------------------------------------------------------------------------
+
+
+def _sub(db, n_shards=3, **kw):
+    args = dict(transport="subprocess", op_deadline_s=5.0)
+    args.update(kw)
+    return _engine(db, n_shards, **args)
+
+
+@pytest.mark.slow
+def test_subprocess_takeover_with_standby_process(db):
+    """The standby is a real process: it outlives the coordinator object
+    and hands the folded metadata store back over its socket."""
+    q = _crimes_queries(db)[0]
+    fc = FailoverCoordinator(_sub(db), make_replica=replica_factory("subprocess"))
+    try:
+        expect = execute(q, fc.db).canonical()
+        res, _ = fc.run(q)
+        assert res.canonical() == expect
+
+        fc.inject_coord("coord_kill")
+        misses = fc.index.misses
+        res, info = fc.run(q)
+        assert res.canonical() == expect
+        assert info.reused and fc.index.misses == misses
+
+        fc.append_rows("crimes", _crimes_rows(np.random.default_rng(9), 200))
+        fc.inject_coord("coord_partition")
+        with pytest.raises(StaleEpochError):
+            fc.zombie.shards[0].catch_up(fc.zombie.version)
+        res, _ = fc.run(q)
+        assert res.canonical() == execute(q, fc.db).canonical()
+    finally:
+        fc.shutdown()
+
+
+@pytest.mark.slow
+def test_peer_checkpoint_restores_killed_server(db):
+    """A SIGKILLed shard server recovers from its peer's mirrored
+    checkpoint: shard-sized state off the peer, not a full-table reship."""
+    q = _crimes_queries(db)[0]
+    se = _sub(db)
+    try:
+        se.run(q)
+        se.append_rows("crimes", _crimes_rows(np.random.default_rng(4), 300))
+        se.shards[1].inject("kill")
+        se.shards[1].heal()
+        res, _ = se.run(q)
+        assert res.canonical() == execute(q, se.db).canonical()
+        assert se.peer_restores >= 1
+    finally:
+        se.shutdown()
+
+
+@pytest.mark.slow
+def test_stale_checkpoints_counted_and_recovered(db):
+    """Satellite 2: a checkpoint that cannot refresh its peer mirror is
+    *counted* (engine + RouteInfo), and once the peer heals, recovery
+    delta-replays back to exact parity."""
+    q = _crimes_queries(db)[0]
+    se = _sub(db)
+    try:
+        se.run(q)
+        se.shards[1].inject("kill")  # peer of shard 0
+        rng = np.random.default_rng(5)
+        for _ in range(3):
+            se.append_rows("crimes", _crimes_rows(rng, 120))
+        res, _ = se.run(q)
+        assert res.canonical() == execute(q, se.db).canonical()
+        assert sum(se.stale_checkpoints) > 0
+        assert se.last_route is not None
+        assert se.last_route.stale_checkpoints == sum(se.stale_checkpoints)
+
+        se.shards[1].heal()
+        res, _ = se.run(q)
+        assert res.canonical() == execute(q, se.db).canonical()
+    finally:
+        se.shutdown()
+
+
+@pytest.mark.slow
+def test_chaos_differential_subprocess_coord_faults():
+    """The acceptance gate: seeded chaos incl. coordinator faults over real
+    subprocess shards (1-8), all four workload templates, bit-identical to
+    the fault-free single-process fused engine."""
+    db = make_tpch(2500, seed=8)
+    qs = _tpch_templates(db)
+
+    def rows(rng, n):
+        t = make_tpch(4 * n, seed=int(rng.integers(1 << 30)))["lineitem"]
+        return {a: np.asarray(t[a])[:n] for a in t.schema}
+
+    def make_engine(n, replica):
+        return FailoverCoordinator(
+            ShardedEngine(db, "lineitem", "l_suppkey", n_shards=n,
+                          n_ranges=16, theta=0.1, seed=0,
+                          min_selectivity_gain=1.0, transport="subprocess",
+                          op_deadline_s=5.0),
+            make_replica=replica_factory(replica))
+
+    def make_clean(n):
+        return ShardedEngine(db, "lineitem", "l_suppkey", n_shards=n,
+                             n_ranges=16, theta=0.1, seed=0,
+                             min_selectivity_gain=1.0)
+
+    for n_shards, seed, replica in ((1, 31, "loopback"),
+                                    (4, 32, "subprocess"),
+                                    (8, 33, "loopback")):
+        ops = random_ops(seed, 10, qs, rows, p_query=0.5, p_batch=0.2,
+                         p_append=0.2)
+        events = random_schedule(seed, 10, n_shards, coord_rate=0.25)
+        assert any(e.shard == COORD for e in events), \
+            f"seed {seed}: no coordinator faults drawn"
+        ok, chaotic, clean = differential(
+            lambda n=n_shards, r=replica: make_engine(n, r),
+            "lineitem", ops, events,
+            make_clean=lambda n=n_shards: make_clean(n))
+        assert ok, (
+            f"n_shards={n_shards} seed={seed}: diverged at op "
+            f"{next(i for i, (a, b) in enumerate(zip(chaotic, clean)) if a != b)}")
+
+
+# ---------------------------------------------------------------------------
+# Satellite 3: ServerPool respawn storm + shutdown race
+# ---------------------------------------------------------------------------
+
+
+def _pid_alive(pid):
+    try:
+        os.kill(pid, 0)
+        return True
+    except ProcessLookupError:
+        return False
+
+
+@pytest.mark.slow
+def test_respawn_storm_degrades_to_cold_spawn(db):
+    """Kills faster than the background top-up can replenish spares: heal
+    must fall through to a cold spawn — never deadlock, never orphan."""
+    from repro.core.shard_rpc import POOL
+
+    q = _crimes_queries(db)[0]
+    se = _sub(db, 2)
+    killed = []
+    try:
+        se.run(q)
+        for _ in range(4):
+            for s in se.shards:
+                killed.append(s.pid)
+                s.inject("kill")
+            # Drain every warm spare so the next heal cold-spawns.
+            with POOL._lock:
+                spares = list(POOL._spares)
+                POOL._spares.clear()
+            for sp in spares:
+                POOL.discard(sp)
+            for s in se.shards:
+                s.heal()
+            res, _ = se.run(q)
+            assert res.canonical() == execute(q, se.db).canonical()
+    finally:
+        se.shutdown()
+    assert all(not _pid_alive(p) for p in killed)
+    # Everything the pool ever spawned is either tracked or dead — a storm
+    # must not leak an untracked server.
+    with POOL._lock:
+        tracked = {sp.proc.pid for sp in POOL._all}
+    assert all(p in tracked or not _pid_alive(p) for p in killed)
+
+
+@pytest.mark.slow
+def test_pool_top_up_races_shutdown_without_orphans(db):
+    """shutdown_all racing the background fill thread: the closed window
+    kills any spawn that lands mid-shutdown instead of leaking it."""
+    from repro.core.shard_rpc import POOL
+
+    for _ in range(3):
+        # Kick a background top-up, then immediately drain-and-reopen.
+        with POOL._lock:
+            POOL._spares.clear()
+        POOL._top_up_async()
+        before = {sp.proc.pid for sp in list(POOL._all)}
+        POOL.shutdown_all()
+        for pid in before:
+            assert not _pid_alive(pid)
+    assert not POOL._closed  # reopened for the next tenant
+
+    # close_pool() is terminal: a post-close spawn attempt raises instead of
+    # leaking, and shutdown_all reopens for the rest of the suite.
+    POOL.close_pool()
+    from repro.core.shard_rpc import ShardUnavailableError
+
+    with pytest.raises(ShardUnavailableError):
+        POOL._spawn()
+    POOL.shutdown_all()
+    assert not POOL._closed
+
+    # The pool still works end-to-end after the storm.
+    se = _sub(db, 2)
+    try:
+        q = _crimes_queries(db)[0]
+        res, _ = se.run(q)
+        assert res.canonical() == execute(q, se.db).canonical()
+    finally:
+        se.shutdown()

@@ -98,6 +98,93 @@ def test_bad_magic_is_a_frame_error():
         b.close()
 
 
+def test_bit_flip_in_payload_is_a_frame_error_not_a_pickle_error():
+    """Flip one bit anywhere in a framed message: the crc32 check must
+    surface ``FrameError`` at the boundary (which the RPC client maps to
+    ``ShardUnavailableError``), never an arbitrary unpickling exception."""
+    payload = {"op": "partial", "bits": np.arange(256, dtype=np.int64)}
+    parts = transport.encode_message(payload)
+    lens = b"".join(len(p).to_bytes(8, "big") for p in parts)
+    import zlib
+
+    crc = zlib.crc32(lens)
+    for p in parts:
+        crc = zlib.crc32(bytes(p), crc)
+    frame = bytearray(
+        transport._HDR.pack(transport.MAGIC, 9, len(parts) - 1, crc) + lens
+        + b"".join(bytes(p) for p in parts))
+    body_start = transport._HDR.size + len(lens)
+    # Corrupt a byte in the pickle header region and one deep in the array
+    # buffer — both must be caught by the same check.
+    for flip_at in (body_start + 2, len(frame) - 16):
+        corrupt = bytearray(frame)
+        corrupt[flip_at] ^= 0x10
+        a, b = socket.socketpair()
+        try:
+            a.sendall(corrupt)
+            with pytest.raises(transport.FrameError, match="crc mismatch"):
+                transport.recv_msg(b, deadline_s=5.0)
+        finally:
+            a.close()
+            b.close()
+    # Sanity: the untouched frame still decodes.
+    a, b = socket.socketpair()
+    try:
+        a.sendall(frame)
+        seq, out = transport.recv_msg(b, deadline_s=5.0)
+        assert seq == 9
+        np.testing.assert_array_equal(out["bits"], payload["bits"])
+    finally:
+        a.close()
+        b.close()
+
+
+def test_corrupt_frame_surfaces_as_shard_unavailable_in_rpc_client():
+    """The shard RPC layer's contract for satellite-level integrity: a
+    corrupt frame from a server becomes the serving layer's retryable
+    ``ShardUnavailableError``, not a codec exception."""
+    from repro.core.shard import ShardUnavailableError
+    from repro.core.shard_rpc import _ServerProc
+
+    class _FakeProc:
+        def poll(self):
+            return None
+
+        pid = 0
+
+    a, b = socket.socketpair()
+    try:
+        sp = _ServerProc.__new__(_ServerProc)
+        sp.proc = _FakeProc()
+        sp.path = "<socketpair>"
+        sp.conn = a
+        import itertools
+
+        sp._seq = itertools.count(1)
+
+        def corrupt_responder():
+            try:
+                transport.recv_msg(b, deadline_s=5.0)
+                parts = transport.encode_message({"ok": True, "value": None})
+                lens = b"".join(len(p).to_bytes(8, "big") for p in parts)
+                body = b"".join(bytes(p) for p in parts)
+                # Deliberately wrong crc: emulates wire corruption.
+                b.sendall(transport._HDR.pack(
+                    transport.MAGIC, 1, len(parts) - 1, 0xDEADBEEF)
+                    + lens + body)
+            except transport.TransportError:
+                pass
+
+        t = threading.Thread(target=corrupt_responder, daemon=True)
+        t.start()
+        with pytest.raises(ShardUnavailableError):
+            sp.request({"op": "ping", "args": (), "ctl": True}, deadline_s=5.0)
+        t.join(timeout=5.0)
+    finally:
+        a.close()
+        b.close()
+
+
 def test_oversized_frame_refused_on_both_sides():
     a, b = socket.socketpair()
     big = np.zeros(1 << 20, dtype=np.uint8)
@@ -132,7 +219,7 @@ def test_deadline_bounds_a_stalled_peer_mid_message():
         # block past its deadline waiting for the rest.
         parts = transport.encode_message({"x": np.arange(100)})
         lens = b"".join(len(p).to_bytes(8, "big") for p in parts)
-        a.sendall(transport._HDR.pack(transport.MAGIC, 7, len(parts) - 1))
+        a.sendall(transport._HDR.pack(transport.MAGIC, 7, len(parts) - 1, 0))
         a.sendall(lens)
         done.wait(2.0)
 
